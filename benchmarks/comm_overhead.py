@@ -1,0 +1,63 @@
+"""Paper §6.3: communication overhead — bytes transmitted per round for
+FedSPD (point-to-point, cluster-matched) vs FedAvg/FedSoft (multicast, one
+model) vs FedEM (multicast, S models), plus the beyond-paper edge-colored
+collective_permute schedule statistics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import exp_config, fmt_table, save_result
+from repro.core.gossip import GossipSpec, round_comm_bytes
+from repro.graphs.coloring import schedule_stats
+from repro.graphs.topology import make_graph
+from repro.models.smallnets import make_classifier
+from repro.utils.pytree import tree_bytes
+
+
+def run(fast: bool = True) -> dict:
+    exp = exp_config(fast, n_clients=24)  # sparse graphs need room
+    key = jax.random.PRNGKey(0)
+    params, *_ = make_classifier(exp.model, key, exp.dim, exp.n_classes)
+    model_b = tree_bytes(params)
+    rows = []
+    for s_clusters in (2, 4):
+        for deg in ([4.0, 8.0] if fast else [4.0, 6.0, 8.0, 12.0]):
+            g = make_graph("er", exp.n_clients, deg, seed=0)
+            spec = GossipSpec.from_graph(g)
+            # expected over selections: average 100 rounds of random s
+            rng = np.random.default_rng(0)
+            fedspd = np.mean([
+                float(round_comm_bytes(
+                    spec, jnp.asarray(rng.integers(0, s_clusters,
+                                                   exp.n_clients)),
+                    model_b, point_to_point=True))
+                for _ in range(100)
+            ])
+            multicast_1 = float(round_comm_bytes(
+                spec, jnp.zeros(exp.n_clients, jnp.int32), model_b,
+                point_to_point=False))
+            fedem = multicast_1 * s_clusters
+            stats = schedule_stats(g)
+            rows.append({
+                "S": s_clusters, "avg_degree": round(g.avg_degree, 2),
+                "fedspd_MB": fedspd / 1e6,
+                "fedavg_fedsoft_MB": multicast_1 / 1e6,
+                "fedem_MB": fedem / 1e6,
+                "fedspd_vs_fedem": fedspd / fedem,
+                "permute_colors": stats["n_colors"],
+            })
+            print(rows[-1])
+    out = {"rows": rows, "model_bytes": model_b}
+    print(fmt_table(
+        rows,
+        ["S", "avg_degree", "fedspd_MB", "fedavg_fedsoft_MB", "fedem_MB",
+         "fedspd_vs_fedem", "permute_colors"],
+        "§6.3: per-round communication (expected over cluster selections)"))
+    save_result("comm_overhead", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Shared benchmark harness.
+
+Each benchmark module reproduces one paper table/figure on the synthetic
+mixture analogue (see data/synthetic.py docstring for the mapping) and
+returns a JSON-serializable dict. ``--fast`` shrinks clients/rounds so the
+full suite completes on CPU; ``--full`` approaches the paper's scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.data.synthetic import make_mixture_classification
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def exp_config(fast: bool, **overrides) -> PaperExpConfig:
+    base = dict(
+        n_clients=12 if fast else 24,
+        n_per_client=96 if fast else 256,
+        rounds=60 if fast else 150,
+        tau=3 if fast else 5,
+        batch=16,
+        model="mlp",
+        dim=16,
+        n_classes=4,
+        avg_degree=3.5,  # keep the ER graph genuinely sparse (p ~ 0.3)
+        lr0=5e-2,
+    )
+    base.update(overrides)
+    return PaperExpConfig(**base)
+
+
+def mixture_data(exp: PaperExpConfig, seed: int = 3, noise: float = 0.25,
+                 mode: str = "rotate", n_clusters: int = 2):
+    return make_mixture_classification(
+        n_clients=exp.n_clients, n_clusters=n_clusters,
+        n_per_client=exp.n_per_client, dim=exp.dim, n_classes=exp.n_classes,
+        seed=seed, noise=noise, mode=mode,
+    )
+
+
+def save_result(name: str, result: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=_np_default)
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def fmt_table(rows: list[dict], cols: list[str], title: str = "") -> str:
+    lines = []
+    if title:
+        lines.append(title)
+    hdr = " | ".join(f"{c:>14s}" for c in cols)
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for r in rows:
+        lines.append(" | ".join(
+            f"{r.get(c, ''):>14.4g}" if isinstance(r.get(c), (int, float))
+            else f"{str(r.get(c, '')):>14s}"
+            for c in cols
+        ))
+    return "\n".join(lines)

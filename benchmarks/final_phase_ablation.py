@@ -1,0 +1,59 @@
+"""Paper B.2.2 (Figure 6): contribution of the final personalization phase —
+accuracy right after Eq. (2) aggregation vs after τ_final local epochs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
+from repro.baselines.common import per_client_eval
+from repro.core import (
+    FedSPDConfig, GossipSpec, final_phase, make_round_step, personalize,
+    seeded_init,
+)
+from repro.graphs.topology import make_graph
+from repro.models.smallnets import make_classifier
+
+
+def run(fast: bool = True) -> dict:
+    exp = exp_config(fast)
+    data = mixture_data(exp)
+    key = jax.random.PRNGKey(0)
+    _, apply_fn, loss_fn, pel_fn, acc_fn = make_classifier(
+        exp.model, key, data.x.shape[-1], data.n_classes)
+
+    def model_init(k):
+        p, *_ = make_classifier(exp.model, k, data.x.shape[-1], data.n_classes)
+        return p
+
+    fcfg = FedSPDConfig(n_clients=exp.n_clients, n_clusters=2, tau=exp.tau,
+                        batch=exp.batch, lr0=exp.lr0, tau_final=exp.tau_final)
+    spec = GossipSpec.from_graph(make_graph(exp.graph_kind, exp.n_clients,
+                                            exp.avg_degree, seed=0))
+    train = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
+    test = {"inputs": jnp.asarray(data.x_test), "targets": jnp.asarray(data.y_test)}
+    state = seeded_init(key, model_init, fcfg, loss_fn, train)
+    step = jax.jit(make_round_step(loss_fn, pel_fn, spec, fcfg))
+    for _ in range(exp.rounds):
+        state, _ = step(state, train)
+
+    rows = []
+    post_agg = personalize(state)
+    rows.append({"stage": "post-aggregation (Eq. 2)",
+                 "acc": float(np.mean(per_client_eval(acc_fn, post_agg, test)))})
+    for tf in ([0, 2, 5, 10] if fast else [0, 2, 5, 10, 20, 30]):
+        import dataclasses
+        f2 = dataclasses.replace(fcfg, tau_final=tf)
+        pers = post_agg if tf == 0 else final_phase(state, loss_fn, train, f2)
+        rows.append({"stage": f"final phase {tf} epochs",
+                     "acc": float(np.mean(per_client_eval(acc_fn, pers, test)))})
+        print(rows[-1])
+    out = {"rows": rows}
+    print(fmt_table(rows, ["stage", "acc"], "B.2.2: final phase contribution"))
+    save_result("final_phase_ablation", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

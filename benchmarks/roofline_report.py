@@ -1,0 +1,49 @@
+"""Deliverable (g): aggregate the dry-run roofline JSONs
+(experiments/dryrun/*.json, produced by launch/dryrun.py) into the
+per-(arch × shape × mesh) table used in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(fast: bool = True) -> dict:
+    del fast
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "step": r["step_kind"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bottleneck": r["bottleneck"],
+            "useful_ratio": r["useful_ratio"],
+        })
+    if not rows:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return {"rows": []}
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':9s} {'step':8s} "
+           f"{'compute_s':>11s} {'memory_s':>11s} {'coll_s':>11s} "
+           f"{'bound':>10s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:9s} "
+              f"{r['step']:8s} {r['compute_s']:11.3e} {r['memory_s']:11.3e} "
+              f"{r['collective_s']:11.3e} {r['bottleneck']:>10s} "
+              f"{r['useful_ratio']:7.3f}")
+    out = {"rows": rows}
+    save_result("roofline_report", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Run the full benchmark suite: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run           # fast (CPU-sized)
+  PYTHONPATH=src python -m benchmarks.run --full    # paper-scale
+  PYTHONPATH=src python -m benchmarks.run --only table23_baselines
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+MODULES = [
+    "table23_baselines",      # Tables 2-3 (+ Fig 3 spread)
+    "fig2_convergence",       # Figure 2
+    "fig4_connectivity",      # Figure 4 + Tables 4-5
+    "table6_local_epochs",    # Table 6 / B.2.1
+    "final_phase_ablation",   # B.2.2
+    "clusters_ablation",      # B.2.3 / Figure 7
+    "table7_dynamic_topology",  # Table 7 / B.2.4
+    "fig9_unbalanced",        # B.2.5 / Figure 9
+    "table8_dp",              # Table 8 / B.2.6
+    "comm_overhead",          # §6.3
+    "roofline_report",        # deliverable (g) aggregation
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    mods = [args.only] if args.only else MODULES
+    failures = []
+    for name in mods:
+        print(f"\n{'=' * 72}\n== benchmarks.{name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(fast=not args.full)
+            print(f"[{name} done in {time.time() - t0:.1f}s]")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        raise SystemExit(1)
+    print("\nall benchmarks completed; results in benchmarks/results/")
+
+
+if __name__ == "__main__":
+    main()

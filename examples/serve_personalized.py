@@ -1,0 +1,38 @@
+"""Train a small FedSPD federation of LM clients, then serve one client's
+personalized model with batched requests.
+
+    PYTHONPATH=src python examples/serve_personalized.py --arch mamba2-370m
+
+Uses the reduced (smoke) variant of the chosen assigned architecture so the
+whole loop runs on CPU; the full-scale serving program is proven by
+launch/dryrun.py (decode_32k / long_500k lower serve_step).
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--clients", type=int, default=6)
+    args = ap.parse_args(argv)
+
+    ckpt = "/tmp/fedspd_federation.npz"
+    print("=== phase 1: FedSPD training across", args.clients, "clients ===")
+    train_mod.main([
+        "--arch", args.arch, "--smoke", "--rounds", str(args.rounds),
+        "--clients", str(args.clients), "--batch", "2", "--seq", "48",
+        "--eval-every", "4", "--save", ckpt,
+    ])
+    print("\n=== phase 2: serve client 0's personalized model ===")
+    serve_mod.main([
+        "--arch", args.arch, "--smoke", "--ckpt", ckpt, "--client", "0",
+        "--batch", "4", "--prompt-len", "16", "--gen", "8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

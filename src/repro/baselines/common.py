@@ -1,0 +1,77 @@
+"""Shared machinery for the baseline FL algorithms (paper Section 6
+baselines: FedAvg, FedEM, IFCA, FedSoft, pFedMe, Local — each in a
+decentralized (static gossip matrix) and centralized (complete averaging)
+variant)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import client_uniform_batches
+from repro.graphs.mixing import metropolis_weights
+from repro.graphs.topology import Graph, complete
+from repro.optim.sgd import Optimizer, sgd
+
+PyTree = Any
+
+
+def mixing_matrix(graph: Graph | None, n: int, centralized: bool) -> np.ndarray:
+    """Centralized = exact global average (a server); decentralized =
+    Metropolis gossip over the client graph."""
+    if centralized:
+        return np.full((n, n), 1.0 / n, dtype=np.float32)
+    assert graph is not None
+    return metropolis_weights(graph)
+
+
+def gossip_avg(params: PyTree, w: jnp.ndarray) -> PyTree:
+    """params leaves (N, ...) <- W @ params."""
+    return jax.tree.map(
+        lambda l: jnp.einsum(
+            "ij,j...->i...", w.astype(jnp.float32), l.astype(jnp.float32)
+        ).astype(l.dtype),
+        params,
+    )
+
+
+def local_sgd(
+    loss_fn: Callable,
+    params: PyTree,  # (N, ...)
+    data: dict,      # {"inputs": (N, M, d), "targets": (N, M)}
+    key: jax.Array,
+    tau: int,
+    batch: int,
+    lr,
+    optimizer: Optimizer | None = None,
+    extra_grad: Callable | None = None,  # (params) -> grad pytree to add
+) -> PyTree:
+    """τ uniform-batch SGD steps per client (vmapped)."""
+    optimizer = optimizer or sgd()
+    grad_fn = jax.grad(loss_fn)
+    opt_state = jax.vmap(optimizer.init)(params)
+
+    def one(carry, k):
+        p, o = carry
+        bx, by = client_uniform_batches(k, data["inputs"], data["targets"], batch)
+        grads = jax.vmap(grad_fn)(p, {"x": bx, "y": by})
+        if extra_grad is not None:
+            reg = extra_grad(p)
+            grads = jax.tree.map(jnp.add, grads, reg)
+        p, o = jax.vmap(lambda g, oo, pp: optimizer.update(g, oo, pp, lr))(
+            grads, o, p
+        )
+        return (p, o), None
+
+    keys = jax.random.split(key, tau)
+    (params, _), _ = jax.lax.scan(one, (params, opt_state), keys)
+    return params
+
+
+def per_client_eval(metric_fn: Callable, params: PyTree, data: dict) -> jnp.ndarray:
+    """metric_fn(params_i, batch_i) vmapped over clients -> (N,)."""
+    return jax.vmap(metric_fn)(
+        params, {"x": data["inputs"], "y": data["targets"]}
+    )

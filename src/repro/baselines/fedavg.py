@@ -1,0 +1,26 @@
+"""FedAvg [McMahan et al. 2017] — centralized and decentralized (D-SGD
+gossip) variants. The non-personalized reference point."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines.common import gossip_avg, local_sgd
+
+
+def make_step(loss_fn: Callable, w, *, tau: int, batch: int):
+    w = jnp.asarray(w)
+
+    def step(params, data, key, lr):
+        params = local_sgd(loss_fn, params, data, key, tau, batch, lr)
+        return gossip_avg(params, w), {}
+
+    return step
+
+
+def personalized_params(params):
+    """FedAvg has no personalization: every client evaluates its own copy
+    (equal to the consensus model up to gossip error)."""
+    return params

@@ -1,0 +1,69 @@
+"""IFCA [Ghosh et al. 2020] — hard clustering: each client picks the single
+cluster whose model has the lowest loss on its full local data, trains that
+model on ALL its data, and (decentralized variant) averages with neighbors
+that picked the same cluster. No mixtures: the paper's hard-clustering
+baseline."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines.common import local_sgd
+from repro.core.gossip import GossipSpec, mix_dense
+
+
+class IFCAState(NamedTuple):
+    centers: any       # leaves (S, N, ...)
+    choice: jnp.ndarray  # (N,) hard assignment
+
+
+def init_state(key, model_init, n_clients: int, s_clusters: int) -> IFCAState:
+    keys = jax.random.split(key, s_clusters * n_clients).reshape(
+        s_clusters, n_clients, -1
+    )
+    centers = jax.vmap(jax.vmap(model_init))(keys)
+    return IFCAState(centers=centers, choice=jnp.zeros((n_clients,), jnp.int32))
+
+
+def make_step(
+    loss_fn: Callable,
+    per_example_loss: Callable,
+    gossip: GossipSpec,
+    *,
+    tau: int,
+    batch: int,
+):
+    def step(state: IFCAState, data, key, lr):
+        centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
+
+        # hard cluster estimation on the full local dataset
+        def pick(centers_i, data_i):
+            losses = jax.vmap(
+                lambda c: jnp.mean(per_example_loss(c, data_i))
+            )(centers_i)
+            return jnp.argmin(losses)
+
+        choice = jax.vmap(pick)(
+            centers_nc, {"x": data["inputs"], "y": data["targets"]}
+        )
+        n = choice.shape[0]
+        c_sel = jax.tree.map(lambda l: l[choice, jnp.arange(n)], state.centers)
+        c_sel = local_sgd(loss_fn, c_sel, data, key, tau, batch, lr)
+        # same-choice neighborhood averaging (decentralized IFCA)
+        c_mixed = mix_dense(gossip, c_sel, choice)
+        centers = jax.tree.map(
+            lambda l, v: l.at[choice, jnp.arange(n)].set(v.astype(l.dtype)),
+            state.centers, c_mixed,
+        )
+        return IFCAState(centers=centers, choice=choice), {"choice": choice}
+
+    return step
+
+
+def personalized_params(state: IFCAState):
+    n = state.choice.shape[0]
+    return jax.tree.map(
+        lambda l: l[state.choice, jnp.arange(n)], state.centers
+    )

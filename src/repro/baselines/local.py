@@ -1,0 +1,17 @@
+"""Local-only training: the no-collaboration floor in the paper's tables."""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.baselines.common import local_sgd
+
+
+def make_step(loss_fn: Callable, w=None, *, tau: int, batch: int):
+    def step(params, data, key, lr):
+        return local_sgd(loss_fn, params, data, key, tau, batch, lr), {}
+
+    return step
+
+
+def personalized_params(params):
+    return params

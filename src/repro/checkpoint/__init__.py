@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import latest, restore, save  # noqa: F401

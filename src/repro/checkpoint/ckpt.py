@@ -1,0 +1,76 @@
+"""Checkpointing: pytree <-> npz with structural paths.
+
+FL-aware: FedSPD state (cluster centers with (S, N, ...) leading axes,
+mixture coefficients, assignments, round counter) is just a pytree, so the
+same mechanism checkpoints single-model training and full federations.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "|"
+
+
+def _paths(tree: PyTree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(str(jax.tree_util.keystr((p,))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(path: str, tree: PyTree, metadata: dict | None = None) -> None:
+    """Atomic save of a pytree (+ JSON metadata) to ``path`` (.npz)."""
+    arrays = {}
+    for key, leaf in _paths(tree):
+        arrays[key] = np.asarray(leaf)
+    meta = json.dumps(metadata or {})
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __metadata__=np.frombuffer(meta.encode(), dtype=np.uint8),
+                     **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path) as data:
+        meta_raw = data["__metadata__"].tobytes().decode() if "__metadata__" in data else "{}"
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for pathk, leaf in flat:
+            key = _SEP.join(str(jax.tree_util.keystr((p,))) for p in pathk)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"shape mismatch for {key!r}: ckpt {arr.shape} vs model "
+                    f"{np.shape(leaf)}"
+                )
+            leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), json.loads(meta_raw)
+
+
+def latest(dirpath: str, prefix: str = "ckpt_") -> str | None:
+    if not os.path.isdir(dirpath):
+        return None
+    cands = [f for f in os.listdir(dirpath) if f.startswith(prefix) and f.endswith(".npz")]
+    if not cands:
+        return None
+    cands.sort(key=lambda f: int(f[len(prefix):-4]))
+    return os.path.join(dirpath, cands[-1])

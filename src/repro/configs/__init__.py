@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_ALIASES,
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    ArchConfig,
+    InputShape,
+    get_config,
+    get_smoke_config,
+)

@@ -1,0 +1,27 @@
+"""The paper's own experimental scale: small classifier heads over mixture
+data. Not an assigned architecture — this is the config used by the
+EXPERIMENTS.md §Accuracy reproduction runs (paper Tables 2–7 analogues)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperExpConfig:
+    n_clients: int = 20
+    n_clusters: int = 2
+    model: str = "mlp"  # mlp | conv
+    dim: int = 64
+    n_classes: int = 10
+    n_per_client: int = 256
+    rounds: int = 60
+    tau: int = 5  # local epochs per round (paper default 5)
+    tau_final: int = 10
+    lr0: float = 5e-2
+    lr_decay: float = 0.98
+    batch: int = 32
+    graph_kind: str = "er"
+    avg_degree: float = 5.0
+    seed: int = 0
+    mode: str = "rotate"  # data construction
+
+
+DEFAULT = PaperExpConfig()

@@ -1,0 +1,28 @@
+# FedSPD — the paper's primary contribution: soft-clustered personalized
+# decentralized FL (round step, cluster-matched gossip, data clustering,
+# final personalization phase).
+from repro.core.clustering import (  # noqa: F401
+    assign_clusters,
+    cluster_all_clients,
+    clustering_accuracy,
+    mixture_coefficients,
+)
+from repro.core.fedspd import (  # noqa: F401
+    FedSPDConfig,
+    FedSPDState,
+    final_phase,
+    init_state,
+    make_round_step,
+    personalize,
+    seeded_init,
+    select_clusters,
+)
+from repro.core.gossip import (  # noqa: F401
+    GossipSpec,
+    consensus_distance,
+    fedspd_weight_matrix,
+    mix,
+    mix_dense,
+    mix_permute,
+    round_comm_bytes,
+)

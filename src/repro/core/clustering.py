@@ -1,0 +1,78 @@
+"""FedSPD Step 4: data clustering + mixture-coefficient estimation.
+
+Each client labels every local data point with the cluster whose current
+center yields the lowest loss (paper Algorithm 1, DataClustering), then sets
+u_{i,s} to the fraction of points labeled s. Evaluation of S centers over M
+points is a vmapped forward — batched over (S,) so the matrix units stay
+busy; ``chunk`` bounds peak memory for large local datasets.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def assign_clusters(
+    per_example_loss: Callable,  # (params, batch) -> (M,)
+    centers_i: PyTree,  # leaves (S, ...) one client's centers
+    batch_i: dict,      # leaves (M, ...) one client's data
+    chunk: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (z (M,) argmin assignments, losses (S, M))."""
+    def loss_for_center(c):
+        if chunk is None:
+            return per_example_loss(c, batch_i)
+        m = jax.tree.leaves(batch_i)[0].shape[0]
+        assert m % chunk == 0, (m, chunk)
+        chunked = jax.tree.map(
+            lambda x: x.reshape((m // chunk, chunk) + x.shape[1:]), batch_i
+        )
+        return jax.lax.map(lambda b: per_example_loss(c, b), chunked).reshape(m)
+
+    losses = jax.vmap(loss_for_center)(centers_i)  # (S, M)
+    return jnp.argmin(losses, axis=0), losses
+
+
+def mixture_coefficients(z: jnp.ndarray, s_clusters: int,
+                         floor: float = 1e-3) -> jnp.ndarray:
+    """u_{i,s}: fraction of points assigned to each cluster, floored so no
+    cluster's selection probability collapses to exactly zero early on
+    (keeps Assumption 5.6's bounded-error regime reachable)."""
+    counts = jnp.sum(jax.nn.one_hot(z, s_clusters), axis=0)
+    u = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    u = jnp.maximum(u, floor)
+    return u / jnp.sum(u)
+
+
+def cluster_all_clients(
+    per_example_loss: Callable,
+    centers: PyTree,  # leaves (S, N, ...)
+    data: dict,       # leaves (N, M, ...)
+    s_clusters: int,
+    chunk: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """vmap over clients. Returns (z (N, M), u (N, S))."""
+    def one_client(centers_i, data_i):
+        z, _ = assign_clusters(per_example_loss, centers_i, data_i, chunk)
+        return z, mixture_coefficients(z, s_clusters)
+
+    centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), centers)  # (N,S,...)
+    return jax.vmap(one_client)(centers_nc, data)
+
+
+def clustering_accuracy(z: jnp.ndarray, z_true: jnp.ndarray,
+                        s_clusters: int) -> jnp.ndarray:
+    """Best-permutation agreement between inferred and true cluster labels
+    (label switching makes raw agreement meaningless). For the small S used
+    here (2–4) we check all permutations."""
+    import itertools
+
+    accs = []
+    for perm in itertools.permutations(range(s_clusters)):
+        mapped = jnp.asarray(perm)[z]
+        accs.append(jnp.mean((mapped == z_true).astype(jnp.float32)))
+    return jnp.max(jnp.stack(accs))

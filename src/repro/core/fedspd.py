@@ -1,0 +1,399 @@
+"""FedSPD: Soft-clustering Personalized Decentralized FL (paper Algorithm 1).
+
+Round structure (Section 4):
+  1. LocalUpdate       — each client i samples s_i ~ Categorical(u_i) and
+                         runs τ SGD steps on c_{i,s_i} using data currently
+                         assigned to cluster s_i;
+  2. ParameterExchange — broadcast (s_i, c_{i,s_i}) to graph neighbors;
+  3. ParameterUpdate   — closed-neighborhood average over matching
+                         selections (Eq. (1); core/gossip.py);
+  4. DataClustering    — relabel every local point by min-loss center and
+                         recompute u (core/clustering.py).
+FinalPhase (Eq. (2)): x_i = Σ_s u_{i,s} c_{i,s}, then τ_final local epochs
+on all of D_i.
+
+Everything is a single jitted step vmapped over the client axis, so the same
+code runs the paper-scale CPU experiments and the mesh-sharded production
+configs (launch/ shards the client axis and model dims).
+
+Two data regimes:
+- ``full``   (paper-faithful): persistent per-point assignments z over each
+  client's entire local dataset; clustering re-evaluates all M points.
+- ``stream`` (production): each round consumes a fresh batch; assignments
+  are computed per-batch, training uses a cluster-masked loss, and u is
+  updated as an EMA of batch assignment fractions. Used by launch/train.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import cluster_all_clients, mixture_coefficients
+from repro.core.gossip import (
+    GossipSpec,
+    consensus_distance,
+    mix,
+    round_comm_bytes,
+)
+from repro.data.pipeline import client_batches, client_uniform_batches
+from repro.optim.sgd import Optimizer, sgd
+from repro.utils.pytree import (
+    tree_bytes,
+    tree_weighted_sum,
+)
+
+PyTree = Any
+
+
+class FedSPDState(NamedTuple):
+    centers: PyTree      # leaves (S, N, ...): client i's estimate of center s
+    u: jnp.ndarray       # (N, S) mixture coefficients
+    z: jnp.ndarray       # (N, M) per-point assignments ("full" regime)
+    round: jnp.ndarray   # () int32
+    key: jax.Array
+    comm_bytes: jnp.ndarray  # () float32 cumulative
+
+
+@dataclasses.dataclass(frozen=True)
+class FedSPDConfig:
+    n_clients: int
+    n_clusters: int
+    tau: int = 5                  # local steps per round
+    batch: int = 32
+    lr0: float = 5e-2
+    lr_decay: float = 0.98        # per-round multiplicative decay
+    tau_final: int = 10
+    final_lr_scale: float = 0.5
+    cluster_chunk: Optional[int] = None
+    u_ema: float = 0.3            # "stream" regime u update rate
+    regime: str = "full"          # full | stream
+    point_to_point: bool = True   # comm accounting mode
+
+    # --- differential privacy (paper B.2.6, following Wei et al. 2020) ---
+    # each round's local update delta is L2-clipped to dp_clip and Gaussian
+    # noise with std dp_clip * dp_noise_multiplier is added BEFORE the
+    # parameter exchange; 0 disables. noise multiplier c = sqrt(2 ln(1.25/δ))/ε.
+    dp_clip: float = 0.0
+    dp_noise_multiplier: float = 0.0
+
+
+def init_state(
+    key: jax.Array,
+    model_init: Callable[[jax.Array], PyTree],
+    cfg: FedSPDConfig,
+    data_m: int,
+) -> FedSPDState:
+    """Independent random init per (cluster, client) pair — consensus within
+    each cluster emerges from gossip, exactly the DFL setting."""
+    k_init, k_state = jax.random.split(key)
+    keys = jax.random.split(k_init, cfg.n_clusters * cfg.n_clients)
+    keys = keys.reshape(cfg.n_clusters, cfg.n_clients, -1)
+    centers = jax.vmap(jax.vmap(model_init))(keys)
+    u = jnp.full((cfg.n_clients, cfg.n_clusters), 1.0 / cfg.n_clusters)
+    z = jnp.zeros((cfg.n_clients, data_m), jnp.int32)
+    return FedSPDState(
+        centers=centers, u=u, z=z, round=jnp.zeros((), jnp.int32),
+        key=k_state, comm_bytes=jnp.zeros((), jnp.float32),
+    )
+
+
+def seeded_init(
+    key: jax.Array,
+    model_init: Callable[[jax.Array], PyTree],
+    cfg: FedSPDConfig,
+    loss_fn: Callable,
+    data: dict,  # leaves (N, M, ...) — "full" regime layout
+    *,
+    epochs: int = 15,
+    lr: float = 0.1,
+    optimizer: Optimizer = None,
+) -> FedSPDState:
+    """Client-seeded warm start (k-means++-flavoured, no ground truth).
+
+    S distinct randomly-chosen clients each pretrain one cluster center on
+    their OWN raw local data, then flood-broadcast it (comm cost: S models,
+    once). Because client mixtures differ (U[0.1, 0.9] in the paper's
+    construction), the S seeds start genuinely separated — which is what
+    Assumption 5.6 (bounded distance to the optimal centers at every step)
+    asks of the initialization. Random symmetric inits frequently collapse
+    both centers onto one compromise model (EM local optimum); see
+    EXPERIMENTS.md §Accuracy for the ablation.
+    """
+    optimizer = optimizer or sgd()
+    state = init_state(key, model_init, cfg, jax.tree.leaves(data)[0].shape[1])
+    k_pick, k_run = jax.random.split(jax.random.fold_in(key, 1))
+    n = cfg.n_clients
+    seeds = jax.random.choice(k_pick, n, (cfg.n_clusters,), replace=False)
+    m = jax.tree.leaves(data)[0].shape[1]
+    steps = epochs * max(1, m // cfg.batch)
+    grad_fn = jax.grad(loss_fn)
+
+    def pretrain_one(s_idx, seed_client):
+        p = model_init(jax.random.fold_in(k_run, s_idx))
+        x_i = jax.tree.map(lambda l: l[seed_client], data)
+        batch_all = {"x": x_i["inputs"], "y": x_i["targets"]}
+        opt_s = optimizer.init(p)
+
+        def one(carry, k):
+            p, opt_s = carry
+            idx = jax.random.randint(k, (cfg.batch,), 0, m)
+            b = {"x": batch_all["x"][idx], "y": batch_all["y"][idx]}
+            p, opt_s = optimizer.update(grad_fn(p, b), opt_s, p, lr)
+            return (p, opt_s), None
+
+        (p, _), _ = jax.lax.scan(
+            one, (p, opt_s), jax.random.split(jax.random.fold_in(k_run, s_idx), steps)
+        )
+        return p
+
+    centers = [pretrain_one(s, seeds[s]) for s in range(cfg.n_clusters)]
+    stacked = jax.tree.map(
+        lambda *ls: jnp.stack([jnp.broadcast_to(l, (n,) + l.shape) for l in ls]),
+        *centers,
+    )
+    return state._replace(centers=stacked)
+
+
+def select_clusters(key: jax.Array, u: jnp.ndarray) -> jnp.ndarray:
+    """Step 1a: s_i ~ Categorical(u_i)."""
+    return jax.random.categorical(key, jnp.log(jnp.maximum(u, 1e-12)), axis=-1)
+
+
+def _gather_selected(centers: PyTree, s: jnp.ndarray) -> PyTree:
+    """centers leaves (S, N, ...) -> selected (N, ...)."""
+    n = s.shape[0]
+    return jax.tree.map(lambda l: l[s, jnp.arange(n)], centers)
+
+
+def _scatter_selected(centers: PyTree, s: jnp.ndarray, value: PyTree) -> PyTree:
+    n = s.shape[0]
+    return jax.tree.map(
+        lambda l, v: l.at[s, jnp.arange(n)].set(v.astype(l.dtype)),
+        centers, value,
+    )
+
+
+def make_round_step(
+    loss_fn: Callable,              # (params, batch) -> scalar
+    per_example_loss: Callable,     # (params, batch) -> (B,)
+    gossip: GossipSpec,
+    cfg: FedSPDConfig,
+    optimizer: Optimizer = None,
+    lr_schedule: Callable = None,
+    mix_fn: Callable = None,        # (c_sel, s) -> mixed; default Eq. (1)
+):
+    """Returns step(state, data) -> (state, metrics). ``data`` leaves:
+    (N, M, ...) in the "full" regime; (N, B, ...) fresh batch in "stream"."""
+    optimizer = optimizer or sgd()
+    if lr_schedule is None:
+        lr_schedule = lambda t: cfg.lr0 * (cfg.lr_decay ** t)  # noqa: E731
+    if mix_fn is None:
+        mix_fn = lambda c, sel: mix(gossip, c, sel)  # noqa: E731
+
+    grad_fn = jax.grad(loss_fn)
+
+    def dp_sanitize(c_old, c_new, key):
+        """Clip the round's update to cfg.dp_clip and add Gaussian noise
+        (Wei et al. 2020) — applied per client before the exchange."""
+        if cfg.dp_clip <= 0:
+            return c_new
+
+        def one(c_o, c_n, k):
+            delta = jax.tree.map(lambda a, b: a.astype(jnp.float32)
+                                 - b.astype(jnp.float32), c_n, c_o)
+            sq = sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(delta))
+            scale = jnp.minimum(1.0, cfg.dp_clip / jnp.sqrt(sq + 1e-12))
+            leaves, treedef = jax.tree.flatten(delta)
+            keys = jax.random.split(k, len(leaves))
+            sigma = cfg.dp_clip * cfg.dp_noise_multiplier
+            noised = [
+                l * scale + sigma * jax.random.normal(kk, l.shape)
+                for l, kk in zip(leaves, keys)
+            ]
+            delta = jax.tree.unflatten(treedef, noised)
+            return jax.tree.map(
+                lambda b, d: (b.astype(jnp.float32) + d).astype(b.dtype),
+                c_o, delta)
+
+        n = jax.tree.leaves(c_new)[0].shape[0]
+        return jax.vmap(one)(c_old, c_new, jax.random.split(key, n))
+
+    def local_updates(c_sel, data, z, s, key, lr):
+        """τ SGD steps on the selected centers, cluster-conditional batches."""
+        opt_state = jax.vmap(optimizer.init)(c_sel)
+
+        def one_step(carry, k):
+            c, opt_s = carry
+            if cfg.regime == "full":
+                bx = client_batches(
+                    k, data["inputs"], data["targets"], z, s, cfg.batch
+                )
+                batch = {"x": bx[0], "y": bx[1]}
+                grads = jax.vmap(grad_fn)(c, batch)
+            else:
+                # stream: fixed batch, mask examples not in selected cluster
+                def masked_loss(params, batch_i, mask_i):
+                    pel = per_example_loss(params, batch_i)
+                    denom = jnp.maximum(jnp.sum(mask_i), 1.0)
+                    return jnp.sum(pel * mask_i) / denom
+
+                grads = jax.vmap(jax.grad(masked_loss))(
+                    c, data["batch"], data["mask"]
+                )
+            c, opt_s = jax.vmap(
+                lambda g, o, p: optimizer.update(g, o, p, lr)
+            )(grads, opt_s, c)
+            return (c, opt_s), None
+
+        keys = jax.random.split(key, cfg.tau)
+        (c_sel, _), _ = jax.lax.scan(one_step, (c_sel, opt_state), keys)
+        return c_sel
+
+    def step_full(state: FedSPDState, data: dict):
+        key, k_sel, k_local = jax.random.split(state.key, 3)
+        lr = lr_schedule(state.round)
+
+        # (1) cluster selection + τ local steps
+        s = select_clusters(k_sel, state.u)
+        c_sel = _gather_selected(state.centers, s)
+        c_new = local_updates(c_sel, data, state.z, s, k_local, lr)
+        key, k_dp = jax.random.split(key)
+        c_sel = dp_sanitize(c_sel, c_new, k_dp)
+
+        # (2)+(3) exchange & cluster-matched averaging
+        c_mixed = mix_fn(c_sel, s)
+        centers = _scatter_selected(state.centers, s, c_mixed)
+
+        # (4) re-cluster all local data and refresh u
+        batch_all = {"x": data["inputs"], "y": data["targets"]}
+        z, u = cluster_all_clients(
+            per_example_loss, centers, batch_all, cfg.n_clusters,
+            chunk=cfg.cluster_chunk,
+        )
+
+        model_b = tree_bytes(c_sel) // cfg.n_clients
+        comm = state.comm_bytes + round_comm_bytes(
+            gossip, s, model_b, point_to_point=cfg.point_to_point
+        )
+        new_state = FedSPDState(
+            centers=centers, u=u, z=z, round=state.round + 1, key=key,
+            comm_bytes=comm,
+        )
+        metrics = {
+            "lr": lr,
+            "selected": s,
+            "consensus": _consensus_per_cluster(centers, cfg.n_clusters),
+            "comm_bytes": comm,
+        }
+        return new_state, metrics
+
+    def step_stream(state: FedSPDState, batch: dict):
+        """batch leaves (N, B, ...): this round's fresh per-client data."""
+        key, k_sel, k_local = jax.random.split(state.key, 3)
+        lr = lr_schedule(state.round)
+        s = select_clusters(k_sel, state.u)
+        c_sel = _gather_selected(state.centers, s)
+
+        # per-batch clustering under *current* centers (Step 4, streamed)
+        centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
+
+        def assign(centers_i, batch_i):
+            losses = jax.vmap(lambda c: per_example_loss(c, batch_i))(centers_i)
+            return jnp.argmin(losses, axis=0)  # (B,)
+
+        zb = jax.vmap(assign)(centers_nc, batch)  # (N, B)
+        mask = (zb == s[:, None]).astype(jnp.float32)
+
+        c_new = local_updates(
+            c_sel, {"batch": batch, "mask": mask}, None, s, k_local, lr
+        )
+        key, k_dp = jax.random.split(key)
+        c_sel = dp_sanitize(c_sel, c_new, k_dp)
+        c_mixed = mix_fn(c_sel, s)
+        centers = _scatter_selected(state.centers, s, c_mixed)
+
+        u_batch = jax.vmap(
+            lambda z_: mixture_coefficients(z_, cfg.n_clusters)
+        )(zb)
+        u = (1 - cfg.u_ema) * state.u + cfg.u_ema * u_batch
+
+        model_b = tree_bytes(c_sel) // cfg.n_clients
+        comm = state.comm_bytes + round_comm_bytes(
+            gossip, s, model_b, point_to_point=cfg.point_to_point
+        )
+        new_state = FedSPDState(
+            centers=centers, u=u, z=state.z, round=state.round + 1, key=key,
+            comm_bytes=comm,
+        )
+        metrics = {
+            "lr": lr,
+            "selected": s,
+            "consensus": _consensus_per_cluster(centers, cfg.n_clusters),
+            "comm_bytes": comm,
+        }
+        return new_state, metrics
+
+    return step_full if cfg.regime == "full" else step_stream
+
+
+def _consensus_per_cluster(centers: PyTree, s_clusters: int) -> jnp.ndarray:
+    ds = []
+    for s_idx in range(s_clusters):
+        c_s = jax.tree.map(lambda l: l[s_idx], centers)
+        ds.append(consensus_distance(c_s))
+    return jnp.stack(ds)
+
+
+# --------------------------------------------------------------------------
+# Final phase (Algorithm 1, FINALPHASE)
+# --------------------------------------------------------------------------
+
+
+def personalize(state: FedSPDState) -> PyTree:
+    """Eq. (2): x_i = Σ_s u_{i,s} c_{i,s}. Returns leaves (N, ...)."""
+    centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
+
+    def one(centers_i, u_i):
+        return tree_weighted_sum(centers_i, u_i)
+
+    return jax.vmap(one)(centers_nc, state.u)
+
+
+def final_phase(
+    state: FedSPDState,
+    loss_fn: Callable,
+    data: dict,  # leaves (N, M, ...)
+    cfg: FedSPDConfig,
+    optimizer: Optimizer = None,
+    lr: float | None = None,
+) -> PyTree:
+    """Aggregate (Eq. 2) then τ_final local epochs on ALL local data —
+    communication-free personalization. Returns personalized params (N, ...)."""
+    optimizer = optimizer or sgd()
+    params = personalize(state)
+    lr = lr if lr is not None else cfg.lr0 * cfg.final_lr_scale * (
+        cfg.lr_decay ** state.round
+    )
+    grad_fn = jax.grad(loss_fn)
+    opt_state = jax.vmap(optimizer.init)(params)
+
+    def one_step(carry, k):
+        p, opt_s = carry
+        bx, by = client_uniform_batches(k, data["inputs"], data["targets"],
+                                        cfg.batch)
+        grads = jax.vmap(grad_fn)(p, {"x": bx, "y": by})
+        p, opt_s = jax.vmap(lambda g, o, pp: optimizer.update(g, o, pp, lr))(
+            grads, opt_s, p
+        )
+        return (p, opt_s), None
+
+    # tau_final counts EPOCHS over the full local dataset (paper Table 1:
+    # "Number of epochs for the final phase"), not SGD steps
+    m = jax.tree.leaves(data)[0].shape[1]
+    steps = cfg.tau_final * max(1, m // cfg.batch)
+    keys = jax.random.split(state.key, steps)
+    (params, _), _ = jax.lax.scan(one_step, (params, opt_state), keys)
+    return params

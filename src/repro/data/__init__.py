@@ -1,0 +1,13 @@
+from repro.data.pipeline import (  # noqa: F401
+    client_batches,
+    client_uniform_batches,
+    gather_batch,
+    sample_cluster_batch_indices,
+    sample_uniform_batch_indices,
+)
+from repro.data.synthetic import (  # noqa: F401
+    ClientDataset,
+    make_mixture_classification,
+    make_mixture_tokens,
+    make_unbalanced_quantity,
+)

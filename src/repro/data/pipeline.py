@@ -1,0 +1,69 @@
+"""Jit-safe per-client batch sampling.
+
+FedSPD's local-training step samples uniformly from D_{i,s} — the points of
+client i *currently assigned* to the selected cluster s (assignments z come
+from the previous round's clustering step and live on device). We implement
+masked categorical sampling with a uniform fallback when a client has no
+points in the selected cluster (can happen early in training before the
+clustering stabilizes; the paper's probabilistic selection makes this rare
+since u_{i,s}=0 clusters are never selected, but we guard it numerically).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_cluster_batch_indices(
+    key: jax.Array,
+    z: jax.Array,  # (M,) current cluster assignment per data point
+    s: jax.Array,  # () selected cluster for this client
+    batch: int,
+) -> jax.Array:
+    """Indices (batch,) drawn uniformly-with-replacement from {k : z[k]==s};
+    falls back to uniform over all points if the set is empty."""
+    match = (z == s)
+    any_match = jnp.any(match)
+    logits = jnp.where(match | ~any_match, 0.0, -jnp.inf)
+    return jax.random.categorical(key, logits, shape=(batch,))
+
+
+def sample_uniform_batch_indices(key: jax.Array, m: int, batch: int) -> jax.Array:
+    return jax.random.randint(key, (batch,), 0, m)
+
+
+def gather_batch(data: jax.Array, idx: jax.Array) -> jax.Array:
+    """data (M, ...) , idx (B,) -> (B, ...)."""
+    return jnp.take(data, idx, axis=0)
+
+
+def client_batches(
+    key: jax.Array,
+    x: jax.Array,  # (N, M, ...)
+    y: jax.Array,  # (N, M)
+    z: jax.Array,  # (N, M)
+    s: jax.Array,  # (N,) selected cluster per client
+    batch: int,
+) -> tuple[jax.Array, jax.Array]:
+    """vmapped cluster-conditional batch for every client: (N, B, ...)."""
+    keys = jax.random.split(key, x.shape[0])
+
+    def one(k, xi, yi, zi, si):
+        idx = sample_cluster_batch_indices(k, zi, si, batch)
+        return gather_batch(xi, idx), gather_batch(yi, idx)
+
+    return jax.vmap(one)(keys, x, y, z, s)
+
+
+def client_uniform_batches(
+    key: jax.Array, x: jax.Array, y: jax.Array, batch: int
+) -> tuple[jax.Array, jax.Array]:
+    """Plain per-client uniform batches (baselines + final personalization)."""
+    n, m = x.shape[0], x.shape[1]
+    keys = jax.random.split(key, n)
+
+    def one(k, xi, yi):
+        idx = sample_uniform_batch_indices(k, m, batch)
+        return gather_batch(xi, idx), gather_batch(yi, idx)
+
+    return jax.vmap(one)(keys, x, y)

@@ -1,0 +1,25 @@
+from repro.graphs.coloring import (  # noqa: F401
+    greedy_edge_coloring,
+    matching_to_permutation,
+    permute_schedule,
+    schedule_stats,
+    validate_coloring,
+)
+from repro.graphs.mixing import (  # noqa: F401
+    consensus_rate_p,
+    expected_fedspd_consensus_rate,
+    metropolis_weights,
+    spectral_gap,
+    uniform_neighbor_weights,
+)
+from repro.graphs.topology import (  # noqa: F401
+    Graph,
+    barabasi_albert,
+    complete,
+    erdos_renyi,
+    make_graph,
+    pod_aware,
+    random_geometric,
+    rewire,
+    ring,
+)

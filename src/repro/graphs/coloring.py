@@ -1,0 +1,90 @@
+"""Greedy edge coloring → collective_permute schedule.
+
+The beyond-paper gossip path replaces the dense ``einsum(W, C)`` (which XLA
+lowers to an all-gather along the client axis, bytes ∝ N·X) with one
+``collective_permute`` per *color class* of the client graph's edges. A
+proper edge coloring partitions edges into matchings; each matching is a
+(partial) permutation that an ICI collective_permute can execute in one shot.
+By Vizing's theorem a simple graph needs at most Δ+1 colors, so the schedule
+moves ≈ deg·X bytes per client instead of N·X.
+
+Everything here is host-side numpy over the static topology; the resulting
+permutation lists are baked into the jitted gossip step.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.topology import Graph
+
+
+def greedy_edge_coloring(graph: Graph) -> list[list[tuple[int, int]]]:
+    """Partition edges into matchings (color classes), largest first.
+
+    Greedy: process edges in descending (deg_i + deg_j) order; assign each to
+    the first class where neither endpoint is used. Uses ≤ 2Δ-1 classes in
+    the worst case, Δ..Δ+1 in practice for the sparse graphs we use.
+    """
+    deg = graph.degrees
+    edges = sorted(graph.edges(), key=lambda e: -(deg[e[0]] + deg[e[1]]))
+    classes: list[list[tuple[int, int]]] = []
+    used: list[set[int]] = []
+    for (i, j) in edges:
+        placed = False
+        for cls, busy in zip(classes, used):
+            if i not in busy and j not in busy:
+                cls.append((i, j))
+                busy.add(i)
+                busy.add(j)
+                placed = True
+                break
+        if not placed:
+            classes.append([(i, j)])
+            used.append({i, j})
+    return classes
+
+
+def matching_to_permutation(matching: list[tuple[int, int]], n: int) -> np.ndarray:
+    """A matching as a self-inverse permutation array: perm[i] = partner or i.
+
+    collective_permute with (src, dst) pairs (i→j and j→i) realizes a full
+    swap of the matched endpoints; unmatched clients send to themselves
+    (identity lanes carry no inter-chip traffic after XLA simplification,
+    but we keep them so the permutation is total).
+    """
+    perm = np.arange(n)
+    for (i, j) in matching:
+        perm[i], perm[j] = j, i
+    return perm
+
+
+def permute_schedule(graph: Graph) -> list[np.ndarray]:
+    """The full gossip schedule: one permutation per color class."""
+    return [
+        matching_to_permutation(m, graph.n) for m in greedy_edge_coloring(graph)
+    ]
+
+
+def schedule_stats(graph: Graph) -> dict:
+    classes = greedy_edge_coloring(graph)
+    return {
+        "n_colors": len(classes),
+        "n_edges": len(graph.edges()),
+        "max_degree": int(graph.degrees.max()),
+        "bytes_ratio_vs_allgather": len(classes) / max(graph.n - 1, 1),
+    }
+
+
+def validate_coloring(graph: Graph) -> bool:
+    """Every edge appears exactly once; classes are matchings."""
+    classes = greedy_edge_coloring(graph)
+    seen = set()
+    for cls in classes:
+        endpoints: set[int] = set()
+        for (i, j) in cls:
+            e = (min(i, j), max(i, j))
+            if e in seen or i in endpoints or j in endpoints:
+                return False
+            seen.add(e)
+            endpoints.update((i, j))
+    return seen == {(min(i, j), max(i, j)) for (i, j) in graph.edges()}

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel for FedSPD's cluster-matched gossip mix C ← W·C.
+
+TARGET: TPU v5e. The mixing weight matrix W (N×N, row-stochastic, built per
+round from the adjacency and this round's cluster selections — Eq. (1)) is
+tiny (N ≤ a few hundred clients → ≤ 0.25 MB fp32) and is kept whole in VMEM
+for every grid step. The flattened parameter matrix C (N, X) with X up to
+tens of billions is tiled along X: grid = (n_x_blocks,), each step loads a
+(N, x_block) slab, does one (N×N)·(N×x_block) MXU matmul, and writes the
+mixed slab. x_block = 2048 keeps the slab (N=128 → 1 MB bf16 in + 1 MB out
++ W) comfortably inside VMEM with room for double buffering, and the matmul
+K-dim = N is zero-padded to 8/128 alignment by Mosaic.
+
+This fuses FedSPD's neighbor averaging into a single streaming pass over
+the parameters — the HBM-bound ideal (read C once, write C once).
+
+Validated on CPU via interpret=True against core/gossip.mix_dense.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mix_kernel(w_ref, c_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)       # (N, N)
+    c = c_ref[...].astype(jnp.float32)       # (N, x_block)
+    o_ref[...] = jax.lax.dot_general(
+        w, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def gossip_mix_flat(
+    w: jnp.ndarray,  # (N, N) row-stochastic mixing weights
+    c: jnp.ndarray,  # (N, X) flattened per-client parameters
+    *,
+    x_block: int = 2048,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n, x = c.shape
+    x_block = min(x_block, x)
+    pad = (-x) % x_block
+    if pad:
+        c = jnp.pad(c, ((0, 0), (0, pad)))
+    xp = c.shape[1]
+    grid = (xp // x_block,)
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, x_block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, x_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, xp), c.dtype),
+        interpret=interpret,
+    )(w, c)
+    return out[:, :x] if pad else out
+
+
+def gossip_mix_tree(w: jnp.ndarray, c_tree, *, x_block: int = 2048,
+                    interpret: bool = True):
+    """Apply the mix to a pytree of (N, ...) leaves (flatten / unflatten)."""
+    def one(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        mixed = gossip_mix_flat(w, flat, x_block=x_block, interpret=interpret)
+        return mixed.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(one, c_tree)

@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On real TPU hardware set ``interpret=False`` (module-level default flips on
+TPU backends automatically); this CPU container validates kernel bodies in
+interpret mode. The model layers select kernels with ``attn_mode="pallas"``
+/ ``use_pallas`` flags; the pure-JAX blocked paths remain the portable
+fallback and the dry-run lowering path (Mosaic does not lower on the CPU
+host platform).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gossip_mix as _gm
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_block", "kv_block")
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    q_block: int = 128, kv_block: int = 128):
+    """GQA flash attention. q (B, Lq, Hq, hd); k/v (B, Lkv, Hkv, hd)."""
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, initial_state=None):
+    """Mamba2 SSD chunked scan. Accepts grouped B/C (B, L, G, N) and expands
+    groups to heads before the single-head kernel."""
+    h = x.shape[2]
+    g = Bm.shape[2]
+    if g != h:
+        rep = h // g
+        Bm = jnp.repeat(Bm, rep, axis=2)
+        Cm = jnp.repeat(Cm, rep, axis=2)
+    return _ssd.ssd_scan(
+        x, dt, A, Bm, Cm, chunk=chunk, initial_state=initial_state,
+        interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("x_block",))
+def gossip_mix(w, c_tree, *, x_block: int = 2048):
+    """FedSPD mixing C ← W·C over a pytree of (N, ...) leaves."""
+    return _gm.gossip_mix_tree(
+        w, c_tree, x_block=x_block, interpret=_default_interpret()
+    )

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these).
+
+Each oracle is the straightforward O(full) materialization of what the
+kernel computes with tiling + online algorithms; they are the ground truth
+for the shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """(B, Lq, Hq, hd) GQA attention with materialized (Lq, Lkv) scores."""
+    b, lq, hq, hd = q.shape
+    n_kv = k.shape[2]
+    g = hq // n_kv
+    qg = q.reshape(b, lq, n_kv, g, hd).astype(jnp.float32)
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+    scores = jnp.einsum("blkgd,bmkd->bkglm", qg, k32) / np.sqrt(hd)
+    pos_q = jnp.arange(lq)
+    pos_k = jnp.arange(k.shape[1])
+    mask = jnp.ones((lq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        mask &= pos_q[:, None] - pos_k[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkglm,bmkd->blkgd", probs, v32)
+    return out.reshape(b, lq, hq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, initial_state=None):
+    """Sequential (per-token) SSD recurrence — the literal state-space form:
+
+        S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_tᵀ ;  y_t = S_t C_t
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    f32 = jnp.float32
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), f32)
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        da = jnp.exp(dtt * A[None, :])  # (B,H)
+        s = s * da[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", s, ct)
+        return s, y
+
+    xs = (
+        jnp.moveaxis(x.astype(f32), 1, 0),
+        jnp.moveaxis(dt.astype(f32), 1, 0),
+        jnp.moveaxis(Bm.astype(f32), 1, 0),
+        jnp.moveaxis(Cm.astype(f32), 1, 0),
+    )
+    s_final, ys = jax.lax.scan(step, initial_state.astype(f32), xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B, L, H, P)
+    return y.astype(x.dtype), s_final
+
+
+def gossip_mix_ref(w, c_tree):
+    """C ← W·C over every (N, ...) leaf, fp32 accumulation."""
+    def one(leaf):
+        return jnp.einsum(
+            "ij,j...->i...", w.astype(jnp.float32),
+            leaf.astype(jnp.float32),
+        ).astype(leaf.dtype)
+
+    return jax.tree.map(one, c_tree)

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (arXiv:2405.21060).
+
+TARGET: TPU v5e. Grid = (B, H, n_chunks) with the chunk axis innermost —
+TPU executes the grid sequentially, so the (P, N) fp32 carried state lives
+in VMEM scratch across chunk steps (the inter-chunk recurrence). Per grid
+step the kernel evaluates the chunk's *dual quadratic form* with three MXU
+matmuls (C·Bᵀ, L-masked scores · x, C · state) — chunk=128 keeps every
+matmul dim ≥ the 128-wide MXU tile while the working set
+(x (128, P) + B/C (128, N) + scores (128, 128) + state (P, N), fp32)
+stays ≈ 0.25 MB for P=64, N=128 — far under VMEM.
+
+Heads are grouped outside the kernel (ops.py repeats B/C from G groups to
+H heads), so the kernel body is a single-head single-chunk program.
+
+Validated on CPU via interpret=True against ssm.ssd_chunked
+(tests/test_kernels.py sweeps (B, L, H, P, N) × chunk sizes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref,    # (1, chunk, 1, P)
+    dt_ref,   # (1, chunk, 1)
+    a_ref,    # (1,)  decay rate for this head
+    b_ref,    # (1, chunk, 1, N)
+    c_ref,    # (1, chunk, 1, N)
+    s0_ref,   # (1, 1, P, N) initial state for this (batch, head)
+    y_ref,    # (1, chunk, 1, P) out
+    sT_ref,   # (1, 1, P, N) out: final state
+    state_ref,  # VMEM scratch (P, N) f32 — carried across chunk steps
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # (Q,)
+    a = a_ref[0].astype(jnp.float32)             # ()
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)   # (Q, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)   # (Q, N)
+
+    da = dt * a                                  # (Q,)
+    cum = jnp.cumsum(da)                         # (Q,)
+
+    # intra-chunk dual form: L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(iq >= jq, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                            # (Q, Q)
+    xdt = x * dt[:, None]                        # (Q, P)
+    y_diag = jax.lax.dot_general(
+        scores * lmat, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (Q, P)
+
+    # off-diagonal: contribution of the carried state entering this chunk
+    state_in = state_ref[...]                    # (P, N)
+    y_off = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, state_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (Q, P)
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # chunk state update: S <- exp(cum_Q) * S + sum_q exp(cum_Q - cum_q) dt_q x_q B_qᵀ
+    decay_out = jnp.exp(cum[-1] - cum)           # (Q,)
+    contrib = jax.lax.dot_general(
+        x * (decay_out * dt)[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (P, N)
+    state_ref[...] = jnp.exp(cum[-1]) * state_in + contrib
+
+    @pl.when(ci == n_chunks - 1)
+    def _finalize():
+        sT_ref[0, 0] = state_ref[...].astype(sT_ref.dtype)
+
+
+def ssd_scan(
+    x: jnp.ndarray,   # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H)
+    A: jnp.ndarray,   # (H,)
+    Bm: jnp.ndarray,  # (B, L, H, N) — already head-expanded (ops.py)
+    Cm: jnp.ndarray,  # (B, L, H, N)
+    *,
+    chunk: int = 128,
+    initial_state: jnp.ndarray | None = None,  # (B, H, P, N)
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0
+    n_chunks = l // chunk
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    grid = (b, h, n_chunks)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, initial_state)
+    return y, s_final

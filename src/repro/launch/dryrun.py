@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)  # MUST precede any jax import — jax locks device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) combination on a 512-placeholder-device host mesh, print
+memory_analysis / cost_analysis, and emit the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 pairs
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results are appended to experiments/dryrun/*.json for EXPERIMENTS.md.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_ALIASES, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.launch.specs import build_dryrun
+from repro.launch.steps import supports_shape
+from repro.roofline import analysis as rl
+
+CANONICAL_ARCHS = [
+    "olmo-1b", "olmoe-1b-7b", "phi3.5-moe-42b-a6.6b", "whisper-base",
+    "h2o-danube-1.8b", "zamba2-1.2b", "gemma3-1b", "granite-3-8b",
+    "mamba2-370m", "chameleon-34b",
+]
+
+
+def run_case(arch: str, shape_name: str, mesh, mesh_name: str, *,
+             step_kind: str = "auto", attn_mode: str = "blocked",
+             gossip_mode: str = "dense", remat: bool = True,
+             layout: str = "tp", moe_dispatch: str | None = None,
+             single_compile: bool = False, verbose: bool = True):
+    """Lower + compile one combination; return (Roofline, wall_seconds)."""
+    cfg = get_config(arch)
+    ok, why = supports_shape(cfg, shape_name)
+    if not ok:
+        return None, why
+    cfg_override = (
+        cfg.with_overrides(moe_dispatch=moe_dispatch) if moe_dispatch else None
+    )
+
+    t0 = time.time()
+    compiled = {}
+    # two-point trip-count correction (roofline/analysis.py); multi-pod
+    # sweeps prove sharding only (single compile, roofline is single-pod)
+    unrolls = (1,) if single_compile else (1, 2)
+    for u in unrolls:
+        case = build_dryrun(
+            arch, shape_name, mesh, step_kind=step_kind, attn_mode=attn_mode,
+            gossip_mode=gossip_mode, remat=remat, scan_unroll=u,
+            layout=layout, cfg_override=cfg_override,
+        )
+        with mesh:
+            lowered = jax.jit(case.fn).lower(*case.args)
+            compiled[u] = lowered.compile()
+    wall = time.time() - t0
+
+    shape = INPUT_SHAPES[shape_name]
+    cfg_eff, _ = __import__("repro.launch.steps", fromlist=["arch_for_shape"]
+                            ).arch_for_shape(get_config(arch), shape_name)
+    mf = rl.model_flops_for(get_config(arch), shape, case.step_kind)
+    roof = rl.analyze_two_point(
+        arch=arch, shape=shape_name, step_kind=case.step_kind,
+        mesh_name=mesh_name, chips=n_chips(mesh),
+        compiled1=compiled[1], compiled2=compiled.get(2, compiled[1]),
+        ratio=0.0 if single_compile else rl.scan_trip_ratio(cfg_eff),
+        model_flops=mf,
+        note=case.note + (" [single-compile: uncorrected]" if single_compile
+                          else ""),
+    )
+    if verbose:
+        print(f"--- {arch} × {shape_name} × {mesh_name} [{case.step_kind}] "
+              f"({wall:.1f}s compile) {case.note}")
+        print(f"    memory_analysis: {roof.memory_per_chip}")
+        print(f"    cost_analysis: flops/chip={roof.flops_per_chip:.3e} "
+              f"bytes/chip={roof.bytes_per_chip:.3e}")
+        print(f"    collectives/chip: {roof.coll_breakdown}")
+        print(f"    roofline: compute={roof.compute_s:.3e}s "
+              f"memory={roof.memory_s:.3e}s coll={roof.collective_s:.3e}s "
+              f"-> {roof.bottleneck}-bound, useful={roof.useful_ratio:.3f}")
+    return roof, wall
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCH_ALIASES), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--all", action="store_true", help="all 10×4 pairs")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="(2,16,16) pod mesh instead of (16,16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--step", default="auto",
+                    choices=["auto", "fedspd", "plain", "prefill", "decode"])
+    ap.add_argument("--attn-mode", default="blocked",
+                    choices=["blocked", "ref", "pallas"])
+    ap.add_argument("--gossip-mode", default="dense",
+                    choices=["dense", "permute", "ppermute"])
+    ap.add_argument("--layout", default="tp", choices=["tp", "dpc", "dpr"])
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=["cumsum", "sort", "grouped"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--single-compile", action="store_true",
+                    help="skip the unroll=2 compile (sharding proof only)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(make_production_mesh(), "pod16x16"),
+                  (make_production_mesh(multi_pod=True), "2pod")]
+    elif args.multi_pod:
+        meshes = [(make_production_mesh(multi_pod=True), "2pod")]
+    else:
+        meshes = [(make_production_mesh(), "pod16x16")]
+
+    if args.all:
+        pairs = [(a, s) for a in CANONICAL_ARCHS for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch+--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    rows, failures, skips = [], [], []
+    for mesh, mesh_name in meshes:
+        for arch, shape_name in pairs:
+            try:
+                roof, wall = run_case(
+                    arch, shape_name, mesh, mesh_name, step_kind=args.step,
+                    attn_mode=args.attn_mode, gossip_mode=args.gossip_mode,
+                    remat=not args.no_remat, layout=args.layout,
+                    moe_dispatch=args.moe_dispatch,
+                    single_compile=args.single_compile,
+                )
+            except Exception:
+                print(f"!!! FAILED {arch} × {shape_name} × {mesh_name}")
+                traceback.print_exc()
+                failures.append((arch, shape_name, mesh_name))
+                continue
+            if roof is None:
+                print(f"--- SKIP {arch} × {shape_name}: {wall}")
+                skips.append((arch, shape_name, wall))
+                continue
+            rows.append(roof)
+            tag = f"{arch}__{shape_name}__{mesh_name}".replace(".", "_")
+            if args.layout != "tp":
+                tag += f"__{args.layout}"
+            if args.gossip_mode != "dense":
+                tag += f"__{args.gossip_mode}"
+            if args.moe_dispatch:
+                tag += f"__{args.moe_dispatch}"
+            if args.no_remat:
+                tag += "__noremat"
+            with open(outdir / f"{tag}.json", "w") as f:
+                json.dump(roof.to_json(), f, indent=1)
+
+    print()
+    print(rl.format_table(rows))
+    if skips:
+        print(f"\nskipped ({len(skips)}):")
+        for a, s, why in skips:
+            print(f"  {a} × {s}: {why}")
+    if failures:
+        print(f"\nFAILURES ({len(failures)}): {failures}")
+        raise SystemExit(1)
+    print(f"\nall {len(rows)} combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

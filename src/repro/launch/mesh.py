@@ -1,0 +1,68 @@
+"""Production mesh construction (TPU v5e target).
+
+All mesh building lives behind functions so importing this module never
+touches jax device state (the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* jax
+initializes; see launch/dryrun.py line 1).
+
+Axes:
+  single-pod : (16, 16)        -> ("data", "model")    256 chips
+  multi-pod  : (2, 16, 16)     -> ("pod", "data", "model")  512 chips
+
+FedSPD mapping (DESIGN.md §2): one FL *client* per data-axis row — 16
+clients on one pod, 32 across two pods. Within a client, parameters and
+activations are tensor-parallel over "model". The gossip graph is generated
+pod-aware: dense intra-pod (ICI), sparse bridges inter-pod (DCN).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+# --- TPU v5e hardware constants (per chip), used by roofline/ ---
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+HBM_BYTES = 16 * 2**30       # 16 GiB HBM per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} are "
+            "visible — run through launch/dryrun.py, which forces "
+            "--xla_force_host_platform_device_count=512 before jax init"
+        )
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for unit tests (honours whatever device count exists)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """The axes a batch/client dimension shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: jax.sharding.Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def model_size(mesh: jax.sharding.Mesh) -> int:
+    return int(mesh.shape["model"])
+
+
+def n_chips(mesh: jax.sharding.Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

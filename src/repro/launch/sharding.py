@@ -1,0 +1,195 @@
+"""Sharding rules: pytree -> PartitionSpec trees for the production mesh.
+
+Strategy (DESIGN.md §2):
+
+- **Parameters** are tensor-parallel over "model". Rules are path-aware:
+  MoE expert tensors shard the expert dim (expert parallelism); embeddings
+  shard the vocab dim; everything else shards the largest dim divisible by
+  the model-axis size (preferring the last = output-features dim on ties).
+  Leaves under a scanned stack ("layers", "enc_layers", ...) skip the
+  leading (L,) axis. Small leaves (norm scales, routers) stay replicated.
+
+- **FedSPD state**: cluster-center leaves are (S, N_clients, *param_shape);
+  the client axis shards over ("pod","data") and the inner dims reuse the
+  parameter rule. u/z shard their client axis; scalars replicate.
+
+- **Batches**: leading batch/client dim over ("pod","data").
+
+- **KV / SSM caches**: batch dim over data when divisible, else the cache
+  length dim; heads over "model" when divisible, else the cache length dim
+  (flash-decoding-style sequence sharding — decode_attention's (m, l, o)
+  partials make the combine exact).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, model_size
+
+PyTree = Any
+
+# leaves whose total size is below this stay replicated (norm scales, biases)
+_MIN_SHARD_ELEMS = 1 << 16
+
+# containers whose children carry a leading scanned (n_layers,) axis
+_STACKED = ("layers", "enc_layers", "dec_layers", "mamba_layers")
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    ).lower()
+
+
+def _generic_model_dim(shape, start: int, m: int):
+    """Largest dim in shape[start:] divisible by the model-axis size
+    (ties -> later dim). None if nothing divides."""
+    best, best_size = None, 0
+    for d in range(start, len(shape)):
+        if shape[d] % m == 0 and shape[d] >= m and shape[d] >= best_size:
+            best, best_size = d, shape[d]
+    return best
+
+
+def param_spec(path, leaf_shape, mesh: Mesh) -> P:
+    """PartitionSpec for one model-parameter leaf."""
+    m = model_size(mesh)
+    name = _path_str(path)
+    skip = 1 if any(s in name for s in _STACKED) else 0
+    spec = [None] * len(leaf_shape)
+    if int(np.prod(leaf_shape)) < _MIN_SHARD_ELEMS:
+        return P(*spec)
+    # MoE expert tensors: expert-parallel over "model"
+    if any(k in name for k in ("w_in", "w_out", "w_gate")) and len(leaf_shape) >= 3:
+        e_dim = skip  # (L, E, D, F) or (E, D, F)
+        if leaf_shape[e_dim] % m == 0:
+            spec[e_dim] = "model"
+            return P(*spec)
+        # fall through to generic if experts don't divide
+    d = _generic_model_dim(leaf_shape, skip, m)
+    if d is not None:
+        spec[d] = "model"
+    return P(*spec)
+
+
+def params_pspecs(params: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf.shape, mesh), params
+    )
+
+
+def params_shardings(params: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), params_pspecs(params, mesh)
+    )
+
+
+# --------------------------------------------------------------------------
+# FedSPD state: centers (S, N, ...), u (N, S), z (N, M), scalars
+# --------------------------------------------------------------------------
+
+
+def fedspd_state_pspecs(state, mesh: Mesh):
+    """PartitionSpecs for a FedSPDState whose centers leaves are
+    (S, N_clients, *param_shape)."""
+    dp = dp_axes(mesh)
+
+    def center_spec(path, leaf):
+        inner = param_spec(path, leaf.shape[2:], mesh)
+        return P(None, dp, *inner)
+
+    centers = jax.tree_util.tree_map_with_path(center_spec, state.centers)
+    return type(state)(
+        centers=centers,
+        u=P(dp, None),
+        z=P(dp, None),
+        round=P(),
+        key=P(),
+        comm_bytes=P(),
+    )
+
+
+# --------------------------------------------------------------------------
+# Batches
+# --------------------------------------------------------------------------
+
+
+def batch_pspecs(batch: PyTree, mesh: Mesh) -> PyTree:
+    """Leading dim (global batch or client axis) over ("pod","data")."""
+    dp = dp_axes(mesh)
+    return jax.tree.map(lambda l: P(dp, *([None] * (l.ndim - 1))), batch)
+
+
+# --------------------------------------------------------------------------
+# Decode caches
+# --------------------------------------------------------------------------
+
+
+def _cache_leaf_spec(name: str, shape, mesh: Mesh) -> P:
+    """KV cache leaves (Lay, B, Lc, Hkv, hd); SSM state (Lay, B, H, P, N);
+    conv state (Lay, B, w, D); cross-KV (Lay, B, Lenc, H, hd); pos ()."""
+    dp = dp_axes(mesh)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    m = model_size(mesh)
+    spec = [None] * len(shape)
+    if len(shape) == 0 or int(np.prod(shape)) < _MIN_SHARD_ELEMS:
+        return P(*spec)
+
+    b_dim = 1 if len(shape) >= 2 else None  # leading dim is the layer stack
+    big_dim = 2 if len(shape) >= 3 else None  # cache length / heads / width
+
+    # data axes: batch if divisible, else the big cache dim
+    if b_dim is not None and shape[b_dim] % dp_n == 0 and shape[b_dim] >= dp_n:
+        spec[b_dim] = dp
+        seq_data = False
+    elif big_dim is not None and shape[big_dim] % dp_n == 0:
+        spec[big_dim] = dp
+        seq_data = True
+    else:
+        seq_data = False
+
+    # model axis: heads dim if present & divisible, else head_dim, else length
+    if len(shape) == 5:  # (Lay, B, Lc, Hkv, hd) or (Lay, B, H, P, N) ssm state
+        if shape[3] % m == 0:
+            spec[3] = "model"
+        elif shape[4] % m == 0:
+            spec[4] = "model"
+        elif not seq_data and shape[2] % m == 0:
+            spec[2] = "model"
+        elif seq_data and shape[2] % (dp_n * m) == 0:
+            spec[2] = dp + ("model",)
+    elif len(shape) == 4:  # (Lay, B, w, D) conv state
+        if shape[3] % m == 0:
+            spec[3] = "model"
+    return P(*spec)
+
+
+def cache_pspecs(cache: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(_path_str(path), leaf.shape, mesh),
+        cache,
+    )
+
+
+def to_shardings(pspecs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def sds_with_sharding(tree_sds: PyTree, pspecs: PyTree, mesh: Mesh) -> PyTree:
+    """Attach NamedShardings to a tree of ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        tree_sds,
+        pspecs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )

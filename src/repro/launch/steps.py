@@ -1,0 +1,197 @@
+"""Production step functions: FedSPD train round, plain-DP train, serve.
+
+The paper's technique is the framework's first-class training mode:
+``train_step`` is one FedSPD round (stream regime — Section 4's four steps
+over one fresh per-client batch) with the client axis mapped onto the mesh's
+("pod","data") rows and each client's model tensor-parallel over "model".
+
+``plain`` is the conventional fully-synchronous data-parallel step — the
+non-personalized reference point used in the roofline comparison (what the
+paper calls DFL-FedAvg collapses to this on a fully-connected graph).
+
+Serve steps realize deliverable shapes: ``prefill`` fills the KV/SSM cache
+for a personalized model; ``decode`` generates ONE token against a
+seq_len-deep cache (decode_32k, long_500k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.fedspd import FedSPDConfig, make_round_step
+from repro.core.gossip import GossipSpec
+from repro.graphs.topology import pod_aware
+from repro.models.registry import ModelBundle, build_model
+from repro.optim.sgd import make_optimizer
+
+PyTree = Any
+
+
+def make_gossip(n_clients: int, n_pods: int, seed: int = 0,
+                mode: str = "dense") -> GossipSpec:
+    """Pod-aware client graph: dense ER intra-pod (ICI), sparse bridges
+    inter-pod (DCN)."""
+    graph = pod_aware(n_clients // n_pods, n_pods, seed=seed)
+    return GossipSpec.from_graph(graph, mode=mode)
+
+
+def make_fedspd_train_step(
+    bundle: ModelBundle,
+    gossip: GossipSpec,
+    fcfg: FedSPDConfig,
+    mix_fn=None,
+):
+    """One FedSPD round over (N_clients, per_client_batch, ...) batches."""
+    step = make_round_step(
+        bundle.loss, bundle.per_example_loss, gossip, fcfg, mix_fn=mix_fn,
+    )
+
+    def train_step(state, batch):
+        return step(state, batch)
+
+    return train_step
+
+
+def make_plain_train_step(bundle: ModelBundle, optimizer_name: str = "adamw",
+                          lr: float = 3e-4):
+    """Synchronous data-parallel LM training step (reference point)."""
+    opt = make_optimizer(optimizer_name)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(bundle: ModelBundle):
+    """Fill the cache for a request batch (the LM-head matmul on the full
+    sequence is dead code and DCE'd — prefill cost is attention + FFN)."""
+
+    def prefill_step(params, batch, cache):
+        return bundle.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(bundle: ModelBundle):
+    """One new token against a seq_len-deep cache."""
+
+    def decode_step(params, cache, tokens):
+        return bundle.decode_step(params, cache, tokens)
+
+    return decode_step
+
+
+def arch_for_shape(cfg: ArchConfig, shape_name: str) -> tuple[ArchConfig, str]:
+    """Shape-level arch adaptation (DESIGN.md §Arch-applicability).
+
+    long_500k requires sub-quadratic attention: pure full-attention archs run
+    it under an explicit sliding-window (4096) variant; whisper skips (the
+    caller checks ``supports_shape`` first). Returns (cfg, note)."""
+    if shape_name != "long_500k":
+        return cfg, ""
+    if cfg.supports_long_context:
+        return cfg, "native sub-quadratic"
+    return cfg.with_overrides(window=4096), "+swa4096 variant"
+
+
+def supports_shape(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family == "audio":
+        return False, (
+            "skip: enc-dec audio backbone (1500-frame encoder); a 500k-token "
+            "decode has no audio meaning (DESIGN.md §4)"
+        )
+    return True, ""
+
+
+def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example,
+                             replicate_model_dims: bool = False):
+    """FedSPD's Eq. (1) as an explicit edge-colored ``lax.ppermute`` schedule
+    under shard_map (§Perf H1 iter 2 found that ``jnp.take`` along the
+    client axis does NOT lower to collective_permute under GSPMD — this is
+    the real collective schedule, one permute per color class, bytes ∝ deg·X
+    per client instead of the dense einsum's all-gather ∝ N·X).
+
+    Requires exactly one client per ("pod","data") mesh row (the production
+    mapping). ``state_example`` provides the selected-center pytree SDS so
+    per-leaf shard_map specs can be derived once.
+    """
+    import numpy as np
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from repro.launch.mesh import dp_axes
+    from repro.launch import sharding as shd
+
+    dp = dp_axes(mesh)
+    n = gossip.adj.shape[0]
+
+    # static per-color (src -> dst) pairs and matched masks
+    colors = []
+    for perm in gossip.perms:
+        perm = np.asarray(perm)
+        pairs = tuple(
+            (int(i), int(perm[i])) for i in range(n) if perm[i] != i
+        )
+        if pairs:
+            colors.append((pairs, jnp.asarray(perm != np.arange(n))))
+
+    def leaf_spec(path, leaf):
+        # MUST match the layout's center sharding exactly — a mismatched
+        # shard_map boundary makes GSPMD reshard the full parameter set
+        # (measured: collective term 1.96 s -> 8.03 s on olmo-1b/dpr)
+        if replicate_model_dims:
+            inner = P(*([None] * (len(leaf.shape) - 1)))
+        else:
+            inner = shd.param_spec(path, leaf.shape[1:], mesh)
+        return P(dp, *inner)
+
+    c_specs = jax.tree_util.tree_map_with_path(
+        lambda pth, l: leaf_spec(pth, l), state_example
+    )
+    axis = dp if len(dp) > 1 else dp[0]
+
+    def mix_fn(c_sel, s):
+        def body(c_loc, s_loc):
+            # c_loc leaves (1, X_shard...); s_loc (1,)
+            idx = jax.lax.axis_index(dp[-1])
+            if len(dp) > 1:
+                idx = idx + jax.lax.axis_index(dp[0]) * mesh.shape[dp[-1]]
+            acc = jax.tree.map(lambda l: l.astype(jnp.float32), c_loc)
+            cnt = jnp.ones((1,), jnp.float32)
+            for pairs, matched in colors:
+                recv_s = jax.lax.ppermute(s_loc, axis, pairs)
+                recv_c = jax.tree.map(
+                    lambda l: jax.lax.ppermute(l, axis, pairs), c_loc
+                )
+                m = (recv_s == s_loc) & matched[idx]
+                mf = m.astype(jnp.float32)
+                acc = jax.tree.map(
+                    lambda a, r: a + mf.reshape((-1,) + (1,) * (r.ndim - 1))
+                    * r.astype(jnp.float32),
+                    acc, recv_c,
+                )
+                cnt = cnt + mf
+            return jax.tree.map(
+                lambda a, l: (a / cnt.reshape((-1,) + (1,) * (a.ndim - 1))
+                              ).astype(l.dtype),
+                acc, c_loc,
+            ), None
+
+        fn = shard_map(
+            lambda c, sv: body(c, sv)[0],
+            mesh=mesh,
+            in_specs=(c_specs, P(dp)),
+            out_specs=c_specs,
+        )
+        return fn(c_sel, s)
+
+    return mix_fn

@@ -1,0 +1,6 @@
+from repro.models.registry import (  # noqa: F401
+    ModelBundle,
+    active_params,
+    build_model,
+    count_params,
+)

@@ -1,0 +1,227 @@
+"""Whisper-style encoder-decoder transformer backbone [arXiv:2212.04356].
+
+Per the brief, the audio frontend (mel spectrogram + conv feature extractor)
+is a STUB: ``input_specs()`` supplies precomputed frame embeddings
+(B, encoder_frames, encoder_d_model). We implement the transformer backbone:
+bidirectional encoder, causal decoder with cross-attention, sinusoidal
+positions (parameter-free — sidesteps learned-table sizing for the assigned
+decode shapes, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import attention, decode_attention
+from repro.models.layers import (
+    cast_params_for_compute,
+    unroll_arg,
+    apply_mlp,
+    apply_norm,
+    dense_init,
+    embed_init,
+    init_mlp,
+    rmsnorm_init,
+    stack_init,
+)
+
+
+def sinusoidal_positions(length: int, dim: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(length)[:, None] + offset
+    div = jnp.exp(jnp.arange(0, dim, 2) * (-np.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim))
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def _init_attn(key, cfg: ArchConfig, d_model: int):
+    ks = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    dtype = cfg.param_dtype_jnp()
+    return {
+        "wq": dense_init(ks[0], d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d_model, dtype),
+    }
+
+
+def init_encoder_layer(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype_jnp()
+    k1, k2 = jax.random.split(key)
+    d = cfg.encoder_d_model or cfg.d_model
+    return {
+        "ln1": rmsnorm_init(d, dtype),
+        "ln2": rmsnorm_init(d, dtype),
+        "attn": _init_attn(k1, cfg, d),
+        "mlp": init_mlp(k2, d, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init_decoder_layer(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype_jnp()
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": rmsnorm_init(d, dtype),
+        "ln_x": rmsnorm_init(d, dtype),
+        "ln2": rmsnorm_init(d, dtype),
+        "attn": _init_attn(k1, cfg, d),
+        "xattn": _init_attn(k2, cfg, d),
+        "mlp": init_mlp(k3, d, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype_jnp()
+    ks = jax.random.split(key, 5)
+    d_enc = cfg.encoder_d_model or cfg.d_model
+    params = {
+        "enc_layers": stack_init(
+            lambda k: init_encoder_layer(k, cfg), ks[0], cfg.encoder_layers
+        ),
+        "enc_ln": rmsnorm_init(d_enc, dtype),
+        "embed": embed_init(ks[1], cfg.vocab_padded, cfg.d_model, dtype),
+        "dec_layers": stack_init(
+            lambda k: init_decoder_layer(k, cfg), ks[2], cfg.n_layers
+        ),
+        "dec_ln": rmsnorm_init(cfg.d_model, dtype),
+        "head": dense_init(ks[3], cfg.d_model, cfg.vocab_padded, dtype),
+    }
+    if d_enc != cfg.d_model:
+        params["enc_proj"] = dense_init(ks[4], d_enc, cfg.d_model, dtype)
+    return params
+
+
+def _mha(p, x_q, x_kv, cfg: ArchConfig, *, causal: bool, mode: str):
+    b, lq, _ = x_q.shape
+    hd = cfg.head_dim
+    q = (x_q @ p["wq"]).reshape(b, lq, cfg.n_heads, hd)
+    k = (x_kv @ p["wk"]).reshape(b, x_kv.shape[1], cfg.n_kv_heads, hd)
+    v = (x_kv @ p["wv"]).reshape(b, x_kv.shape[1], cfg.n_kv_heads, hd)
+    out = attention(q, k, v, mode=mode, causal=causal,
+                    unroll=unroll_arg(cfg.attn_unroll),
+                    q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+    return out.reshape(b, lq, -1) @ p["wo"]
+
+
+def encode(params, frames: jnp.ndarray, cfg: ArchConfig, *, attn_mode="blocked"):
+    """frames: (B, T, encoder_d_model) stub embeddings."""
+    compute = cfg.compute_dtype_jnp()
+    params = cast_params_for_compute(params, compute)
+    h = frames.astype(compute)
+    h = h + sinusoidal_positions(h.shape[1], h.shape[2]).astype(compute)
+
+    def body(h, layer_p):
+        x = apply_norm("rmsnorm", layer_p["ln1"], h)
+        h = h + _mha(layer_p["attn"], x, x, cfg, causal=False, mode=attn_mode)
+        x2 = apply_norm("rmsnorm", layer_p["ln2"], h)
+        return h + apply_mlp(layer_p["mlp"], x2, cfg.act), None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"],
+                        unroll=unroll_arg(cfg.scan_unroll))
+    h = apply_norm("rmsnorm", params["enc_ln"], h)
+    if "enc_proj" in params:
+        h = h @ params["enc_proj"]
+    return h  # (B, T, d_model)
+
+
+def encdec_forward(params, batch_tokens, cfg: ArchConfig, *, frames=None,
+                   attn_mode="blocked", remat: bool = False):
+    """Teacher-forced decode over target tokens. Returns (logits, aux, None)."""
+    compute = cfg.compute_dtype_jnp()
+    enc = encode(params, frames, cfg, attn_mode=attn_mode)
+    b, l = batch_tokens.shape
+    h = params["embed"][batch_tokens].astype(compute)
+    params = cast_params_for_compute(params, compute)
+    h = h + sinusoidal_positions(l, cfg.d_model).astype(compute)
+
+    def body(h, layer_p):
+        def blk(lp, hh):
+            x = apply_norm("rmsnorm", lp["ln1"], hh)
+            hh = hh + _mha(lp["attn"], x, x, cfg, causal=True, mode=attn_mode)
+            xx = apply_norm("rmsnorm", lp["ln_x"], hh)
+            hh = hh + _mha(lp["xattn"], xx, enc, cfg, causal=False, mode=attn_mode)
+            x2 = apply_norm("rmsnorm", lp["ln2"], hh)
+            return hh + apply_mlp(lp["mlp"], x2, cfg.act)
+
+        fn = jax.checkpoint(blk) if remat else blk
+        return fn(layer_p, h), None
+
+    h, _ = jax.lax.scan(body, h, params["dec_layers"],
+                        unroll=unroll_arg(cfg.scan_unroll))
+    h = apply_norm("rmsnorm", params["dec_ln"], h)
+    return h @ params["head"], jnp.zeros((), jnp.float32), None
+
+
+def encdec_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype_jnp()
+    hd = cfg.head_dim
+    t = cfg.encoder_frames
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        # cross-attention K/V precomputed from the encoder at prefill time
+        "xk": jnp.zeros((cfg.n_layers, batch, t, cfg.n_kv_heads, hd), dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, t, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def encdec_prefill_cross(params, frames, cfg: ArchConfig, cache, attn_mode="blocked"):
+    """Fill the cross-attention K/V from encoder output."""
+    enc = encode(params, frames, cfg, attn_mode=attn_mode)
+    params = cast_params_for_compute(params, cfg.compute_dtype_jnp())
+    b, t, _ = enc.shape
+    hd = cfg.head_dim
+
+    def body(_, layer_p):
+        xk = (enc @ layer_p["xattn"]["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+        xv = (enc @ layer_p["xattn"]["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+        return None, (xk, xv)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec_layers"],
+                               unroll=unroll_arg(cfg.scan_unroll))
+    return {**cache, "xk": xk.astype(cache["xk"].dtype),
+            "xv": xv.astype(cache["xv"].dtype)}
+
+
+def encdec_decode_step(params, cache, tokens, cfg: ArchConfig):
+    compute = cfg.compute_dtype_jnp()
+    b = tokens.shape[0]
+    cur_pos = cache["pos"]
+    h = params["embed"][tokens].astype(compute)
+    params = cast_params_for_compute(params, compute)
+    h = h + sinusoidal_positions(1, cfg.d_model, offset=cur_pos).astype(compute)
+    hd = cfg.head_dim
+    t = cfg.encoder_frames
+
+    def body(h, xs):
+        layer_p, kc, vc, xk, xv = xs
+        x = apply_norm("rmsnorm", layer_p["ln1"], h)
+        q = (x @ layer_p["attn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        k = (x @ layer_p["attn"]["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (x @ layer_p["attn"]["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cur_pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cur_pos, 1)
+        a = decode_attention(q, kc, vc, cur_pos)
+        h = h + a.reshape(b, 1, -1) @ layer_p["attn"]["wo"]
+        # cross-attention against precomputed encoder K/V (all positions valid)
+        xx = apply_norm("rmsnorm", layer_p["ln_x"], h)
+        qx = (xx @ layer_p["xattn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        ax = decode_attention(qx, xk, xv, jnp.asarray(t - 1, jnp.int32))
+        h = h + ax.reshape(b, 1, -1) @ layer_p["xattn"]["wo"]
+        x2 = apply_norm("rmsnorm", layer_p["ln2"], h)
+        return h + apply_mlp(layer_p["mlp"], x2, cfg.act), (kc, vc)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"], cache["xk"],
+                  cache["xv"]),
+        unroll=unroll_arg(cfg.scan_unroll),
+    )
+    h = apply_norm("rmsnorm", params["dec_ln"], h)
+    logits = h @ params["head"]
+    return logits, {**cache, "k": new_k, "v": new_v, "pos": cur_pos + 1}

@@ -1,0 +1,233 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+Zamba2 [arXiv:2411.15242] interleaves Mamba2 layers with a single
+shared-weight attention(+MLP) block invoked at regular depth intervals —
+attention quality at a fraction of the parameter cost. We scan the Mamba2
+segments (stacked params) and call the shared block between segments; the
+shared block's weights are one set reused at every invocation, but each
+invocation keeps its own KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import decode_attention
+from repro.models.layers import (
+    apply_norm,
+    cast_params_for_compute,
+    unroll_arg,
+    dense_init,
+    embed_init,
+    rmsnorm_init,
+    stack_init,
+)
+from repro.models.ssm import (
+    apply_mamba_layer,
+    decode_mamba_layer,
+    init_mamba_cache,
+    init_mamba_layer,
+)
+from repro.models import transformer as tfm
+
+
+def segment_sizes(cfg: ArchConfig) -> list[int]:
+    """Mamba-layer counts between shared-attention invocations."""
+    k = cfg.attn_every
+    n = cfg.n_layers
+    sizes = [k] * (n // k)
+    if n % k:
+        sizes.append(n % k)
+    return sizes
+
+
+def n_attn_invocations(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_hybrid(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype_jnp()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": embed_init(k1, cfg.vocab_padded, cfg.d_model, dtype),
+        "mamba": stack_init(lambda k: init_mamba_layer(k, cfg), k2, cfg.n_layers),
+        "shared": tfm.init_layer(k3, cfg),  # one attention+MLP block, reused
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "head": dense_init(k4, cfg.d_model, cfg.vocab_padded, dtype),
+    }
+
+
+def _slice_stack(stacked, lo: int, hi: int):
+    return jax.tree.map(lambda x: x[lo:hi], stacked)
+
+
+def hybrid_forward(params, tokens, cfg: ArchConfig, *, attn_mode="blocked",
+                   remat: bool = False):
+    compute = cfg.compute_dtype_jnp()
+    b, l = tokens.shape
+    h = params["embed"][tokens].astype(compute)
+    params = cast_params_for_compute(params, compute)
+    positions = jnp.arange(l)
+    sizes = segment_sizes(cfg)
+    n_inv = n_attn_invocations(cfg)
+
+    def mamba_body(h, layer_p):
+        fn = lambda p_, h_: apply_mamba_layer(p_, h_, cfg=cfg)  # noqa: E731
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(layer_p, h), None
+
+    lo = 0
+    inv = 0
+    for size in sizes:
+        seg = _slice_stack(params["mamba"], lo, lo + size)
+        h, _ = jax.lax.scan(mamba_body, h, seg,
+                            unroll=unroll_arg(cfg.scan_unroll))
+        lo += size
+        if inv < n_inv and lo == (inv + 1) * cfg.attn_every:
+            attn_fn = lambda p_, h_: tfm.apply_layer(  # noqa: E731
+                p_, h_, cfg=cfg, positions=positions, mode=attn_mode,
+                window_st=cfg.window, dyn_window=None,
+            )[0]
+            if remat:
+                attn_fn = jax.checkpoint(attn_fn)
+            h = attn_fn(params["shared"], h)
+            inv += 1
+    h = apply_norm("rmsnorm", params["ln_f"], h)
+    logits = h @ params["head"]
+    return logits, jnp.zeros((), jnp.float32), None
+
+
+def hybrid_prefill(params, tokens, cfg: ArchConfig, cache, *,
+                   attn_mode="blocked"):
+    """Run the prompt through the hybrid stack capturing per-layer SSD
+    states, conv tails, and shared-attention K/V at each invocation."""
+    compute = cfg.compute_dtype_jnp()
+    b, l = tokens.shape
+    h = params["embed"][tokens].astype(compute)
+    params = cast_params_for_compute(params, compute)
+    positions = jnp.arange(l)
+    sizes = segment_sizes(cfg)
+    n_inv = n_attn_invocations(cfg)
+
+    def mamba_body(h, layer_p):
+        h, st = apply_mamba_layer(layer_p, h, cfg=cfg, return_state=True)
+        return h, st
+
+    ssm_states, conv_states, ks, vs = [], [], [], []
+    lo = 0
+    inv = 0
+    for size in sizes:
+        seg = _slice_stack(params["mamba"], lo, lo + size)
+        h, st = jax.lax.scan(mamba_body, h, seg,
+                             unroll=unroll_arg(cfg.scan_unroll))
+        ssm_states.append(st["ssm"])
+        conv_states.append(st["conv"])
+        lo += size
+        if inv < n_inv and lo == (inv + 1) * cfg.attn_every:
+            h, (k, v), _ = tfm.apply_layer(
+                params["shared"], h, cfg=cfg, positions=positions,
+                mode=attn_mode, window_st=cfg.window, dyn_window=None,
+            )
+            ks.append(k)
+            vs.append(v)
+            inv += 1
+
+    max_len = cache["attn_k"].shape[2]
+    pad = max_len - l
+    k_stack = jnp.pad(jnp.stack(ks, 0), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v_stack = jnp.pad(jnp.stack(vs, 0), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return {
+        "ssm": jnp.concatenate(ssm_states, 0).astype(cache["ssm"].dtype),
+        "conv": jnp.concatenate(conv_states, 0).astype(cache["conv"].dtype),
+        "attn_k": k_stack.astype(cache["attn_k"].dtype),
+        "attn_v": v_stack.astype(cache["attn_v"].dtype),
+        "pos": jnp.asarray(l, jnp.int32),
+    }
+
+
+def hybrid_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype_jnp()
+    n_inv = n_attn_invocations(cfg)
+    cache = init_mamba_cache(cfg, cfg.n_layers, batch)
+    cache["attn_k"] = jnp.zeros(
+        (n_inv, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype
+    )
+    cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def hybrid_decode_step(params, cache, tokens, cfg: ArchConfig):
+    compute = cfg.compute_dtype_jnp()
+    h = params["embed"][tokens].astype(compute)
+    params = cast_params_for_compute(params, compute)
+    cur_pos = cache["pos"]
+    sizes = segment_sizes(cfg)
+    n_inv = n_attn_invocations(cfg)
+
+    def mamba_body(h, xs):
+        layer_p, layer_cache = xs
+        h, new_c = decode_mamba_layer(layer_p, h, layer_cache, cfg=cfg)
+        return h, new_c
+
+    new_ssm = []
+    new_conv = []
+    new_k = []
+    new_v = []
+    lo = 0
+    inv = 0
+    for size in sizes:
+        seg_p = _slice_stack(params["mamba"], lo, lo + size)
+        seg_c = {
+            "ssm": cache["ssm"][lo : lo + size],
+            "conv": cache["conv"][lo : lo + size],
+        }
+        h, upd = jax.lax.scan(mamba_body, h, (seg_p, seg_c),
+                              unroll=unroll_arg(cfg.scan_unroll))
+        new_ssm.append(upd["ssm"])
+        new_conv.append(upd["conv"])
+        lo += size
+        if inv < n_inv and lo == (inv + 1) * cfg.attn_every:
+            h, kc, vc = _shared_attn_decode(
+                params["shared"], h, cache["attn_k"][inv], cache["attn_v"][inv],
+                cur_pos, cfg,
+            )
+            new_k.append(kc)
+            new_v.append(vc)
+            inv += 1
+
+    h = apply_norm("rmsnorm", params["ln_f"], h)
+    logits = h @ params["head"]
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "attn_k": jnp.stack(new_k, axis=0) if new_k else cache["attn_k"],
+        "attn_v": jnp.stack(new_v, axis=0) if new_v else cache["attn_v"],
+        "pos": cur_pos + 1,
+    }
+    return logits, new_cache
+
+
+def _shared_attn_decode(p, h, k_cache, v_cache, cur_pos, cfg: ArchConfig):
+    x = apply_norm(cfg.norm, p["ln1"], h)
+    q, k, v = tfm._project_qkv(p["attn"], x, cfg)
+    pos = cur_pos[None]
+    from repro.models.layers import apply_rope
+
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), cur_pos, axis=1
+    )
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), cur_pos, axis=1
+    )
+    attn_out = decode_attention(q, kc, vc, cur_pos, window=cfg.window)
+    b = attn_out.shape[0]
+    h = h + attn_out.reshape(b, 1, -1) @ p["attn"]["wo"]
+    x2 = apply_norm(cfg.norm, p["ln2"], h)
+    from repro.models.layers import apply_mlp
+
+    return h + apply_mlp(p["mlp"], x2, cfg.act), kc, vc

@@ -1,0 +1,190 @@
+"""Shared neural-net building blocks (functional, pytree params).
+
+Conventions:
+- params are nested dicts of jnp arrays; init_* return params, apply-style
+  functions take (params, inputs, cfg-ish kwargs).
+- all matmuls run in ``compute_dtype`` (bf16 by default) with fp32
+  accumulation where it matters (norms, softmax, losses).
+- layer stacks are built with vmap-init + lax.scan-apply: every layer leaf
+  carries a leading (L,) axis. This keeps HLO size O(1) in depth — essential
+  for compiling 48-layer archs x 40 dry-run combinations.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Init = jax.nn.initializers
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    std = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_np(x, eps: float = 1e-5):
+    """Non-parametric LayerNorm (OLMo): no scale, no bias [arXiv:2402.00838]."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(kind: str, d: int, dtype):
+    """Returns (init_params_or_None, apply)."""
+    if kind == "rmsnorm":
+        return rmsnorm_init(d, dtype), lambda p, x: rmsnorm(p, x)
+    if kind == "layernorm_np":
+        return {}, lambda p, x: layernorm_np(x)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def apply_norm(kind: str, params, x):
+    if kind == "rmsnorm":
+        return rmsnorm(params, x)
+    if kind == "layernorm_np":
+        return layernorm_np(x)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., L, H, hd); positions: broadcastable to (..., L)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,L,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP blocks
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "w_out": dense_init(k2, d_ff, d_model, dtype),
+    }
+    if act == "silu":  # swiglu: gate projection
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(params, x, act: str):
+    h = x @ params["w_in"]
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ params["w_out"]
+
+
+# --------------------------------------------------------------------------
+# Stacked-layer helpers (vmap init, scan apply)
+# --------------------------------------------------------------------------
+
+
+def stack_init(init_one: Callable, key, n_layers: int):
+    """vmap a per-layer initializer over layer keys -> stacked params."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def scan_layers(apply_one: Callable, stacked_params, x, *carry_free_args):
+    """Run x through L stacked layers with lax.scan.
+
+    ``apply_one(layer_params, x, *args) -> x``; layers must be homogeneous.
+    """
+
+    def body(h, layer_params):
+        return apply_one(layer_params, h, *carry_free_args), None
+
+    out, _ = jax.lax.scan(body, x, stacked_params)
+    return out
+
+
+def scan_layers_with_cache(apply_one: Callable, stacked_params, x, cache, *args):
+    """Like scan_layers but threads a per-layer cache pytree (leading L axis)
+    through the scan and returns the updated stack."""
+
+    def body(h, inputs):
+        layer_params, layer_cache = inputs
+        h, new_cache = apply_one(layer_params, h, layer_cache, *args)
+        return h, new_cache
+
+    out, new_caches = jax.lax.scan(body, x, (stacked_params, cache))
+    return out, new_caches
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-position cross entropy, fp32. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def next_token_loss(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE per sequence. logits (B, L, V), tokens (B, L)."""
+    per_pos = softmax_xent(logits[:, :-1], tokens[:, 1:])
+    return jnp.mean(per_pos, axis=-1)
+
+
+def cast_params_for_compute(params: dict, compute, *, skip=("embed",)) -> dict:
+    """Cast float params to the compute dtype at the forward boundary
+    (MaxText-style: fp32 master store, bf16 compute). ``skip`` keys (embed
+    tables) are cast after lookup instead — casting a (V, D) table would
+    materialize a second copy."""
+    import jax as _jax
+
+    def cast(x):
+        return x.astype(compute) if jnp.issubdtype(x.dtype, jnp.floating) else x
+
+    return {
+        k: (v if k in skip else _jax.tree.map(cast, v))
+        for k, v in params.items()
+    }
+
+
+def unroll_arg(v: int):
+    """ArchConfig unroll field -> lax.scan unroll argument (0 = full)."""
+    return True if v == 0 else v

@@ -1,0 +1,241 @@
+"""Uniform model bundle: one construction point for all assigned archs.
+
+The FL layer (core/, baselines/) treats models as opaque pytrees + loss
+callables; the launch layer needs init/forward/decode with fixed signatures.
+This registry adapts every family to:
+
+    init(key) -> params
+    loss(params, batch) -> scalar                  (training objective)
+    per_example_loss(params, batch) -> (B,)        (FedSPD clustering step)
+    forward(params, batch) -> (logits, aux)        (prefill/eval)
+    init_cache(batch, max_len) -> cache
+    prefill(params, batch, cache) -> cache         (fills KV / cross-KV)
+    decode_step(params, cache, tokens) -> (logits, cache)
+
+batch: {"tokens": (B, L)} (+ {"frames": (B, T, D)} for audio).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, ssm, transformer as tfm
+from repro.models.layers import next_token_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    per_example_loss: Callable
+    forward: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def _masked_next_token_loss(logits, tokens, cfg):
+    logits = tfm._mask_pad_vocab(logits, cfg)
+    return next_token_loss(logits, tokens)
+
+
+def build_model(
+    cfg: ArchConfig, *, attn_mode: str = "blocked", remat: bool = False
+) -> ModelBundle:
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def init(key):
+            return tfm.init_transformer(key, cfg)
+
+        def forward(params, batch):
+            logits, aux, _ = tfm.forward(
+                params, batch["tokens"], cfg, attn_mode=attn_mode, remat=remat
+            )
+            return logits, aux
+
+        def loss(params, batch):
+            logits, aux = forward(params, batch)
+            per_seq = _masked_next_token_loss(logits, batch["tokens"], cfg)
+            return jnp.mean(per_seq) + 0.01 * aux
+
+        def per_example_loss(params, batch):
+            logits, _ = forward(params, batch)
+            return _masked_next_token_loss(logits, batch["tokens"], cfg)
+
+        def init_cache(batch, max_len):
+            return tfm.init_cache(cfg, batch, max_len)
+
+        def prefill(params, batch, cache):
+            logits, _, new_cache = tfm.forward(
+                params, batch["tokens"], cfg, attn_mode=attn_mode,
+                return_cache=True,
+            )
+            del logits
+            lc = cache["k"].shape[2]
+            pad = lc - new_cache["k"].shape[2]
+            k = jnp.pad(new_cache["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(new_cache["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            return {"k": k.astype(cache["k"].dtype),
+                    "v": v.astype(cache["v"].dtype),
+                    "pos": new_cache["pos"]}
+
+        def decode_step(params, cache, tokens):
+            return tfm.decode_step(params, cache, tokens, cfg)
+
+    elif fam == "ssm":
+        def init(key):
+            return ssm.init_ssm_model(key, cfg)
+
+        def forward(params, batch):
+            logits, aux, _ = ssm.ssm_forward(
+                params, batch["tokens"], cfg, remat=remat
+            )
+            return logits, aux
+
+        def loss(params, batch):
+            logits, _ = forward(params, batch)
+            return jnp.mean(_masked_next_token_loss(logits, batch["tokens"], cfg))
+
+        def per_example_loss(params, batch):
+            logits, _ = forward(params, batch)
+            return _masked_next_token_loss(logits, batch["tokens"], cfg)
+
+        def init_cache(batch, max_len):
+            return ssm.ssm_init_cache(cfg, batch, max_len)
+
+        def prefill(params, batch, cache):
+            del cache  # SSM cache is constant-size; prefill rebuilds it
+            return ssm.ssm_prefill(params, batch["tokens"], cfg)
+
+        def decode_step(params, cache, tokens):
+            return ssm.ssm_decode_step(params, cache, tokens, cfg)
+
+    elif fam == "hybrid":
+        def init(key):
+            return hybrid.init_hybrid(key, cfg)
+
+        def forward(params, batch):
+            logits, aux, _ = hybrid.hybrid_forward(
+                params, batch["tokens"], cfg, attn_mode=attn_mode, remat=remat
+            )
+            return logits, aux
+
+        def loss(params, batch):
+            logits, _ = forward(params, batch)
+            return jnp.mean(_masked_next_token_loss(logits, batch["tokens"], cfg))
+
+        def per_example_loss(params, batch):
+            logits, _ = forward(params, batch)
+            return _masked_next_token_loss(logits, batch["tokens"], cfg)
+
+        def init_cache(batch, max_len):
+            return hybrid.hybrid_init_cache(cfg, batch, max_len)
+
+        def prefill(params, batch, cache):
+            return hybrid.hybrid_prefill(
+                params, batch["tokens"], cfg, cache, attn_mode=attn_mode
+            )
+
+        def decode_step(params, cache, tokens):
+            return hybrid.hybrid_decode_step(params, cache, tokens, cfg)
+
+    elif fam == "audio":
+        def init(key):
+            return encdec.init_encdec(key, cfg)
+
+        def forward(params, batch):
+            logits, aux, _ = encdec.encdec_forward(
+                params, batch["tokens"], cfg, frames=batch["frames"],
+                attn_mode=attn_mode, remat=remat,
+            )
+            return logits, aux
+
+        def loss(params, batch):
+            logits, _ = forward(params, batch)
+            return jnp.mean(_masked_next_token_loss(logits, batch["tokens"], cfg))
+
+        def per_example_loss(params, batch):
+            logits, _ = forward(params, batch)
+            return _masked_next_token_loss(logits, batch["tokens"], cfg)
+
+        def init_cache(batch, max_len):
+            return encdec.encdec_init_cache(cfg, batch, max_len)
+
+        def prefill(params, batch, cache):
+            return encdec.encdec_prefill_cross(
+                params, batch["frames"], cfg, cache, attn_mode=attn_mode
+            )
+
+        def decode_step(params, cache, tokens):
+            return encdec.encdec_decode_step(params, cache, tokens, cfg)
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    return ModelBundle(
+        cfg=cfg,
+        init=init,
+        loss=loss,
+        per_example_loss=per_example_loss,
+        forward=forward,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )
+
+
+def count_params(cfg: ArchConfig) -> int:
+    """Analytic parameter count (no allocation) for roofline MODEL_FLOPS."""
+    d, v = cfg.d_model, cfg.vocab_padded
+    hd = cfg.head_dim
+    total = v * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * v  # head
+    if cfg.family in ("dense", "moe", "vlm"):
+        attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+        if cfg.n_experts > 0:
+            n_mats = 3 if cfg.act == "silu" else 2
+            ffn = d * cfg.n_experts + cfg.n_experts * n_mats * d * cfg.d_ff
+        else:
+            n_mats = 3 if cfg.act == "silu" else 2
+            ffn = n_mats * d * cfg.d_ff
+        total += cfg.n_layers * (attn + ffn)
+    elif cfg.family == "ssm":
+        total += cfg.n_layers * _mamba_layer_params(cfg)
+    elif cfg.family == "hybrid":
+        total += cfg.n_layers * _mamba_layer_params(cfg)
+        attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+        n_mats = 3 if cfg.act == "silu" else 2
+        total += attn + n_mats * d * cfg.d_ff  # one shared block
+    elif cfg.family == "audio":
+        d_enc = cfg.encoder_d_model or d
+        attn_e = 4 * d_enc * cfg.n_heads * hd
+        enc = cfg.encoder_layers * (attn_e + 2 * d_enc * cfg.d_ff)
+        attn_d = 4 * d * cfg.n_heads * hd
+        dec = cfg.n_layers * (2 * attn_d + 2 * d * cfg.d_ff)
+        total += enc + dec
+    return total
+
+
+def _mamba_layer_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+    return d * d_in_proj + cfg.ssm_conv * conv_dim + cfg.d_inner * d
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Active (per-token) parameter count — MoE counts only top_k experts."""
+    if cfg.n_experts == 0:
+        return count_params(cfg)
+    total = count_params(cfg)
+    n_mats = 3 if cfg.act == "silu" else 2
+    expert_p = n_mats * cfg.d_model * cfg.d_ff
+    total -= cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert_p
+    return total

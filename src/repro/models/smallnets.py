@@ -1,0 +1,111 @@
+"""Paper-scale client models (the FedSPD paper uses small CNN/MLP models on
+MNIST/CIFAR; our offline analogue datasets are vector-valued, so the faithful
+counterpart is an MLP — plus a tiny 1D-conv net mirroring the paper's CNN
+structure for the "more complex model" ablations)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, softmax_xent
+
+
+def init_mlp_classifier(key, dim: int, n_classes: int, hidden: tuple = (128, 64)):
+    sizes = (dim,) + hidden + (n_classes,)
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"layer{i}": {
+            "w": dense_init(keys[i], sizes[i], sizes[i + 1], jnp.float32),
+            "b": jnp.zeros((sizes[i + 1],), jnp.float32),
+        }
+        for i in range(len(sizes) - 1)
+    }
+
+
+def apply_mlp_classifier(params, x):
+    n = len(params)
+    h = x
+    for i in range(n):
+        p = params[f"layer{i}"]
+        h = h @ p["w"] + p["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def init_conv1d_classifier(key, dim: int, n_classes: int, channels: int = 16):
+    """Tiny conv net: treat the feature vector as a 1-D signal; two conv
+    stages + pooling + fc — the structural analogue of the paper's 2-conv
+    CNN (Appendix B.1.1)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "conv1": (jax.random.normal(k1, (5, 1, channels)) * 0.2),
+        "conv2": (jax.random.normal(k2, (5, channels, channels)) * 0.2),
+        "fc1": {
+            "w": dense_init(k3, (dim // 4) * channels, 50, jnp.float32),
+            "b": jnp.zeros((50,), jnp.float32),
+        },
+        "fc2": {
+            "w": dense_init(k4, 50, n_classes, jnp.float32),
+            "b": jnp.zeros((n_classes,), jnp.float32),
+        },
+    }
+
+
+def apply_conv1d_classifier(params, x):
+    b, d = x.shape
+    h = x[:, :, None]  # (B, D, 1)
+    for name in ("conv1", "conv2"):
+        h = jax.lax.conv_general_dilated(
+            h, params[name], window_strides=(1,), padding="SAME",
+            dimension_numbers=("NWC", "WIO", "NWC"),
+        )
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 1), (1, 2, 1), "VALID"
+        )
+    h = h.reshape(b, -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def init_linear_classifier(key, dim: int, n_classes: int):
+    k1, _ = jax.random.split(key)
+    return {
+        "w": (jax.random.normal(k1, (dim, n_classes)) / jnp.sqrt(dim)),
+        "b": jnp.zeros((n_classes,)),
+    }
+
+
+def apply_linear_classifier(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def make_classifier(kind: str, key, dim: int, n_classes: int):
+    """Returns (params, apply, loss, per_example_loss, accuracy)."""
+    if kind == "mlp":
+        params = init_mlp_classifier(key, dim, n_classes)
+        apply = apply_mlp_classifier
+    elif kind == "linear":
+        params = init_linear_classifier(key, dim, n_classes)
+        apply = apply_linear_classifier
+    elif kind == "conv":
+        params = init_conv1d_classifier(key, dim, n_classes)
+        apply = apply_conv1d_classifier
+    else:
+        raise ValueError(kind)
+
+    def per_example_loss(p, batch):
+        logits = apply(p, batch["x"])
+        return softmax_xent(logits, batch["y"])
+
+    def loss(p, batch):
+        return jnp.mean(per_example_loss(p, batch))
+
+    def accuracy(p, batch):
+        logits = apply(p, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+    return params, apply, loss, per_example_loss, accuracy

@@ -1,0 +1,333 @@
+"""Mamba2 (SSD — state-space duality) blocks and the pure-SSM model.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: the sequence is
+split into chunks of Q tokens; within a chunk the recurrence is evaluated in
+its "attention-like" quadratic dual form (MXU-friendly matmuls), and chunk
+states are carried by a lax.scan — O(L·Q) work, O(L/Q) sequential depth.
+Decode keeps a constant-size (H, P, N) state per layer: the long_500k shape
+is naturally sub-quadratic here.
+
+Layer layout follows the Mamba2 reference: in_proj -> (z, x, B, C, dt);
+short causal depthwise conv over (x, B, C); SSD; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (
+    apply_norm,
+    cast_params_for_compute,
+    unroll_arg,
+    dense_init,
+    embed_init,
+    next_token_loss,
+    rmsnorm_init,
+    stack_init,
+)
+
+NEG_INF = -1e30
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] for i>=j,
+    -inf above the diagonal."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,   # (B, L, H, P) inputs (pre-multiplied by nothing)
+    dt: jnp.ndarray,  # (B, L, H) positive step sizes
+    A: jnp.ndarray,   # (H,) negative decay rates
+    Bm: jnp.ndarray,  # (B, L, G, N)
+    Cm: jnp.ndarray,  # (B, L, G, N)
+    chunk: int,
+    initial_state: jnp.ndarray | None = None,  # (B, H, P, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    c = l // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(b, c, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, c, chunk, h).astype(f32)
+    Bc = Bm.reshape(b, c, chunk, g, n).astype(f32)
+    Cc = Cm.reshape(b, c, chunk, g, n).astype(f32)
+
+    dA = dtc * A.astype(f32)  # (b, c, q, h)
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # --- intra-chunk (diagonal blocks), dual quadratic form ---
+    Lmat = jnp.exp(_segsum(jnp.swapaxes(dA, 2, 3)))  # (b, c, h, q, q)
+    # scores over state dim, broadcasting groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b, c, q, h, n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)  # (b,c,h,q,k)
+    xdt = xc * dtc[..., None]  # (b, c, q, h, p)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * Lmat, xdt)
+
+    # --- chunk states ---
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)  # (b, c, q, h)
+    states = jnp.einsum(
+        "bcqhn,bcqh,bcqhp->bchpn", Bh, decay_states * dtc, xc
+    )  # (b, c, h, p, n)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b, c, h)
+    s0 = (
+        jnp.zeros((b, h, p, n), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def scan_body(s, inp):
+        st, dec = inp  # st (b,h,p,n), dec (b,h)
+        s_new = s * dec[:, :, None, None] + st
+        return s_new, s  # emit the state *entering* this chunk
+
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    final_state, prev_states = jax.lax.scan(scan_body, s0, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b, c, h, p, n)
+
+    # --- off-diagonal contribution from carried states ---
+    state_decay_in = jnp.exp(cum)  # (b, c, q, h)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, state_decay_in
+    )
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # (B, H, P, N)
+    x: jnp.ndarray,      # (B, H, P)
+    dt: jnp.ndarray,     # (B, H)
+    A: jnp.ndarray,      # (H,)
+    Bm: jnp.ndarray,     # (B, G, N)
+    Cm: jnp.ndarray,     # (B, G, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence. Returns (y (B, H, P), new_state)."""
+    f32 = jnp.float32
+    h = x.shape[1]
+    g = Bm.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(f32)  # (B, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(f32)
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))  # (B, H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt.astype(f32), x.astype(f32), Bh)
+    new_state = state.astype(f32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 layer
+# --------------------------------------------------------------------------
+
+
+def _conv_dim(cfg: ArchConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba_layer(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype_jnp()
+    h = cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + h
+    # dt bias: softplus^-1 of dt ~ U[1e-3, 1e-1]
+    dt0 = jnp.exp(
+        jax.random.uniform(ks[3], (h,)) * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3)
+    )
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "ln": rmsnorm_init(cfg.d_model, dtype),
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, _conv_dim(cfg))) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (h,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_ln": rmsnorm_init(cfg.d_inner, dtype),
+        "out_proj": dense_init(ks[4], cfg.d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_depthwise_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """u: (B, L, C); w: (K, C) — causal depthwise conv via shifted adds
+    (K is tiny: 4)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        shift = k - 1 - i
+        shifted = jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _split_in_proj(zxbcdt, cfg: ArchConfig):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + _conv_dim(cfg)]
+    dt = zxbcdt[..., di + _conv_dim(cfg) :]
+    return z, xbc, dt
+
+
+def apply_mamba_layer(p, hidden, *, cfg: ArchConfig, return_state: bool = False):
+    """Full-sequence Mamba2 block with residual. hidden: (B, L, D).
+
+    ``return_state=True`` additionally returns the decode cache entry for
+    this layer: the final SSD state and the last (K-1) pre-conv tokens —
+    used by the prefill path."""
+    b, l, _ = hidden.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    x_in = apply_norm("rmsnorm", p["ln"], hidden)
+    zxbcdt = x_in @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_in_proj(zxbcdt, cfg)
+    xbc = _causal_depthwise_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    x = xbc[..., :di].reshape(b, l, h, cfg.ssm_headdim)
+    Bm = xbc[..., di : di + g * n].reshape(b, l, g, n)
+    Cm = xbc[..., di + g * n :].reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, L, H)
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(x, dt, A, Bm, Cm, chunk=min(cfg.ssm_chunk, l))
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, l, di)
+    y = apply_norm("rmsnorm", p["gate_ln"], y * jax.nn.silu(z))
+    out = hidden + y @ p["out_proj"]
+    if return_state:
+        k = p["conv_w"].shape[0]
+        state = {
+            "ssm": final_state,
+            "conv": xbc_raw[:, l - (k - 1):, :],
+        }
+        return out, state
+    return out
+
+
+def init_mamba_cache(cfg: ArchConfig, n_layers: int, batch: int, dtype=None):
+    dtype = dtype or jnp.float32
+    return {
+        "ssm": jnp.zeros(
+            (n_layers, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), dtype
+        ),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, _conv_dim(cfg)),
+                          cfg.compute_dtype_jnp()),
+    }
+
+
+def decode_mamba_layer(p, hidden, layer_cache, *, cfg: ArchConfig):
+    """Single-token Mamba2 step. hidden (B, 1, D)."""
+    b = hidden.shape[0]
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    x_in = apply_norm("rmsnorm", p["ln"], hidden)
+    zxbcdt = (x_in @ p["in_proj"])[:, 0]  # (B, d_in_proj)
+    z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
+    # conv over (cached window ++ current)
+    win = jnp.concatenate([layer_cache["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv = jax.nn.silu(
+        jnp.sum(win * p["conv_w"][None], axis=1) + p["conv_b"]
+    )
+    new_conv = win[:, 1:]
+    x = conv[..., :di].reshape(b, h, cfg.ssm_headdim)
+    Bm = conv[..., di : di + g * n].reshape(b, g, n)
+    Cm = conv[..., di + g * n :].reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ssd_decode_step(layer_cache["ssm"], x, dt, A, Bm, Cm)
+    y = y + x * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, 1, di)
+    y = apply_norm("rmsnorm", p["gate_ln"], y * jax.nn.silu(z[:, None, :]))
+    return hidden + y @ p["out_proj"], {"ssm": new_state, "conv": new_conv}
+
+
+# --------------------------------------------------------------------------
+# Pure-SSM model (mamba2-370m)
+# --------------------------------------------------------------------------
+
+
+def init_ssm_model(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype_jnp()
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(k1, cfg.vocab_padded, cfg.d_model, dtype),
+        "layers": stack_init(lambda k: init_mamba_layer(k, cfg), k2, cfg.n_layers),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "head": dense_init(k3, cfg.d_model, cfg.vocab_padded, dtype),
+    }
+
+
+def ssm_forward(params, tokens, cfg: ArchConfig, *, remat: bool = False):
+    compute = cfg.compute_dtype_jnp()
+    h = params["embed"][tokens].astype(compute)
+    params = cast_params_for_compute(params, compute)
+
+    def body(h, layer_p):
+        fn = apply_mamba_layer
+        if remat:
+            fn = jax.checkpoint(lambda p_, h_: apply_mamba_layer(p_, h_, cfg=cfg))
+            return fn(layer_p, h), None
+        return fn(layer_p, h, cfg=cfg), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"],
+                        unroll=unroll_arg(cfg.scan_unroll))
+    h = apply_norm("rmsnorm", params["ln_f"], h)
+    logits = h @ params["head"]
+    return logits, jnp.zeros((), jnp.float32), None
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    del max_len  # constant-size state: the whole point
+    cache = init_mamba_cache(cfg, cfg.n_layers, batch, dtype)
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def ssm_prefill(params, tokens, cfg: ArchConfig):
+    """Run the chunked scan over the prompt, capturing per-layer decode
+    state (SSD state + conv tail). Returns a filled cache."""
+    compute = cfg.compute_dtype_jnp()
+    h = params["embed"][tokens].astype(compute)
+    params = cast_params_for_compute(params, compute)
+
+    def body(h, layer_p):
+        h, st = apply_mamba_layer(layer_p, h, cfg=cfg, return_state=True)
+        return h, st
+
+    _, states = jax.lax.scan(body, h, params["layers"],
+                             unroll=unroll_arg(cfg.scan_unroll))
+    return {
+        "ssm": states["ssm"].astype(jnp.float32),
+        "conv": states["conv"].astype(compute),
+        "pos": jnp.asarray(tokens.shape[1], jnp.int32),
+    }
+
+
+def ssm_decode_step(params, cache, tokens, cfg: ArchConfig):
+    compute = cfg.compute_dtype_jnp()
+    h = params["embed"][tokens].astype(compute)
+    params = cast_params_for_compute(params, compute)
+
+    def body(h, xs):
+        layer_p, layer_cache = xs
+        h, new_c = decode_mamba_layer(layer_p, h, layer_cache, cfg=cfg)
+        return h, new_c
+
+    h, new_caches = jax.lax.scan(
+        body, h, (params["layers"], {"ssm": cache["ssm"], "conv": cache["conv"]}),
+        unroll=unroll_arg(cfg.scan_unroll),
+    )
+    h = apply_norm("rmsnorm", params["ln_f"], h)
+    logits = h @ params["head"]
+    return logits, {**new_caches, "pos": cache["pos"] + 1}

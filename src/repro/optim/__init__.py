@@ -1,0 +1,14 @@
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_with_warmup,
+    exponential_decay,
+    make_schedule,
+)
+from repro.optim.sgd import (  # noqa: F401
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    make_optimizer,
+    momentum,
+    sgd,
+)

@@ -1,0 +1,46 @@
+"""Learning-rate schedules. The paper uses multiplicative decay per global
+epoch (initial 5e-2, factor 0.80). We also provide cosine + warmup for the
+LLM substrate."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr0: float, decay: float, steps_per_decay: int = 1) -> Schedule:
+    """Paper-faithful: lr0 * decay^(epoch)."""
+
+    def fn(step):
+        e = jnp.asarray(step, jnp.float32) / steps_per_decay
+        return jnp.asarray(lr0, jnp.float32) * jnp.power(decay, jnp.floor(e))
+
+    return fn
+
+
+def cosine_with_warmup(lr0: float, warmup: int, total: int, floor: float = 0.1) -> Schedule:
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr0 * jnp.where(s < warmup, warm, cos)
+
+    return fn
+
+
+def make_schedule(name: str, **kw) -> Schedule:
+    reg = {
+        "constant": constant,
+        "exponential": exponential_decay,
+        "cosine": cosine_with_warmup,
+    }
+    if name not in reg:
+        raise ValueError(f"unknown schedule {name!r}")
+    return reg[name](**kw)

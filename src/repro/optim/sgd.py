@@ -1,0 +1,115 @@
+"""Optimizers.
+
+The paper trains every method with plain SGD and a decayed learning rate
+(Appendix B.1: initial lr 5e-2, decay 0.80). We implement SGD (paper-
+faithful), SGD-momentum, and AdamW (used for the LLM-scale substrate where
+plain SGD would be an unrealistic production choice). All optimizers are
+optax-style (init/update) but self-contained — no external deps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def sgd() -> Optimizer:
+    """Paper-faithful plain SGD: x ← x - η g. Stateless."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        # accumulate the step in fp32, cast ONCE at the end — bf16 param
+        # stores must not be promoted (scan carries require stable dtypes)
+        new = jax.tree.map(
+            lambda p, g: (
+                p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+            ).astype(p.dtype),
+            params, grads,
+        )
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype), state, grads)
+        if nesterov:
+            step = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype), new_m, grads)
+        else:
+            step = new_m
+        new_p = jax.tree.map(
+            lambda p, s: (
+                p.astype(jnp.float32) - lr * s.astype(jnp.float32)
+            ).astype(p.dtype),
+            params, step,
+        )
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    class AdamState(NamedTuple):
+        mu: PyTree
+        nu: PyTree
+        count: jax.Array
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(mu=z, nu=jax.tree.map(jnp.zeros_like, z), count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def step(p, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_p = jax.tree.map(step, params, mu, nu)
+        return new_p, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)
+
+
+_REGISTRY = {"sgd": sgd, "momentum": momentum, "adamw": adamw}
+
+
+def make_optimizer(name: str, **kwargs) -> Optimizer:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale.astype(g.dtype)), grads)

@@ -1,0 +1,307 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware required).
+
+compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+memory term     = HLO_bytes / (chips × HBM_bw)
+collective term = collective_bytes / (chips × link_bw)
+
+``compiled.cost_analysis()`` operates on the *partitioned* (per-device)
+module, so its flops/bytes are per-chip; the global figures are × chips and
+the two conventions cancel in the terms above. Collective bytes are NOT in
+cost_analysis — we parse the optimized HLO text and sum the output operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (per-device bytes moved, one row of the
+collective).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%name = bf16[128,4096]{1,0} all-gather(...)`  (also tuple results
+# `(f32[...], f32[...]) all-reduce(...)`)
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes produced by each collective family in the optimized
+    HLO (done-ops of async pairs are skipped; the start op carries shape)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shapes)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    step_kind: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float          # 6·N_active·D (global)
+    useful_ratio: float         # MODEL_FLOPS / global HLO_FLOPs
+    peak_fraction: float        # compute_s / max(term)
+    memory_per_chip: Optional[dict] = None
+    note: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def dominant_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    step_kind: str,
+    mesh_name: str,
+    chips: int,
+    compiled,
+    lowered=None,
+    model_flops: float = 0.0,
+    note: str = "",
+) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    bottleneck = max(terms, key=terms.get)
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                k: int(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+    except Exception:
+        pass
+
+    global_flops = flops * chips
+    dom = max(terms.values())
+    return Roofline(
+        arch=arch, shape=shape, step_kind=step_kind, mesh=mesh_name,
+        chips=chips,
+        flops_per_chip=flops, bytes_per_chip=bytes_acc,
+        coll_bytes_per_chip=float(coll["total"]), coll_breakdown=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / global_flops) if global_flops else 0.0,
+        peak_fraction=(compute_s / dom) if dom > 0 else 0.0,
+        memory_per_chip=mem, note=note,
+    )
+
+
+def model_flops_for(cfg, shape, step_kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode counts one
+    token per request, forward-only shapes use 2·N·D."""
+    from repro.models.registry import active_params
+
+    n_active = active_params(cfg)
+    if cfg.family == "audio":
+        # whisper: prefill runs the ENCODER over 1500 stub frames (+ cross-KV
+        # projections), decode/train run the decoder; approximate per-branch
+        d_enc = cfg.encoder_d_model or cfg.d_model
+        enc_p = cfg.encoder_layers * (4 * d_enc * d_enc + 2 * d_enc * cfg.d_ff)
+        dec_p = n_active - enc_p
+        if step_kind == "prefill":
+            return 2.0 * enc_p * shape.global_batch * cfg.encoder_frames
+        if step_kind == "decode":
+            return 2.0 * dec_p * shape.global_batch
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * dec_p * tokens + 2.0 * enc_p * shape.global_batch * cfg.encoder_frames
+    if step_kind in ("fedspd", "plain"):
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if step_kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    if step_kind == "decode":
+        return 2.0 * n_active * shape.global_batch  # one token each
+    raise ValueError(step_kind)
+
+
+def format_table(rows: list[Roofline]) -> str:
+    hdr = (
+        f"{'arch':24s} {'shape':12s} {'step':8s} {'mesh':10s} "
+        f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+        f"{'bottleneck':>10s} {'useful':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.step_kind:8s} {r.mesh:10s} "
+            f"{r.compute_s:10.3e} {r.memory_s:10.3e} {r.collective_s:10.3e} "
+            f"{r.bottleneck:>10s} {r.useful_ratio:7.3f}"
+        )
+    return "\n".join(lines)
+
+
+def save_rows(rows: list[Roofline], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([r.to_json() for r in rows], f, indent=1)
+
+
+# --------------------------------------------------------------------------
+# Two-point trip-count correction
+# --------------------------------------------------------------------------
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+# count, so a scan-over-layers program under-reports flops/bytes and any
+# collectives inside the loop. The dry-run therefore compiles each case
+# twice — scan_unroll=1 and scan_unroll=2 (one extra layer body per scan
+# site) — and extrapolates:
+#
+#   exact = m1 + r · (m2 - m1),   r = (Σ_site trips - n_sites) / n_sites
+#
+# which is exact when all scan sites have identical per-iteration cost
+# (true here: stacked-parameter layer scans; hybrid's segment scans all
+# iterate the same Mamba2 block; whisper's encoder/decoder scans share a
+# trip count). The attention pair scan is fully unrolled in both compiles
+# (exact), and the SSD inter-chunk scan body is a negligible state
+# multiply-add (counted once; error < 0.1%).
+
+
+def scan_trip_ratio(cfg) -> float:
+    """r for the two-point correction, derived from the arch's scan sites."""
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import segment_sizes
+
+        sizes = segment_sizes(cfg)
+        return (sum(sizes) - len(sizes)) / len(sizes)
+    if cfg.family == "audio":
+        # sites: encoder scan (enc_layers) + decoder scan (n_layers)
+        total = cfg.encoder_layers + cfg.n_layers
+        return (total - 2) / 2
+    return float(cfg.n_layers - 1)
+
+
+def two_point(v1: float, v2: float, r: float) -> float:
+    return max(v1, v1 + r * (v2 - v1))
+
+
+def analyze_two_point(
+    *,
+    arch: str,
+    shape: str,
+    step_kind: str,
+    mesh_name: str,
+    chips: int,
+    compiled1,
+    compiled2,
+    ratio: float,
+    model_flops: float = 0.0,
+    note: str = "",
+) -> Roofline:
+    c1 = compiled1.cost_analysis() or {}
+    c2 = compiled2.cost_analysis() or {}
+    flops = two_point(float(c1.get("flops", 0.0)),
+                      float(c2.get("flops", 0.0)), ratio)
+    bytes_acc = two_point(float(c1.get("bytes accessed", 0.0)),
+                          float(c2.get("bytes accessed", 0.0)), ratio)
+    k1 = collective_bytes(compiled1.as_text())
+    k2 = collective_bytes(compiled2.as_text())
+    coll = {
+        k: two_point(float(k1[k]), float(k2[k]), ratio)
+        for k in (*_COLLECTIVES, "total")
+    }
+    coll["count"] = k1["count"]
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mem = None
+    try:
+        ma = compiled1.memory_analysis()
+        if ma is not None:
+            mem = {
+                k: int(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+    except Exception:
+        pass
+
+    global_flops = flops * chips
+    dom = max(terms.values())
+    return Roofline(
+        arch=arch, shape=shape, step_kind=step_kind, mesh=mesh_name,
+        chips=chips, flops_per_chip=flops, bytes_per_chip=bytes_acc,
+        coll_bytes_per_chip=float(coll["total"]), coll_breakdown=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=(model_flops / global_flops) if global_flops else 0.0,
+        peak_fraction=(compute_s / dom) if dom > 0 else 0.0,
+        memory_per_chip=mem, note=note,
+    )

@@ -1,0 +1,132 @@
+"""Pytree utilities shared across the framework.
+
+Everything here is shape-polymorphic and jit-safe unless noted. FedSPD
+treats models as opaque pytrees; these helpers implement the linear-algebra
+view of a pytree (flatten to a vector, weighted sums, norms) that the
+paper's matrix notation (C_s in R^{N x X}) relies on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_map(f: Callable, *trees: PyTree) -> PyTree:
+    return jax.tree.map(f, *trees)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, alpha) -> PyTree:
+    return jax.tree.map(lambda x: x * alpha, tree)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_weighted_sum(trees: PyTree, weights: jax.Array) -> PyTree:
+    """Weighted sum over the *leading* axis of every leaf.
+
+    ``trees`` leaves have shape (K, ...); ``weights`` has shape (K,).
+    Used for the final personalization x_i = sum_s u_{i,s} c_{i,s} (Eq. 2).
+    """
+    def ws(leaf):
+        w = weights.astype(leaf.dtype).reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(w * leaf, axis=0)
+
+    return jax.tree.map(ws, trees)
+
+
+def tree_vdot(a: PyTree, b: PyTree) -> jax.Array:
+    parts = jax.tree.map(
+        lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b
+    )
+    return functools.reduce(jnp.add, jax.tree.leaves(parts))
+
+
+def tree_sq_norm(tree: PyTree) -> jax.Array:
+    return tree_vdot(tree, tree)
+
+
+def tree_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def tree_cosine_similarity(a: PyTree, b: PyTree, eps: float = 1e-12) -> jax.Array:
+    """Cosine similarity between two parameter pytrees (flattened view).
+
+    The paper uses cosine similarity of received model parameters to resolve
+    label switching across clients (Section 6, "Client communications").
+    """
+    return tree_vdot(a, b) / (tree_norm(a) * tree_norm(b) + eps)
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalars — static (host int)."""
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return int(
+        sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree))
+    )
+
+
+def tree_ravel(tree: PyTree) -> jax.Array:
+    """Flatten a pytree into a single fp32 vector (jit-safe)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_stack(trees: list) -> PyTree:
+    """Stack a python list of identically-structured pytrees on axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(tree: PyTree, idx) -> PyTree:
+    """Index the leading axis of every leaf."""
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+def tree_dynamic_index(tree: PyTree, idx: jax.Array) -> PyTree:
+    """Traced index into the leading axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
+
+
+def tree_dynamic_update(tree: PyTree, idx: jax.Array, value: PyTree) -> PyTree:
+    """Scatter ``value`` into the leading axis at traced index ``idx``."""
+    return jax.tree.map(lambda x, v: x.at[idx].set(v.astype(x.dtype)), tree, value)
+
+
+def global_shape_summary(tree: PyTree) -> dict:
+    """Host-side structural summary (for DESIGN/EXPERIMENTS reporting)."""
+    return {
+        "num_params": tree_size(tree),
+        "num_bytes": tree_bytes(tree),
+        "num_leaves": len(jax.tree.leaves(tree)),
+    }

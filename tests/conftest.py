@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see the real single CPU device; mesh/sharding tests spawn
+subprocesses with their own --xla_force_host_platform_device_count."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,121 @@
+"""Per-assigned-architecture smoke tests (brief deliverable (f)): reduced
+same-family variant (≤2 layers, d_model ≤ 512, ≤4 experts), one forward +
+one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_ALIASES, INPUT_SHAPES, get_config, get_smoke_config
+from repro.models.registry import active_params, build_model, count_params
+
+ARCHS = sorted(set(ARCH_ALIASES) - {"phi3_5-moe-42b-a6_6b", "h2o-danube-1_8b",
+                                    "zamba2-1_2b"})  # drop alias duplicates
+
+
+def _batch(cfg, key, b=2, l=32):
+    batch = {"tokens": jax.random.randint(key, (b, l), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        d_enc = cfg.encoder_d_model or cfg.d_model
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.encoder_frames or 16, d_enc), jnp.float32) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_variant_limits(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    bundle = build_model(cfg, attn_mode="ref")
+    key = jax.random.PRNGKey(0)
+    params = bundle.init(key)
+    batch = _batch(cfg, key)
+
+    logits, aux = bundle.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_padded)
+    assert not bool(jnp.isnan(logits).any())
+
+    # one SGD train step moves the loss
+    loss0, grads = jax.value_and_grad(bundle.loss)(params, batch)
+    assert np.isfinite(float(loss0))
+    assert not any(np.isnan(np.asarray(g)).any() for g in jax.tree.leaves(grads))
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    loss1 = bundle.loss(params2, batch)
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_path(arch):
+    cfg = get_smoke_config(arch)
+    bundle = build_model(cfg, attn_mode="ref")
+    key = jax.random.PRNGKey(1)
+    params = bundle.init(key)
+    batch = _batch(cfg, key, b=2, l=16)
+    cache = bundle.init_cache(2, 24)
+    cache = bundle.prefill(params, batch, cache)
+    logits, cache2 = bundle.decode_step(params, cache, batch["tokens"][:, :1])
+    assert logits.shape[0] == 2 and logits.shape[1] == 1
+    assert not bool(jnp.isnan(logits).any())
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config must match the published shape (never allocated on
+    CPU — exercised via ShapeDtypeStruct dry-runs only)."""
+    cfg = get_config(arch)
+    expected = {
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    assert cfg.citation
+
+
+def test_moe_configs():
+    assert get_config("olmoe-1b-7b").n_experts == 64
+    assert get_config("olmoe-1b-7b").top_k == 8
+    assert get_config("phi3.5-moe-42b-a6.6b").n_experts == 16
+    assert get_config("phi3.5-moe-42b-a6.6b").top_k == 2
+
+
+def test_param_counts_plausible():
+    """Analytic parameter counts land near the advertised sizes."""
+    expect = {
+        "olmo-1b": (0.9e9, 1.6e9),
+        "mamba2-370m": (0.3e9, 0.5e9),
+        "granite-3-8b": (7e9, 10e9),
+        "chameleon-34b": (30e9, 38e9),
+        "gemma3-1b": (0.7e9, 1.4e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(get_config(arch))
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+    # MoE active < total
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    assert active_params(moe) < 0.3 * count_params(moe)
+
+
+def test_input_shapes_assignment():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)

@@ -1,0 +1,70 @@
+"""Every baseline the paper compares against runs and learns on the mixture
+task (decentralized + centralized variants via the experiment runner)."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.data.synthetic import make_mixture_classification
+from repro.experiments.runner import METHODS, run_method
+
+
+@pytest.fixture(scope="module")
+def setup():
+    exp = PaperExpConfig(
+        n_clients=6, n_per_client=64, rounds=40, tau=3, batch=16,
+        avg_degree=3.0, model="mlp", dim=16, n_classes=4,
+    )
+    data = make_mixture_classification(
+        n_clients=exp.n_clients, n_clusters=2, n_per_client=exp.n_per_client,
+        dim=exp.dim, n_classes=exp.n_classes, seed=3, noise=0.25,
+    )
+    return exp, data
+
+
+# thresholds reflect the paper's observed ordering: personalized methods
+# clearly beat chance; non-personalized FedAvg and pFedMe degrade on highly
+# non-IID mixtures (paper Table 3: DFL-FedAvg ~= local; pFedMe fails to
+# converge on CIFAR-100) — we only require they run, stay finite, and stay
+# at/above chance level.
+THRESH = {
+    "fedspd": 0.55, "fedspd_permute": 0.55, "local": 0.45,
+    "dfl_ifca": 0.3, "dfl_fedem": 0.26, "dfl_fedsoft": 0.26,
+    "dfl_fedavg": 0.24, "cfl_fedavg": 0.24, "dfl_pfedme": 0.24,
+}
+
+
+@pytest.mark.parametrize("method", sorted(THRESH))
+def test_method_runs_and_learns(setup, method):
+    exp, data = setup
+    res = run_method(method, data, exp, seed=0, eval_every=100)
+    assert np.isfinite(res.mean_acc)
+    assert res.mean_acc > THRESH[method], f"{method} acc {res.mean_acc}"
+    assert res.acc_per_client.shape == (exp.n_clients,)
+    if method != "local":
+        assert res.comm_bytes > 0
+    else:
+        assert res.comm_bytes == 0
+
+
+def test_fedspd_beats_nonpersonalized(setup):
+    """The paper's core claim at test scale: FedSPD > DFL-FedAvg."""
+    exp, data = setup
+    a = run_method("fedspd", data, exp, seed=2, eval_every=100)
+    b = run_method("dfl_fedavg", data, exp, seed=2, eval_every=100)
+    assert a.mean_acc > b.mean_acc + 0.1
+
+
+def test_fedspd_permute_comm_not_higher_than_multicast(setup):
+    exp, data = setup
+    a = run_method("fedspd", data, exp, seed=1, eval_every=100)
+    b = run_method("dfl_fedem", data, exp, seed=1, eval_every=100)
+    # paper §6.3: FedEM transmits S models/round; FedSPD one -> ~half comm
+    assert a.comm_bytes < 0.75 * b.comm_bytes
+
+
+def test_all_methods_listed():
+    assert set(METHODS) >= {
+        "fedspd", "dfl_fedavg", "cfl_fedavg", "dfl_fedem", "cfl_fedem",
+        "dfl_ifca", "cfl_ifca", "dfl_fedsoft", "cfl_fedsoft", "dfl_pfedme",
+        "cfl_pfedme", "local",
+    }

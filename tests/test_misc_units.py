@@ -1,0 +1,132 @@
+"""Unit tests: optimizers, schedules, checkpointing, pipeline, topology,
+synthetic data, pytree utils."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import (
+    client_batches,
+    sample_cluster_batch_indices,
+)
+from repro.data.synthetic import make_mixture_classification, make_mixture_tokens
+from repro.graphs.topology import make_graph, pod_aware, rewire, ring
+from repro.optim.sgd import adamw, clip_by_global_norm, momentum, sgd
+from repro.utils.pytree import tree_ravel, tree_sq_norm, tree_weighted_sum
+
+
+def test_optimizers_descend_quadratic():
+    def loss(p):
+        return jnp.sum((p["w"] - 3.0) ** 2)
+
+    for opt in (sgd(), momentum(), adamw()):
+        p = {"w": jnp.zeros((4,))}
+        st = opt.init(p)
+        g = jax.grad(loss)
+        for _ in range(200):
+            p, st = opt.update(g(p), st, p, 0.05)
+        assert float(loss(p)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0), "b": jnp.full((2,), -10.0)}
+    c = clip_by_global_norm(g, 1.0)
+    total = float(jnp.sqrt(tree_sq_norm(c)))
+    assert abs(total - 1.0) < 1e-4
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    path = str(tmp_path / "x.npz")
+    ckpt.save(path, tree, metadata={"round": 7})
+    back, meta = ckpt.restore(path, tree)
+    assert meta["round"] == 7
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.ones((2,))}
+    path = str(tmp_path / "x.npz")
+    ckpt.save(path, tree)
+    with pytest.raises(ValueError):
+        ckpt.restore(path, {"a": jnp.ones((3,))})
+
+
+def test_cluster_conditional_sampling():
+    key = jax.random.PRNGKey(0)
+    z = jnp.array([0, 0, 1, 1, 1, 1, 0, 1])
+    idx = sample_cluster_batch_indices(key, z, jnp.asarray(1), 64)
+    assert set(np.asarray(z)[np.asarray(idx)]) == {1}
+    # empty-cluster fallback: uniform over all points
+    idx2 = sample_cluster_batch_indices(key, jnp.zeros((8,), jnp.int32),
+                                        jnp.asarray(1), 64)
+    assert idx2.shape == (64,)
+
+
+def test_topologies_connected():
+    for kind in ("er", "ba", "rgg", "ring"):
+        g = make_graph(kind, 20, 4.0, seed=0)
+        assert g.is_connected(), kind
+        assert (np.diag(g.adj) == 1).all()  # augmented
+
+
+def test_pod_aware_has_bridges():
+    g = pod_aware(8, 2, seed=0)
+    assert g.is_connected()
+    cross = g.adj[:8, 8:].sum()
+    intra = g.adj[:8, :8].sum() - 8
+    assert 0 < cross < intra  # sparse bridges, dense intra
+
+
+def test_rewire_keeps_connectivity_and_degree():
+    g = make_graph("er", 24, 5.0, seed=1)
+    g2 = rewire(g, 0.3, seed=2)
+    assert g2.is_connected()
+    assert abs(g2.avg_degree - g.avg_degree) < 2.5
+
+
+def test_mixture_data_fractions():
+    d = make_mixture_classification(n_clients=12, n_per_client=100, seed=0)
+    assert d.x.shape[:2] == (12, 100)
+    # per-client mixes in [0.1, 0.9]
+    assert (d.mix_true > 0.05).all() and (d.mix_true < 0.95).all()
+    np.testing.assert_allclose(d.mix_true.sum(-1), 1.0, atol=1e-6)
+    # z_true consistent with mix
+    frac = (d.z_true == 1).mean(axis=1)
+    np.testing.assert_allclose(frac, d.mix_true[:, 1], atol=0.02)
+
+
+def test_mixture_tokens_distinct_chains():
+    pool = make_mixture_tokens(n_clients=4, docs_per_client=8, seq_len=64,
+                               vocab=64, seed=0)
+    assert pool["tokens"].shape == (4, 8, 64)
+    # bigram stats differ across clusters
+    t, z = pool["tokens"], pool["z_true"]
+    def bigrams(sel):
+        docs = t[z == sel]
+        pairs = np.stack([docs[:, :-1].ravel(), docs[:, 1:].ravel()])
+        h = np.zeros((64, 64))
+        np.add.at(h, (pairs[0], pairs[1]), 1)
+        return h / h.sum()
+    d = np.abs(bigrams(0) - bigrams(1)).sum()
+    assert d > 0.5
+
+
+def test_tree_weighted_sum():
+    trees = {"w": jnp.stack([jnp.ones((3,)), 3 * jnp.ones((3,))])}
+    out = tree_weighted_sum(trees, jnp.array([0.25, 0.75]))
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5 * np.ones(3), atol=1e-6)
+
+
+def test_er_graph_is_actually_sparse():
+    """Regression: np.triu(u)<p once made every ER graph complete."""
+    g = make_graph("er", 20, 5.0, seed=0)
+    assert g.avg_degree < 9.0, g.avg_degree
+    g2 = make_graph("er", 100, 6.0, seed=1)
+    assert 4.0 < g2.avg_degree < 8.5, g2.avg_degree

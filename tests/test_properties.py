@@ -1,0 +1,123 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gossip import (
+    GossipSpec,
+    fedspd_weight_matrix,
+    mix_dense,
+    mix_permute,
+)
+from repro.core.clustering import mixture_coefficients
+from repro.graphs.coloring import greedy_edge_coloring, permute_schedule
+from repro.graphs.mixing import metropolis_weights, spectral_gap
+from repro.graphs.topology import make_graph
+from repro.utils.pytree import tree_ravel, tree_sq_norm
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def _graph(seed, n, deg):
+    return make_graph("er", n, deg, seed=seed)
+
+
+@given(seed=st.integers(0, 50), n=st.integers(4, 20),
+       deg=st.floats(2.0, 6.0), s_seed=st.integers(0, 100))
+@SET
+def test_weight_matrix_always_row_stochastic(seed, n, deg, s_seed):
+    g = _graph(seed, n, deg)
+    spec = GossipSpec.from_graph(g)
+    rng = np.random.default_rng(s_seed)
+    s = jnp.asarray(rng.integers(0, 3, n))
+    w = np.asarray(fedspd_weight_matrix(spec, s))
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+    assert (w >= 0).all()
+    assert (np.diag(w) > 0).all()
+
+
+@given(seed=st.integers(0, 30), n=st.integers(4, 16), s_seed=st.integers(0, 99))
+@SET
+def test_permute_schedule_equals_dense_mix(seed, n, s_seed):
+    """The edge-colored permutation schedule reproduces Eq. (1) exactly on
+    arbitrary connected graphs and selections."""
+    g = _graph(seed, n, 3.5)
+    spec_d = GossipSpec.from_graph(g, mode="dense")
+    spec_p = GossipSpec.from_graph(g, mode="permute")
+    rng = np.random.default_rng(s_seed)
+    s = jnp.asarray(rng.integers(0, 2, n))
+    tree = {"w": jnp.asarray(rng.standard_normal((n, 13)), jnp.float32)}
+    d = mix_dense(spec_d, tree, s)
+    p = mix_permute(spec_p, tree, s)
+    np.testing.assert_allclose(np.asarray(d["w"]), np.asarray(p["w"]),
+                               atol=1e-4)
+
+
+@given(seed=st.integers(0, 50), n=st.integers(4, 24))
+@SET
+def test_edge_coloring_is_proper(seed, n):
+    """No vertex appears twice in one color class (valid matching)."""
+    g = _graph(seed, n, 4.0)
+    colors = greedy_edge_coloring(g)
+    for cls in colors:
+        seen = set()
+        for (i, j) in cls:
+            assert i not in seen and j not in seen
+            seen.add(i); seen.add(j)
+    # every off-diagonal edge is covered exactly once
+    covered = set()
+    for cls in colors:
+        for (i, j) in cls:
+            e = (min(i, j), max(i, j))
+            assert e not in covered
+            covered.add(e)
+    norm = {(min(i, j), max(i, j)) for cls in colors for (i, j) in cls}
+    expect = {(min(i, j), max(i, j)) for (i, j) in g.edges()}
+    assert norm == expect
+
+
+@given(seed=st.integers(0, 50), n=st.integers(4, 16))
+@SET
+def test_permutations_are_involutions(seed, n):
+    """Each color class is a partner swap: p[p[i]] == i."""
+    g = _graph(seed, n, 4.0)
+    for p in permute_schedule(g):
+        p = np.asarray(p)
+        np.testing.assert_array_equal(p[p], np.arange(n))
+
+
+@given(seed=st.integers(0, 30), n=st.integers(4, 16))
+@SET
+def test_metropolis_weights_doubly_stochastic(seed, n):
+    g = _graph(seed, n, 3.0)
+    w = metropolis_weights(g)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+    gap = spectral_gap(w)
+    assert 0.0 < gap <= 1.0 + 1e-9  # connected => positive gap
+
+
+@given(m=st.integers(1, 64), s=st.integers(2, 5), seed=st.integers(0, 99))
+@SET
+def test_mixture_coefficients_simplex(m, s, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.integers(0, s, m))
+    u = np.asarray(mixture_coefficients(z, s))
+    np.testing.assert_allclose(u.sum(), 1.0, atol=1e-5)
+    assert (u > 0).all()  # floored
+
+
+@given(seed=st.integers(0, 99), n=st.integers(3, 12))
+@SET
+def test_mix_preserves_convex_hull(seed, n):
+    """Row-stochastic mixing keeps every client inside the hull of inputs:
+    per-coordinate min/max bounds are preserved."""
+    g = _graph(seed, n, 3.0)
+    spec = GossipSpec.from_graph(g)
+    rng = np.random.default_rng(seed)
+    s = jnp.zeros((n,), jnp.int32)
+    x = jnp.asarray(rng.standard_normal((n, 9)), jnp.float32)
+    out = np.asarray(mix_dense(spec, {"w": x}, s)["w"])
+    assert (out.max(0) <= np.asarray(x).max(0) + 1e-5).all()
+    assert (out.min(0) >= np.asarray(x).min(0) - 1e-5).all()
