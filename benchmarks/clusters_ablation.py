@@ -7,7 +7,7 @@ import dataclasses
 
 from benchmarks.common import exp_config, fmt_table, save_result
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments.runner import run_method
+from repro.experiments import run_method
 
 
 def run(fast: bool = True) -> dict:

@@ -3,7 +3,7 @@ FedSPD converges fastest."""
 from __future__ import annotations
 
 from benchmarks.common import exp_config, mixture_data, save_result
-from repro.experiments.runner import run_method
+from repro.experiments import run_method
 
 METHODS = ["fedspd", "dfl_fedem", "dfl_ifca", "dfl_fedavg", "dfl_fedsoft"]
 

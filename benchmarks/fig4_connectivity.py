@@ -4,7 +4,7 @@ other DFL methods degrade at low connectivity."""
 from __future__ import annotations
 
 from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
-from repro.experiments.runner import run_method
+from repro.experiments import run_method
 from repro.graphs.topology import make_graph
 
 

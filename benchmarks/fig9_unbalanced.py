@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from benchmarks.common import exp_config, fmt_table, save_result
 from repro.data.synthetic import make_mixture_classification, make_unbalanced_quantity
-from repro.experiments.runner import run_method
+from repro.experiments import run_method
 
 
 def run(fast: bool = True) -> dict:

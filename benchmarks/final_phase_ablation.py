@@ -1,53 +1,42 @@
 """Paper B.2.2 (Figure 6): contribution of the final personalization phase —
-accuracy right after Eq. (2) aggregation vs after τ_final local epochs."""
+accuracy right after Eq. (2) aggregation vs after τ_final local epochs.
+
+One FedSPD state is trained through the registry's method-object API, then
+re-personalized under a sweep of ``tau_final`` values (``tau_final=0``
+degenerates to the pure Eq. (2) aggregate) without retraining.
+"""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
-from repro.baselines.common import per_client_eval
-from repro.core import (
-    FedSPDConfig, GossipSpec, final_phase, make_round_step, personalize,
-    seeded_init,
-)
-from repro.graphs.topology import make_graph
-from repro.models.smallnets import make_classifier
+from repro.experiments import build_context, get_method
 
 
 def run(fast: bool = True) -> dict:
     exp = exp_config(fast)
     data = mixture_data(exp)
+    m = get_method("fedspd")
+    ctx = build_context(data, exp, seed=0)
     key = jax.random.PRNGKey(0)
-    _, apply_fn, loss_fn, pel_fn, acc_fn = make_classifier(
-        exp.model, key, data.x.shape[-1], data.n_classes)
-
-    def model_init(k):
-        p, *_ = make_classifier(exp.model, k, data.x.shape[-1], data.n_classes)
-        return p
-
-    fcfg = FedSPDConfig(n_clients=exp.n_clients, n_clusters=2, tau=exp.tau,
-                        batch=exp.batch, lr0=exp.lr0, tau_final=exp.tau_final)
-    spec = GossipSpec.from_graph(make_graph(exp.graph_kind, exp.n_clients,
-                                            exp.avg_degree, seed=0))
-    train = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
-    test = {"inputs": jnp.asarray(data.x_test), "targets": jnp.asarray(data.y_test)}
-    state = seeded_init(key, model_init, fcfg, loss_fn, train)
-    step = jax.jit(make_round_step(loss_fn, pel_fn, spec, fcfg))
-    for _ in range(exp.rounds):
-        state, _ = step(state, train)
+    k_init, k_run, k_eval = jax.random.split(key, 3)
+    state = m.init(ctx, k_init)
+    step = jax.jit(m.make_step(ctx))
+    for r in range(exp.rounds):
+        k_run, k = jax.random.split(k_run)
+        state, _ = step(state, ctx.train, k, exp.lr0 * exp.lr_decay ** r)
 
     rows = []
-    post_agg = personalize(state)
-    rows.append({"stage": "post-aggregation (Eq. 2)",
-                 "acc": float(np.mean(per_client_eval(acc_fn, post_agg, test)))})
     for tf in ([0, 2, 5, 10] if fast else [0, 2, 5, 10, 20, 30]):
-        import dataclasses
-        f2 = dataclasses.replace(fcfg, tau_final=tf)
-        pers = post_agg if tf == 0 else final_phase(state, loss_fn, train, f2)
-        rows.append({"stage": f"final phase {tf} epochs",
-                     "acc": float(np.mean(per_client_eval(acc_fn, pers, test)))})
+        ctx_tf = dataclasses.replace(ctx, options={**ctx.options,
+                                                   "tau_final": tf})
+        acc = float(np.mean(m.evaluate(ctx_tf, state, k_eval, ctx.test)))
+        stage = ("post-aggregation (Eq. 2)" if tf == 0
+                 else f"final phase {tf} epochs")
+        rows.append({"stage": stage, "acc": acc})
         print(rows[-1])
     out = {"rows": rows}
     print(fmt_table(rows, ["stage", "acc"], "B.2.2: final phase contribution"))

@@ -5,7 +5,7 @@ from __future__ import annotations
 import dataclasses
 
 from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
-from repro.experiments.runner import run_method
+from repro.experiments import run_method
 
 
 def run(fast: bool = True) -> dict:

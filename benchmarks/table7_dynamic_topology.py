@@ -1,52 +1,48 @@
 """Paper Table 7 (B.2.4): FedSPD under a dynamic network topology — each
 round, existing edges drop with probability p and new edges are added to
-keep average degree roughly constant."""
+keep average degree roughly constant.
+
+Registry port: the FedSPD state persists across graph changes; only the
+context (and hence the jitted step) is rebuilt on the rounds where the
+topology is rewired.
+"""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
-from repro.baselines.common import per_client_eval
-from repro.core import (
-    FedSPDConfig, GossipSpec, final_phase, make_round_step, seeded_init,
-)
+from repro.experiments import build_context, get_method
 from repro.graphs.topology import make_graph, rewire
-from repro.models.smallnets import make_classifier
 
 
 def run(fast: bool = True) -> dict:
     exp = exp_config(fast)
     data = mixture_data(exp)
-    key = jax.random.PRNGKey(0)
-    _, apply_fn, loss_fn, pel_fn, acc_fn = make_classifier(
-        exp.model, key, data.x.shape[-1], data.n_classes)
-
-    def model_init(k):
-        p, *_ = make_classifier(exp.model, k, data.x.shape[-1], data.n_classes)
-        return p
-
-    train = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
-    test = {"inputs": jnp.asarray(data.x_test), "targets": jnp.asarray(data.y_test)}
+    m = get_method("fedspd")
     rows = []
     for p_rewire in ([0.0, 0.2] if fast else [0.0, 0.1, 0.2, 0.3]):
-        fcfg = FedSPDConfig(n_clients=exp.n_clients, n_clusters=2,
-                            tau=exp.tau, batch=exp.batch, lr0=exp.lr0,
-                            tau_final=exp.tau_final)
         graph = make_graph(exp.graph_kind, exp.n_clients, exp.avg_degree,
                            seed=0)
-        state = seeded_init(key, model_init, fcfg, loss_fn, train)
+        ctx = build_context(data, exp, graph=graph, seed=0)
+        key = jax.random.PRNGKey(0)
+        k_init, k_run, k_eval = jax.random.split(key, 3)
+        state = m.init(ctx, k_init)
+        step = jax.jit(m.make_step(ctx))
         for r in range(exp.rounds):
-            # dynamic topology: rebuild the gossip spec (and hence the jitted
-            # step) every round the graph changes
+            # dynamic topology: rebuild the context (and jitted step) every
+            # round the graph changes; the method state carries over
             if p_rewire > 0 and r > 0:
                 graph = rewire(graph, p_rewire, seed=100 * r)
-            spec = GossipSpec.from_graph(graph)
-            step = jax.jit(make_round_step(loss_fn, pel_fn, spec, fcfg))
-            state, _ = step(state, train)
-        pers = final_phase(state, loss_fn, train, fcfg)
-        acc = float(np.mean(per_client_eval(acc_fn, pers, test)))
+                # only the graph changed: swap it in place of rebuilding the
+                # whole context (model fns + device-put of train/test)
+                ctx = dataclasses.replace(ctx, graph=graph)
+                step = jax.jit(m.make_step(ctx))
+            k_run, k = jax.random.split(k_run)
+            state, _ = step(state, ctx.train, k, exp.lr0 * exp.lr_decay ** r)
+        acc = float(np.mean(m.evaluate(ctx, state, k_eval, ctx.test)))
         rows.append({"p_rewire": p_rewire, "acc": round(acc, 4)})
         print(rows[-1])
     out = {"rows": rows}

@@ -1,38 +1,28 @@
 """Paper Table 8 (B.2.6): FedSPD + differential privacy (Wei et al. 2020).
 Clipping C=1, δ=0.01 → noise multiplier c = sqrt(2 ln(1.25/δ))/ε for
 ε ∈ {10, 50, 100}. Reports accuracy post-aggregation AND after the (local,
-noise-free) final phase."""
+noise-free) final phase.
+
+Drives the registry's method-object API directly: one trained FedSPD state
+per ε, evaluated twice (``tau_final=0`` → pure Eq. (2) aggregation; the
+full final phase) without retraining.
+"""
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
-from repro.baselines.common import per_client_eval
-from repro.core import (
-    FedSPDConfig, GossipSpec, final_phase, make_round_step, personalize,
-    seeded_init,
-)
-from repro.graphs.topology import make_graph
-from repro.models.smallnets import make_classifier
+from repro.experiments import build_context, get_method
 
 
 def run(fast: bool = True) -> dict:
     exp = exp_config(fast)
     data = mixture_data(exp)
-    key = jax.random.PRNGKey(0)
-    _, apply_fn, loss_fn, pel_fn, acc_fn = make_classifier(
-        exp.model, key, data.x.shape[-1], data.n_classes)
-
-    def model_init(k):
-        p, *_ = make_classifier(exp.model, k, data.x.shape[-1], data.n_classes)
-        return p
-
-    train = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
-    test = {"inputs": jnp.asarray(data.x_test), "targets": jnp.asarray(data.y_test)}
+    m = get_method("fedspd")
     delta = 0.01
     rows = []
     eps_list = [None, 100, 10] if fast else [None, 100, 50, 10]
@@ -42,23 +32,24 @@ def run(fast: bool = True) -> dict:
         else:
             clip = 1.0
             noise = math.sqrt(2 * math.log(1.25 / delta)) / eps
-        fcfg = FedSPDConfig(
-            n_clients=exp.n_clients, n_clusters=2, tau=exp.tau,
-            batch=exp.batch, lr0=exp.lr0, tau_final=exp.tau_final,
-            dp_clip=clip, dp_noise_multiplier=noise,
-        )
-        spec = GossipSpec.from_graph(make_graph(exp.graph_kind, exp.n_clients,
-                                                exp.avg_degree, seed=0))
-        state = seeded_init(key, model_init, fcfg, loss_fn, train)
-        step = jax.jit(make_round_step(loss_fn, pel_fn, spec, fcfg))
-        for _ in range(exp.rounds):
-            state, _ = step(state, train)
-        agg = personalize(state)
-        pers = final_phase(state, loss_fn, train, fcfg)
+        ctx = build_context(data, exp, seed=0, options={
+            "dp_clip": clip, "dp_noise_multiplier": noise,
+        })
+        key = jax.random.PRNGKey(0)
+        k_init, k_run, k_eval = jax.random.split(key, 3)
+        state = m.init(ctx, k_init)
+        step = jax.jit(m.make_step(ctx))
+        for r in range(exp.rounds):
+            k_run, k = jax.random.split(k_run)
+            state, _ = step(state, ctx.train, k, exp.lr0 * exp.lr_decay ** r)
+        ctx_agg = dataclasses.replace(
+            ctx, options={**ctx.options, "tau_final": 0})
         rows.append({
             "epsilon": "no-DP" if eps is None else eps,
-            "post_agg": float(np.mean(per_client_eval(acc_fn, agg, test))),
-            "after_final": float(np.mean(per_client_eval(acc_fn, pers, test))),
+            "post_agg": float(np.mean(
+                m.evaluate(ctx_agg, state, k_eval, ctx.test))),
+            "after_final": float(np.mean(
+                m.evaluate(ctx, state, k_eval, ctx.test))),
         })
         print(rows[-1])
     out = {"rows": rows, "delta": delta}

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments.runner import run_method
+from repro.experiments import run_method
 from repro.graphs.topology import make_graph
 
 exp = PaperExpConfig(n_clients=12, rounds=60, tau=5, batch=16,

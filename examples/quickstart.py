@@ -1,61 +1,41 @@
-"""Quickstart: FedSPD in ~40 lines on a synthetic mixture task.
+"""Quickstart: FedSPD through the method registry in ~25 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
 8 clients on a sparse ER graph, each holding an unknown mixture of two data
 distributions (rotated vs unrotated prototypes — the paper's rotated-MNIST
-analogue). FedSPD learns one model per cluster by gossiping cluster centers
-with matching neighbors, then personalizes per client (Eq. 2 + local
-epochs).
+analogue).  ``run_method`` resolves any of the 13 registered algorithms
+(``repro.experiments.METHODS``) through one shared driver: FedSPD learns one
+model per cluster by gossiping cluster centers with matching neighbors, then
+personalizes per client (Eq. 2 + local epochs).  Swap the method id — or
+pass ``gossip_backend="pallas"`` to stream the mixing through the Pallas
+kernel — without touching the loop.
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.baselines.common import per_client_eval
-from repro.core import (
-    FedSPDConfig, GossipSpec, final_phase, make_round_step, seeded_init,
-)
+from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
-from repro.graphs.topology import make_graph
-from repro.models.smallnets import make_classifier
+from repro.experiments import METHODS, run_method
 
 N_CLIENTS, N_CLUSTERS = 8, 2
 
+exp = PaperExpConfig(
+    n_clients=N_CLIENTS, n_clusters=N_CLUSTERS, rounds=50, tau=5, batch=16,
+    lr0=0.05, tau_final=10, n_per_client=96, model="mlp", dim=16, n_classes=4,
+    avg_degree=4.0,
+)
 data = make_mixture_classification(
     n_clients=N_CLIENTS, n_clusters=N_CLUSTERS, n_per_client=96, dim=16,
     n_classes=4, noise=0.25, seed=0,
 )
-key = jax.random.PRNGKey(0)
-_, apply_fn, loss_fn, per_example_loss, acc_fn = make_classifier(
-    "mlp", key, data.x.shape[-1], data.n_classes)
 
+print(f"registered methods: {', '.join(METHODS)}\n")
+result = run_method("fedspd", data, exp, seed=0, eval_every=10)
 
-def model_init(k):
-    params, *_ = make_classifier("mlp", k, data.x.shape[-1], data.n_classes)
-    return params
-
-
-cfg = FedSPDConfig(n_clients=N_CLIENTS, n_clusters=N_CLUSTERS, tau=5,
-                   batch=16, lr0=0.05, tau_final=10)
-graph = make_graph("er", N_CLIENTS, avg_degree=4, seed=0)
-gossip = GossipSpec.from_graph(graph)
-
-train = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
-test = {"inputs": jnp.asarray(data.x_test), "targets": jnp.asarray(data.y_test)}
-
-state = seeded_init(key, model_init, cfg, loss_fn, train)
-round_step = jax.jit(make_round_step(loss_fn, per_example_loss, gossip, cfg))
-
-for r in range(50):
-    state, metrics = round_step(state, train)
-    if r % 10 == 0:
-        print(f"round {r:3d}  consensus={np.asarray(metrics['consensus']).round(4)}"
-              f"  comm={float(metrics['comm_bytes'])/1e6:.1f} MB")
-
-personalized = final_phase(state, loss_fn, train, cfg)
-acc = per_client_eval(acc_fn, personalized, test)
-print(f"\nper-client test accuracy: {np.asarray(acc).round(3)}")
-print(f"mean: {float(jnp.mean(acc)):.3f}")
-print(f"estimated mixtures u:\n{np.asarray(state.u).round(2)}")
+for r, acc in result.curve:
+    print(f"round {r:3d}  mean train acc {acc:.3f}")
+print(f"\nper-client test accuracy: {result.acc_per_client.round(3)}")
+print(f"mean: {result.mean_acc:.3f} (std across clients {result.std_acc:.3f})")
+print(f"communication: {result.comm_bytes / 1e6:.1f} MB")
+print(f"estimated mixtures u:\n{np.asarray(result.extras['u']).round(2)}")
 print(f"true mixtures:\n{data.mix_true.round(2)}")

@@ -27,7 +27,7 @@ def init_state(key, model_init, n_clients: int, s_clusters: int) -> FedEMState:
         s_clusters, n_clients, -1
     )
     centers = jax.vmap(jax.vmap(model_init))(keys)
-    u = jnp.full((n_clients, s_clusters), 1.0 / s_clusters)
+    u = jnp.full((n_clients, s_clusters), 1.0 / s_clusters, jnp.float32)
     return FedEMState(centers=centers, u=u)
 
 

@@ -32,7 +32,7 @@ def init_state(key, model_init, n_clients: int, s_clusters: int) -> FedSoftState
     )
     centers = jax.vmap(jax.vmap(model_init))(keys)
     y = jax.vmap(model_init)(jax.random.split(k2, n_clients))
-    u = jnp.full((n_clients, s_clusters), 1.0 / s_clusters)
+    u = jnp.full((n_clients, s_clusters), 1.0 / s_clusters, jnp.float32)
     return FedSoftState(centers=centers, y=y, u=u)
 
 

@@ -21,6 +21,7 @@ from repro.core.gossip import (  # noqa: F401
     GossipSpec,
     consensus_distance,
     fedspd_weight_matrix,
+    make_mix_fn,
     mix,
     mix_dense,
     mix_permute,

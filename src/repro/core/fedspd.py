@@ -92,7 +92,9 @@ def init_state(
     keys = jax.random.split(k_init, cfg.n_clusters * cfg.n_clients)
     keys = keys.reshape(cfg.n_clusters, cfg.n_clients, -1)
     centers = jax.vmap(jax.vmap(model_init))(keys)
-    u = jnp.full((cfg.n_clients, cfg.n_clusters), 1.0 / cfg.n_clusters)
+    # explicit dtype: a weak-typed u would retrigger jit on the second round
+    u = jnp.full((cfg.n_clients, cfg.n_clusters), 1.0 / cfg.n_clusters,
+                 jnp.float32)
     z = jnp.zeros((cfg.n_clients, data_m), jnp.int32)
     return FedSPDState(
         centers=centers, u=u, z=z, round=jnp.zeros((), jnp.int32),

@@ -139,6 +139,38 @@ def mix(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray) -> PyTree:
     raise ValueError(f"unknown gossip mode {spec.mode!r}")
 
 
+MIX_BACKENDS = ("reference", "pallas")
+
+
+def make_mix_fn(spec: GossipSpec, backend: str = "reference"):
+    """Gossip backend selector: a ``mix_fn(c_sel, s)`` for FedSPD's round
+    step (core/fedspd.make_round_step).
+
+    - ``reference``: the pure-jnp paths above (dense einsum or edge-colored
+      permute schedule, per ``spec.mode``).
+    - ``pallas``: build the Eq. (1) weight matrix, then stream C <- W·C
+      through the Pallas TPU kernel (kernels/gossip_mix) — one HBM pass over
+      the flattened parameters. Interpret mode on CPU hosts, compiled Mosaic
+      on TPU (kernels/ops convention). Parity with the reference path is
+      asserted in tests/test_kernels.py.
+    """
+    if backend in ("reference", None):
+        return lambda c_sel, s: mix(spec, c_sel, s)
+    if backend == "pallas":
+        from repro.kernels.gossip_mix import gossip_mix_tree
+
+        interpret = jax.default_backend() != "tpu"
+
+        def mix_pallas(c_sel, s):
+            w = fedspd_weight_matrix(spec, s, c_sel)
+            return gossip_mix_tree(w, c_sel, interpret=interpret)
+
+        return mix_pallas
+    raise ValueError(
+        f"unknown gossip backend {backend!r}; expected one of {MIX_BACKENDS}"
+    )
+
+
 # --------------------------------------------------------------------------
 # Communication accounting (paper §6.3)
 # --------------------------------------------------------------------------

@@ -1,0 +1,18 @@
+# Experiment layer: method registry + shared driver. Algorithms register a
+# Method adapter (registry.py); the driver (runner.py) owns the round loop,
+# eval cadence, curve/comm accounting, and multi-seed batching.
+from repro.experiments.registry import (  # noqa: F401
+    CommModel,
+    ExperimentContext,
+    Method,
+    available_methods,
+    build_context,
+    get_method,
+    register,
+)
+from repro.experiments.runner import (  # noqa: F401
+    METHODS,
+    RunResult,
+    run_method,
+    run_method_batch,
+)

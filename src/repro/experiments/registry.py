@@ -1,0 +1,461 @@
+"""Method registry: every FL algorithm behind one pluggable contract.
+
+The experiment driver (experiments/runner.py) knows nothing about
+individual algorithms.  Each method — FedSPD and the paper's six baselines,
+decentralized (``dfl_``) and centralized (``cfl_``) variants — registers a
+``Method`` adapter here and the driver owns the round loop, eval cadence,
+curve collection, communication accounting, and multi-seed batching.
+
+The ``Method`` protocol (all functions pure & traceable so the driver can
+``jax.jit`` the step once and ``jax.vmap`` it over a seed axis):
+
+    init(ctx, key)        -> state            per-seed state (params/pytrees)
+    make_step(ctx)        -> step(state, train, key, lr) -> (state, aux)
+    personalize(ctx, state, key) -> params    leaves (N, ...) per-client model
+    comm_model(ctx)       -> CommModel        static per-round bytes or
+                                              "tracked" (read from state)
+    evaluate(ctx, state, key, on) -> (N,)     per-client accuracy (defaults
+                                              to personalize + acc_fn)
+    extras(ctx, state, aux) -> dict           host-side diagnostics
+
+FedSPD additionally honours per-run ``options``:
+    mode            gossip wiring: "dense" | "permute"
+    gossip_backend  execution path for Eq. (1): "reference" | "pallas"
+                    (core/gossip.make_mix_fn — the Pallas fast path streams
+                    C <- W·C through kernels/gossip_mix)
+    dp_clip, dp_noise_multiplier, tau_final, cos_align_threshold
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines import fedavg, fedem, fedsoft, ifca, local, pfedme
+from repro.baselines.common import mixing_matrix, per_client_eval
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.core import (
+    FedSPDConfig,
+    GossipSpec,
+    final_phase,
+    make_round_step,
+    seeded_init,
+)
+from repro.core.gossip import make_mix_fn
+from repro.graphs.topology import Graph, complete
+from repro.models.smallnets import make_classifier
+from repro.utils.pytree import tree_bytes, tree_weighted_sum
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# Context shared by every adapter
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentContext:
+    """Everything a Method needs to build its state and step function."""
+
+    exp: PaperExpConfig
+    graph: Graph
+    n_clients: int
+    n_clusters: int
+    model_init: Callable[[jax.Array], PyTree]
+    apply_fn: Callable
+    loss_fn: Callable
+    pel_fn: Callable        # per-example loss (clustering / EM steps)
+    acc_fn: Callable
+    model_bytes: int
+    train: dict             # {"inputs": (N, M, d), "targets": (N, M)}
+    test: dict
+    options: dict = dataclasses.field(default_factory=dict)
+
+    def opt(self, name: str, default=None):
+        return self.options.get(name, default)
+
+
+def build_context(
+    data,
+    exp: PaperExpConfig,
+    graph: Graph | None = None,
+    seed: int = 0,
+    options: dict | None = None,
+) -> ExperimentContext:
+    """Materialize the shared experiment context from a ClientDataset."""
+    from repro.graphs.topology import make_graph
+
+    n, s = data.n_clients, data.n_clusters
+    if graph is None:
+        graph = make_graph(exp.graph_kind, n, exp.avg_degree, seed=seed)
+    k_model = jax.random.PRNGKey(seed)
+    params0, apply_fn, loss_fn, pel_fn, acc_fn = make_classifier(
+        exp.model, k_model, data.x.shape[-1], data.n_classes
+    )
+
+    def model_init(k):
+        p, *_ = make_classifier(exp.model, k, data.x.shape[-1], data.n_classes)
+        return p
+
+    return ExperimentContext(
+        exp=exp, graph=graph, n_clients=n, n_clusters=s,
+        model_init=model_init, apply_fn=apply_fn, loss_fn=loss_fn,
+        pel_fn=pel_fn, acc_fn=acc_fn, model_bytes=tree_bytes(params0),
+        train={"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)},
+        test={"inputs": jnp.asarray(data.x_test),
+              "targets": jnp.asarray(data.y_test)},
+        options=dict(options or {}),
+    )
+
+
+# --------------------------------------------------------------------------
+# Communication accounting
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModel:
+    """How the driver accounts bytes: a static per-round cost, or "tracked"
+    (FedSPD's data-dependent point-to-point cost accumulated in state)."""
+
+    kind: str               # "static" | "tracked"
+    per_round_bytes: float = 0.0
+
+
+def edges_bytes(graph: Graph, model_b: int, models: int = 1) -> float:
+    """Multicast DFL round cost: each client sends ``models`` models per
+    directed neighbor link."""
+    directed_links = float(graph.adj.sum() - graph.n)
+    return directed_links * model_b * models
+
+
+def star_bytes(n: int, model_b: int, models: int = 1) -> float:
+    """Centralized round cost: every client uploads + downloads per model."""
+    return 2.0 * n * model_b * models
+
+
+# --------------------------------------------------------------------------
+# Method protocol
+# --------------------------------------------------------------------------
+
+
+class Method:
+    """Base adapter. Subclasses implement init/make_step/personalize/
+    comm_model; evaluate and extras have sensible defaults."""
+
+    name: str = ""
+    centralized: bool = False
+
+    def init(self, ctx: ExperimentContext, key: jax.Array):
+        raise NotImplementedError
+
+    def make_step(self, ctx: ExperimentContext) -> Callable:
+        raise NotImplementedError
+
+    def personalize(self, ctx: ExperimentContext, state, key: jax.Array):
+        raise NotImplementedError
+
+    def comm_model(self, ctx: ExperimentContext) -> CommModel:
+        raise NotImplementedError
+
+    def evaluate(self, ctx: ExperimentContext, state, key: jax.Array,
+                 on: dict) -> jnp.ndarray:
+        """Per-client accuracy of the personalized models on ``on``."""
+        params = self.personalize(ctx, state, key)
+        return per_client_eval(ctx.acc_fn, params, on)
+
+    def extras(self, ctx: ExperimentContext, state, aux: dict) -> dict:
+        return {}
+
+    def mixing(self, ctx: ExperimentContext) -> jnp.ndarray:
+        """(N, N) averaging weights: exact global mean (centralized) or
+        Metropolis gossip over the client graph (decentralized)."""
+        return mixing_matrix(ctx.graph, ctx.n_clients, self.centralized)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Method] = {}
+
+
+def register(method: Method) -> Method:
+    assert method.name, "method must set a name"
+    assert method.name not in _REGISTRY, f"duplicate method {method.name!r}"
+    _REGISTRY[method.name] = method
+    return method
+
+
+def get_method(name: str) -> Method:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown method {name!r}; available: {available_methods()}"
+        )
+    return _REGISTRY[name]
+
+
+def available_methods() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# FedSPD (the paper's algorithm)
+# --------------------------------------------------------------------------
+
+
+class FedSPDMethod(Method):
+    """Paper Algorithm 1 behind the registry contract. ``mode`` selects the
+    gossip wiring (dense Eq. (1) matrix vs edge-colored permute schedule);
+    ``ctx.options['gossip_backend']`` additionally routes execution through
+    the Pallas streaming kernel."""
+
+    def __init__(self, name: str, mode: str = "dense"):
+        self.name = name
+        self.mode = mode
+
+    def _fcfg(self, ctx: ExperimentContext) -> FedSPDConfig:
+        exp = ctx.exp
+        return FedSPDConfig(
+            n_clients=ctx.n_clients, n_clusters=ctx.n_clusters, tau=exp.tau,
+            batch=exp.batch, lr0=exp.lr0, lr_decay=exp.lr_decay,
+            tau_final=ctx.opt("tau_final", exp.tau_final),
+            dp_clip=ctx.opt("dp_clip", 0.0),
+            dp_noise_multiplier=ctx.opt("dp_noise_multiplier", 0.0),
+        )
+
+    def _spec(self, ctx: ExperimentContext) -> GossipSpec:
+        return GossipSpec.from_graph(
+            ctx.graph, mode=ctx.opt("mode", self.mode),
+            cos_align_threshold=ctx.opt("cos_align_threshold", -1.0),
+        )
+
+    def init(self, ctx, key):
+        return seeded_init(key, ctx.model_init, self._fcfg(ctx), ctx.loss_fn,
+                           ctx.train)
+
+    def make_step(self, ctx):
+        spec = self._spec(ctx)
+        mix_fn = make_mix_fn(spec, backend=ctx.opt("gossip_backend", "reference"))
+        step = make_round_step(ctx.loss_fn, ctx.pel_fn, spec, self._fcfg(ctx),
+                               mix_fn=mix_fn)
+
+        def wrapped(state, train, key, lr):
+            # FedSPD's round step carries its own key and lr schedule in
+            # state; driver-provided key/lr are for the uniform signature.
+            del key, lr
+            return step(state, train)
+
+        return wrapped
+
+    def personalize(self, ctx, state, key):
+        del key
+        return final_phase(state, ctx.loss_fn, ctx.train, self._fcfg(ctx))
+
+    def comm_model(self, ctx):
+        return CommModel(kind="tracked")
+
+    def extras(self, ctx, state, aux):
+        import numpy as np
+
+        out = {"u": np.asarray(state.u)}
+        if aux and "consensus" in aux:
+            out["consensus"] = np.asarray(aux["consensus"])
+        return out
+
+
+# --------------------------------------------------------------------------
+# Baselines
+# --------------------------------------------------------------------------
+
+
+class FedAvgMethod(Method):
+    def __init__(self, name: str, centralized: bool):
+        self.name = name
+        self.centralized = centralized
+
+    def init(self, ctx, key):
+        return jax.vmap(ctx.model_init)(jax.random.split(key, ctx.n_clients))
+
+    def make_step(self, ctx):
+        return fedavg.make_step(ctx.loss_fn, self.mixing(ctx),
+                                tau=ctx.exp.tau, batch=ctx.exp.batch)
+
+    def personalize(self, ctx, state, key):
+        del key
+        return fedavg.personalized_params(state)
+
+    def comm_model(self, ctx):
+        per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)
+                     if self.centralized
+                     else edges_bytes(ctx.graph, ctx.model_bytes))
+        return CommModel(kind="static", per_round_bytes=per_round)
+
+
+class LocalMethod(Method):
+    name = "local"
+
+    def init(self, ctx, key):
+        return jax.vmap(ctx.model_init)(jax.random.split(key, ctx.n_clients))
+
+    def make_step(self, ctx):
+        return local.make_step(ctx.loss_fn, tau=ctx.exp.tau,
+                               batch=ctx.exp.batch)
+
+    def personalize(self, ctx, state, key):
+        del key
+        return local.personalized_params(state)
+
+    def comm_model(self, ctx):
+        return CommModel(kind="static", per_round_bytes=0.0)
+
+
+class FedEMMethod(Method):
+    """Trains and exchanges ALL S cluster models per round (S× comm);
+    personalized prediction is the u-weighted probability mixture, so
+    ``evaluate`` overrides the personalize-based default."""
+
+    def __init__(self, name: str, centralized: bool):
+        self.name = name
+        self.centralized = centralized
+
+    def init(self, ctx, key):
+        return fedem.init_state(key, ctx.model_init, ctx.n_clients,
+                                ctx.n_clusters)
+
+    def make_step(self, ctx):
+        return fedem.make_step(
+            ctx.loss_fn, ctx.pel_fn, self.mixing(ctx), tau=ctx.exp.tau,
+            batch=ctx.exp.batch, s_clusters=ctx.n_clusters,
+        )
+
+    def personalize(self, ctx, state, key):
+        """Eq.-(2)-style projection (u-weighted parameter average) — used
+        for serve-style export; accuracy uses the probability mixture."""
+        del key
+        centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1),
+                                  state.centers)
+        return jax.vmap(tree_weighted_sum)(centers_nc, state.u)
+
+    def evaluate(self, ctx, state, key, on):
+        del key
+        return fedem.personalized_accuracy(ctx.apply_fn, state, on)
+
+    def comm_model(self, ctx):
+        s = ctx.n_clusters
+        per_round = (star_bytes(ctx.n_clients, ctx.model_bytes, models=s)
+                     if self.centralized
+                     else edges_bytes(ctx.graph, ctx.model_bytes, models=s))
+        return CommModel(kind="static", per_round_bytes=per_round)
+
+    def extras(self, ctx, state, aux):
+        import numpy as np
+
+        return {"u": np.asarray(state.u)}
+
+
+class IFCAMethod(Method):
+    def __init__(self, name: str, centralized: bool):
+        self.name = name
+        self.centralized = centralized
+
+    def init(self, ctx, key):
+        return ifca.init_state(key, ctx.model_init, ctx.n_clients,
+                               ctx.n_clusters)
+
+    def make_step(self, ctx):
+        g_eff = ctx.graph if not self.centralized else complete(ctx.n_clients)
+        spec = GossipSpec.from_graph(g_eff, mode="dense")
+        return ifca.make_step(ctx.loss_fn, ctx.pel_fn, spec,
+                              tau=ctx.exp.tau, batch=ctx.exp.batch)
+
+    def personalize(self, ctx, state, key):
+        del key
+        return ifca.personalized_params(state)
+
+    def comm_model(self, ctx):
+        per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)
+                     if self.centralized
+                     else edges_bytes(ctx.graph, ctx.model_bytes))
+        return CommModel(kind="static", per_round_bytes=per_round)
+
+    def extras(self, ctx, state, aux):
+        import numpy as np
+
+        return {"choice": np.asarray(state.choice)}
+
+
+class FedSoftMethod(Method):
+    def __init__(self, name: str, centralized: bool):
+        self.name = name
+        self.centralized = centralized
+
+    def init(self, ctx, key):
+        return fedsoft.init_state(key, ctx.model_init, ctx.n_clients,
+                                  ctx.n_clusters)
+
+    def make_step(self, ctx):
+        return fedsoft.make_step(
+            ctx.loss_fn, ctx.pel_fn, self.mixing(ctx), tau=ctx.exp.tau,
+            batch=ctx.exp.batch, s_clusters=ctx.n_clusters,
+        )
+
+    def personalize(self, ctx, state, key):
+        del key
+        return fedsoft.personalized_params(state)
+
+    def comm_model(self, ctx):
+        per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)
+                     if self.centralized
+                     else edges_bytes(ctx.graph, ctx.model_bytes))
+        return CommModel(kind="static", per_round_bytes=per_round)
+
+    def extras(self, ctx, state, aux):
+        import numpy as np
+
+        return {"u": np.asarray(state.u)}
+
+
+class PFedMeMethod(Method):
+    def __init__(self, name: str, centralized: bool):
+        self.name = name
+        self.centralized = centralized
+
+    def init(self, ctx, key):
+        return pfedme.init_state(key, n_clients=ctx.n_clients,
+                                 model_init=ctx.model_init)
+
+    def make_step(self, ctx):
+        return pfedme.make_step(ctx.loss_fn, self.mixing(ctx),
+                                tau=ctx.exp.tau, batch=ctx.exp.batch)
+
+    def personalize(self, ctx, state, key):
+        return pfedme.personalized_params(state, ctx.loss_fn, ctx.train, key,
+                                          batch=ctx.exp.batch)
+
+    def comm_model(self, ctx):
+        per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)
+                     if self.centralized
+                     else edges_bytes(ctx.graph, ctx.model_bytes))
+        return CommModel(kind="static", per_round_bytes=per_round)
+
+
+# --------------------------------------------------------------------------
+# Registrations: FedSPD + all six baselines, dfl_ and cfl_ variants
+# --------------------------------------------------------------------------
+
+register(FedSPDMethod("fedspd", mode="dense"))
+register(FedSPDMethod("fedspd_permute", mode="permute"))  # beyond-paper schedule
+register(LocalMethod())
+for _cls, _base in (
+    (FedAvgMethod, "fedavg"),
+    (FedEMMethod, "fedem"),
+    (IFCAMethod, "ifca"),
+    (FedSoftMethod, "fedsoft"),
+    (PFedMeMethod, "pfedme"),
+):
+    register(_cls(f"dfl_{_base}", centralized=False))
+    register(_cls(f"cfl_{_base}", centralized=True))

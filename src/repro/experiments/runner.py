@@ -1,47 +1,37 @@
-"""End-to-end experiment runner: paper-scale FL runs on CPU.
+"""Experiment driver: one shared round loop for every registered method.
 
-Drives any of the implemented methods (FedSPD + the paper's six baselines,
-decentralized and centralized variants) over a synthetic mixture
-ClientDataset, reproducing the paper's experimental protocol:
-per-client test accuracy (Tables 2–5), training curves (Fig. 2), accuracy
-variance across clients (Fig. 3), and communication accounting (§6.3).
+``run_method`` resolves an algorithm through the method registry
+(experiments/registry.py) and owns everything the old per-method if/elif
+branches used to hand-roll: the jitted round loop, eval cadence, curve
+collection, and communication accounting.  Adding an algorithm is now a
+registry entry — the driver never changes.
+
+``run_method_batch`` is the multi-seed fast path: states for all seeds are
+initialized with vmap, the round step is vmapped over the seed axis and
+jitted ONCE, so a k-seed sweep costs one compilation plus k× the per-round
+arithmetic (which XLA batches through the same fused program).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.baselines import fedavg, fedem, fedsoft, ifca, local, pfedme
-from repro.baselines.common import mixing_matrix, per_client_eval
 from repro.configs.paper_cnn import PaperExpConfig
-from repro.core import (
-    FedSPDConfig,
-    GossipSpec,
-    final_phase,
-    init_state,
-    make_round_step,
-    seeded_init,
-)
 from repro.data.synthetic import ClientDataset
-from repro.graphs.topology import Graph, make_graph
-from repro.models.smallnets import make_classifier
-from repro.utils.pytree import tree_bytes
-
-METHODS = (
-    "fedspd",
-    "fedspd_permute",   # beyond-paper gossip schedule (same math)
-    "dfl_fedavg", "cfl_fedavg",
-    "dfl_fedem", "cfl_fedem",
-    "dfl_ifca", "cfl_ifca",
-    "dfl_fedsoft", "cfl_fedsoft",
-    "dfl_pfedme", "cfl_pfedme",
-    "local",
+from repro.experiments.registry import (
+    ExperimentContext,
+    Method,
+    available_methods,
+    build_context,
+    get_method,
 )
+from repro.graphs.topology import Graph
+
+METHODS = available_methods()
 
 
 @dataclasses.dataclass
@@ -56,11 +46,31 @@ class RunResult:
     extras: dict
 
 
-def _edges_bytes(graph: Graph, model_b: int, models: int = 1) -> float:
-    """Multicast DFL round cost: each client sends `models` models per
-    neighbor link (directed)."""
-    directed_links = float(graph.adj.sum() - graph.n)
-    return directed_links * model_b * models
+def _lr_schedule(exp: PaperExpConfig):
+    return lambda t: exp.lr0 * (exp.lr_decay ** t)
+
+
+def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
+            curve, t0, n_compiles=None) -> RunResult:
+    comm_model = method.comm_model(ctx)
+    if comm_model.kind == "tracked":
+        comm = float(state.comm_bytes)
+    else:
+        comm = comm_model.per_round_bytes * ctx.exp.rounds
+    extras = method.extras(ctx, state, aux)
+    if n_compiles is not None:
+        extras["n_compiles"] = n_compiles
+    acc = np.asarray(acc)
+    return RunResult(
+        method=method.name,
+        acc_per_client=acc,
+        mean_acc=float(acc.mean()),
+        std_acc=float(acc.std()),
+        comm_bytes=comm,
+        curve=curve,
+        wall_s=time.time() - t0,
+        extras=extras,
+    )
 
 
 def run_method(
@@ -71,170 +81,111 @@ def run_method(
     seed: int = 0,
     eval_every: int = 10,
     gossip_mode: str | None = None,
+    gossip_backend: str | None = None,
+    options: dict | None = None,
 ) -> RunResult:
-    assert method in METHODS, method
+    """Run one method for ``exp.rounds`` rounds; returns RunResult.
+
+    ``gossip_mode`` / ``gossip_backend`` are FedSPD conveniences forwarded
+    into ``options`` ("dense"/"permute" wiring; "reference"/"pallas"
+    execution).  Arbitrary per-method knobs go through ``options``.
+    """
     t0 = time.time()
+    m = get_method(method)
+    options = dict(options or {})
+    if gossip_mode is not None:
+        options.setdefault("mode", gossip_mode)
+    if gossip_backend is not None:
+        options.setdefault("gossip_backend", gossip_backend)
+    ctx = build_context(data, exp, graph=graph, seed=seed, options=options)
+
     key = jax.random.PRNGKey(seed)
-    k_model, k_run, k_eval = jax.random.split(key, 3)
-    n, s = data.n_clients, data.n_clusters
-    if graph is None:
-        graph = make_graph(exp.graph_kind, n, exp.avg_degree, seed=seed)
+    k_init, k_run, k_eval = jax.random.split(key, 3)
+    state = m.init(ctx, k_init)
+    step = jax.jit(m.make_step(ctx))
+    lr_at = _lr_schedule(exp)
 
-    params0, apply_fn, loss_fn, pel_fn, acc_fn = make_classifier(
-        exp.model, k_model, data.x.shape[-1], data.n_classes
-    )
-    model_b = tree_bytes(params0)
-
-    train = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
-    test = {"inputs": jnp.asarray(data.x_test), "targets": jnp.asarray(data.y_test)}
-
-    def model_init(k):
-        p, *_ = make_classifier(exp.model, k, data.x.shape[-1], data.n_classes)
-        return p
-
-    centralized = method.startswith("cfl_")
-    lr_at = lambda t: exp.lr0 * (exp.lr_decay ** t)  # noqa: E731
     curve = []
-    extras = {}
+    aux = None
+    for r in range(exp.rounds):
+        k_run, k = jax.random.split(k_run)
+        state, aux = step(state, ctx.train, k, lr_at(r))
+        if r % eval_every == 0 or r == exp.rounds - 1:
+            train_acc = m.evaluate(ctx, state, k_eval, ctx.train)
+            curve.append((r, float(jnp.mean(train_acc))))
 
-    def train_acc(params):
-        return float(jnp.mean(per_client_eval(acc_fn, params, train)))
+    acc = m.evaluate(ctx, state, k_eval, ctx.test)
+    return _result(m, ctx, state, aux, acc, curve, t0)
 
-    if method.startswith("fedspd"):
-        mode = gossip_mode or ("permute" if method == "fedspd_permute" else "dense")
-        fcfg = FedSPDConfig(
-            n_clients=n, n_clusters=s, tau=exp.tau, batch=exp.batch,
-            lr0=exp.lr0, lr_decay=exp.lr_decay, tau_final=exp.tau_final,
-        )
-        spec = GossipSpec.from_graph(graph, mode=mode)
-        state = seeded_init(k_model, model_init, fcfg, loss_fn, train)
-        step = jax.jit(make_round_step(loss_fn, pel_fn, spec, fcfg))
-        for r in range(exp.rounds):
-            state, metrics = step(state, train)
-            if r % eval_every == 0 or r == exp.rounds - 1:
-                pers = final_phase(state, loss_fn, train, fcfg)
-                curve.append((r, train_acc(pers)))
-        personalized = final_phase(state, loss_fn, train, fcfg)
-        comm = float(state.comm_bytes)
-        extras["consensus"] = np.asarray(metrics["consensus"])
-        extras["u"] = np.asarray(state.u)
-        acc = per_client_eval(acc_fn, personalized, test)
 
-    elif method.endswith("fedavg") or method == "local":
-        if method == "local":
-            step = jax.jit(local.make_step(loss_fn, tau=exp.tau, batch=exp.batch))
-            comm_per_round = 0.0
-        else:
-            w = mixing_matrix(graph, n, centralized)
-            step = jax.jit(fedavg.make_step(loss_fn, w, tau=exp.tau, batch=exp.batch))
-            comm_per_round = (
-                2.0 * n * model_b if centralized else _edges_bytes(graph, model_b)
-            )
-        params = jax.vmap(model_init)(jax.random.split(k_model, n))
-        for r in range(exp.rounds):
-            k_run, k = jax.random.split(k_run)
-            params, _ = step(params, train, k, lr_at(r))
-            if r % eval_every == 0 or r == exp.rounds - 1:
-                curve.append((r, train_acc(params)))
-        comm = comm_per_round * exp.rounds
-        acc = per_client_eval(acc_fn, params, test)
+def run_method_batch(
+    method: str,
+    data: ClientDataset,
+    exp: PaperExpConfig,
+    seeds=(0, 1, 2),
+    graph: Graph | None = None,
+    eval_every: int = 10,
+    options: dict | None = None,
+) -> list[RunResult]:
+    """Multi-seed batched execution: ONE jit compile shared by all seeds.
 
-    elif method.endswith("fedem"):
-        w = mixing_matrix(graph, n, centralized)
-        state = fedem.init_state(k_model, model_init, n, s)
-        step = jax.jit(
-            fedem.make_step(loss_fn, pel_fn, w, tau=exp.tau, batch=exp.batch,
-                            s_clusters=s)
-        )
-        for r in range(exp.rounds):
-            k_run, k = jax.random.split(k_run)
-            state, _ = step(state, train, k, lr_at(r))
-            if r % eval_every == 0 or r == exp.rounds - 1:
-                curve.append((
-                    r,
-                    float(jnp.mean(fedem.personalized_accuracy(apply_fn, state, train))),
-                ))
-        comm = exp.rounds * (
-            2.0 * n * model_b * s if centralized
-            else _edges_bytes(graph, model_b, models=s)
-        )
-        acc = fedem.personalized_accuracy(apply_fn, state, test)
-        extras["u"] = np.asarray(state.u)
+    The per-seed state pytrees are stacked on a leading seed axis; the
+    method's step runs under ``jax.vmap`` inside a single ``jax.jit``, so
+    round r of every seed executes as one fused XLA program.  The data,
+    graph, and method config are shared across seeds (only the random state
+    — model init, batch sampling, cluster selection — differs), which is the
+    paper's repeated-trials protocol.  Returns one RunResult per seed;
+    ``extras["n_compiles"]`` records the jit cache size (1 = shared).
+    """
+    t0 = time.time()
+    m = get_method(method)
+    ctx = build_context(data, exp, graph=graph, seed=int(seeds[0]),
+                        options=dict(options or {}))
+    lr_at = _lr_schedule(exp)
 
-    elif method.endswith("ifca"):
-        g_eff = graph if not centralized else _complete(n)
-        spec = GossipSpec.from_graph(g_eff, mode="dense")
-        state = ifca.init_state(k_model, model_init, n, s)
-        step = jax.jit(
-            ifca.make_step(loss_fn, pel_fn, spec, tau=exp.tau, batch=exp.batch)
-        )
-        for r in range(exp.rounds):
-            k_run, k = jax.random.split(k_run)
-            state, _ = step(state, train, k, lr_at(r))
-            if r % eval_every == 0 or r == exp.rounds - 1:
-                curve.append((r, train_acc(ifca.personalized_params(state))))
-        comm = exp.rounds * (
-            2.0 * n * model_b if centralized else _edges_bytes(graph, model_b)
-        )
-        acc = per_client_eval(acc_fn, ifca.personalized_params(state), test)
-        extras["choice"] = np.asarray(state.choice)
+    seed_keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    split3 = jax.vmap(lambda k: jax.random.split(k, 3))(seed_keys)  # (k, 3, 2)
+    k_init, k_run, k_eval = split3[:, 0], split3[:, 1], split3[:, 2]
 
-    elif method.endswith("fedsoft"):
-        w = mixing_matrix(graph, n, centralized)
-        state = fedsoft.init_state(k_model, model_init, n, s)
-        step = jax.jit(
-            fedsoft.make_step(loss_fn, pel_fn, w, tau=exp.tau, batch=exp.batch,
-                              s_clusters=s)
+    states = jax.vmap(lambda k: m.init(ctx, k))(k_init)
+    # canonicalize weak types: an init-only weak-typed leaf (e.g. a
+    # jnp.full without dtype) would force a second jit compile at round 2
+    states = jax.tree.map(lambda l: l.astype(l.dtype), states)
+    step = jax.jit(
+        jax.vmap(m.make_step(ctx), in_axes=(0, None, 0, None)),
+    )
+    evaluate = jax.jit(
+        jax.vmap(
+            lambda state, key, on: m.evaluate(ctx, state, key, on),
+            in_axes=(0, 0, None),
         )
-        for r in range(exp.rounds):
-            k_run, k = jax.random.split(k_run)
-            state, _ = step(state, train, k, lr_at(r))
-            if r % eval_every == 0 or r == exp.rounds - 1:
-                curve.append((r, train_acc(fedsoft.personalized_params(state))))
-        comm = exp.rounds * (
-            2.0 * n * model_b if centralized else _edges_bytes(graph, model_b)
-        )
-        acc = per_client_eval(acc_fn, fedsoft.personalized_params(state), test)
-        extras["u"] = np.asarray(state.u)
-
-    elif method.endswith("pfedme"):
-        w = mixing_matrix(graph, n, centralized)
-        state = pfedme.init_state(k_model, n_clients=n, model_init=model_init)
-        step = jax.jit(
-            pfedme.make_step(loss_fn, w, tau=exp.tau, batch=exp.batch)
-        )
-        for r in range(exp.rounds):
-            k_run, k = jax.random.split(k_run)
-            state, _ = step(state, train, k, lr_at(r))
-            if r % eval_every == 0 or r == exp.rounds - 1:
-                theta = pfedme.personalized_params(
-                    state, loss_fn, train, k, batch=exp.batch
-                )
-                curve.append((r, train_acc(theta)))
-        comm = exp.rounds * (
-            2.0 * n * model_b if centralized else _edges_bytes(graph, model_b)
-        )
-        theta = pfedme.personalized_params(state, loss_fn, train, k_eval,
-                                           batch=exp.batch)
-        acc = per_client_eval(acc_fn, theta, test)
-
-    else:  # pragma: no cover
-        raise ValueError(method)
-
-    acc = np.asarray(acc)
-    return RunResult(
-        method=method,
-        acc_per_client=acc,
-        mean_acc=float(acc.mean()),
-        std_acc=float(acc.std()),
-        comm_bytes=float(comm),
-        curve=curve,
-        wall_s=time.time() - t0,
-        extras=extras,
     )
 
+    curves = [[] for _ in seeds]
+    aux = None
+    for r in range(exp.rounds):
+        ks = jax.vmap(jax.random.split)(k_run)
+        k_run, k = ks[:, 0], ks[:, 1]
+        states, aux = step(states, ctx.train, k, lr_at(r))
+        if r % eval_every == 0 or r == exp.rounds - 1:
+            train_acc = evaluate(states, k_eval, ctx.train)  # (k, N)
+            for i in range(len(seeds)):
+                curves[i].append((r, float(jnp.mean(train_acc[i]))))
 
-def _complete(n: int) -> Graph:
-    from repro.graphs.topology import complete
-
-    return complete(n)
+    accs = np.asarray(evaluate(states, k_eval, ctx.test))  # (k, N)
+    # diagnostic only: _cache_size is a private jax API, so don't let its
+    # absence on other jax versions fail a finished sweep
+    cache_size = getattr(step, "_cache_size", lambda: -1)
+    try:
+        n_compiles = int(cache_size())
+    except Exception:
+        n_compiles = -1
+    results = []
+    for i, _ in enumerate(seeds):
+        state_i = jax.tree.map(lambda l: l[i], states)
+        aux_i = jax.tree.map(lambda l: l[i], aux) if aux else aux
+        results.append(
+            _result(m, ctx, state_i, aux_i, accs[i], curves[i], t0,
+                    n_compiles=n_compiles)
+        )
+    return results

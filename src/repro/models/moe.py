@@ -112,6 +112,13 @@ def _moe_core(
     aux = e * jnp.sum(me * ce) / top_k
 
     capacity = int(max(1, capacity_factor * top_k * t / e))
+    if l == 1:
+        # single-token decode: the fractional capacity rounds down to ~1 and
+        # silently drops later batch rows that share an expert with earlier
+        # ones (prefill+decode then disagrees with the teacher-forced
+        # forward). Each token occupies at most one slot per expert, so
+        # capacity=t makes the decode path drop-free and exact.
+        capacity = t
     capacity = min(capacity, t)
 
     # position of each (token, slot) within its expert queue

@@ -57,6 +57,18 @@ def _shape_bytes(shapes_str: str) -> int:
     return total
 
 
+def cost_dict(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: newer jaxlibs return one dict,
+    older ones a one-element list of dicts (indexing that list with "flops"
+    raised TypeError throughout the dryrun/mesh path)."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def collective_bytes(hlo_text: str) -> dict:
     """Per-device bytes produced by each collective family in the optimized
     HLO (done-ops of async pairs are skipped; the start op carries shape)."""
@@ -111,7 +123,7 @@ def analyze(
     model_flops: float = 0.0,
     note: str = "",
 ) -> Roofline:
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0))
 
@@ -257,8 +269,8 @@ def analyze_two_point(
     model_flops: float = 0.0,
     note: str = "",
 ) -> Roofline:
-    c1 = compiled1.cost_analysis() or {}
-    c2 = compiled2.cost_analysis() or {}
+    c1 = cost_dict(compiled1)
+    c2 = cost_dict(compiled2)
     flops = two_point(float(c1.get("flops", 0.0)),
                       float(c2.get("flops", 0.0)), ratio)
     bytes_acc = two_point(float(c1.get("bytes accessed", 0.0)),

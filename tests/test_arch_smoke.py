@@ -9,6 +9,8 @@ import pytest
 from repro.configs.base import ARCH_ALIASES, INPUT_SHAPES, get_config, get_smoke_config
 from repro.models.registry import active_params, build_model, count_params
 
+pytestmark = pytest.mark.slow
+
 ARCHS = sorted(set(ARCH_ALIASES) - {"phi3_5-moe-42b-a6_6b", "h2o-danube-1_8b",
                                     "zamba2-1_2b"})  # drop alias duplicates
 

@@ -1,11 +1,17 @@
 """Every baseline the paper compares against runs and learns on the mixture
-task (decentralized + centralized variants via the experiment runner)."""
+task (decentralized + centralized variants via the experiment registry).
+
+Slow lane: each case is a 40-round training run with accuracy thresholds;
+the fast lane covers the same method plumbing via tests/test_registry.py.
+"""
 import numpy as np
 import pytest
 
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments.runner import METHODS, run_method
+from repro.experiments import METHODS, run_method
+
+pytestmark = pytest.mark.slow
 
 
 @pytest.fixture(scope="module")

@@ -121,6 +121,7 @@ def test_comm_bytes_point_to_point_less_than_multicast():
     assert p2p > 0
 
 
+@pytest.mark.slow
 def test_clustering_recovers_ground_truth():
     """With well-separated centers, min-loss labeling recovers provenance."""
     data, loss_fn, pel_fn, acc_fn = _simple_setup(n=6, m=96, seed=1)
@@ -211,6 +212,7 @@ def test_personalize_is_convex_combination():
         pers["w"][2], 0.5 * c[0, 2] + 0.5 * c[1, 2], atol=1e-6)
 
 
+@pytest.mark.slow
 def test_fedspd_learns_mixture_end_to_end():
     """Integration: FedSPD (client-seeded warm start, paper Assumption 5.6)
     on separable mixture data reaches high personalized accuracy and

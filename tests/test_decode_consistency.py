@@ -8,6 +8,8 @@ import pytest
 from repro.configs.base import get_smoke_config
 from repro.models.registry import build_model
 
+pytestmark = pytest.mark.slow
+
 FAMS = ["olmo-1b", "olmoe-1b-7b", "gemma3-1b", "mamba2-370m", "zamba2-1.2b",
         "whisper-base", "chameleon-34b"]
 

@@ -10,15 +10,19 @@ from repro.kernels import ops, ref
 KEY = jax.random.PRNGKey(0)
 
 
+_SLOW = pytest.mark.slow  # full interpret-mode sweeps run in the full lane;
+# the first combo of each sweep stays in the fast lane as a smoke case
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "b,lq,lkv,hq,hkv,hd,window",
     [
         (2, 256, 256, 4, 2, 64, None),   # GQA causal
-        (1, 256, 256, 4, 4, 64, 128),    # MHA sliding window
-        (2, 128, 128, 8, 2, 32, None),   # small head_dim
-        (1, 512, 512, 2, 1, 64, 256),    # kv=1 (gemma3-style) + window
-        (1, 384, 384, 4, 4, 128, None),  # non-pow2 length (3 blocks)
+        pytest.param(1, 256, 256, 4, 4, 64, 128, marks=_SLOW),  # MHA window
+        pytest.param(2, 128, 128, 8, 2, 32, None, marks=_SLOW),  # small hd
+        pytest.param(1, 512, 512, 2, 1, 64, 256, marks=_SLOW),  # kv=1+window
+        pytest.param(1, 384, 384, 4, 4, 128, None, marks=_SLOW),  # non-pow2
     ],
 )
 def test_flash_attention_sweep(b, lq, lkv, hq, hkv, hd, window, dtype):
@@ -38,10 +42,10 @@ def test_flash_attention_sweep(b, lq, lkv, hq, hkv, hd, window, dtype):
 @pytest.mark.parametrize(
     "b,l,h,g,p,n,chunk",
     [
-        (2, 256, 4, 1, 64, 64, 128),
         (1, 128, 8, 2, 32, 16, 64),
-        (2, 256, 4, 4, 64, 128, 128),
-        (1, 512, 2, 1, 64, 64, 128),
+        pytest.param(2, 256, 4, 1, 64, 64, 128, marks=_SLOW),
+        pytest.param(2, 256, 4, 4, 64, 128, 128, marks=_SLOW),
+        pytest.param(1, 512, 2, 1, 64, 64, 128, marks=_SLOW),
     ],
 )
 def test_ssd_scan_sweep(b, l, h, g, p, n, chunk, dtype):
@@ -131,3 +135,50 @@ def test_moe_dispatch_modes_agree():
                          dispatch="grouped")
     np.testing.assert_allclose(np.asarray(o_cum), np.asarray(o_sort), atol=1e-5)
     np.testing.assert_allclose(np.asarray(o_cum), np.asarray(o_grp), atol=1e-5)
+
+
+@pytest.mark.parametrize("x,x_block", [(13, 8), (5000, 2048), (7, 32), (2048, 2048)])
+def test_gossip_mix_flat_padding(x, x_block):
+    """X not divisible by x_block exercises the zero-pad + crop path (and
+    x_block > X exercises the block clamp); both must equal the dense W@C."""
+    from repro.kernels.gossip_mix import gossip_mix_flat
+
+    key = jax.random.PRNGKey(x)
+    n = 8
+    w = jax.nn.softmax(jax.random.normal(key, (n, n)), axis=1)
+    c = jax.random.normal(key, (n, x), jnp.float32)
+    out = gossip_mix_flat(w, c, x_block=x_block, interpret=True)
+    assert out.shape == (n, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w @ c), atol=1e-5)
+
+
+def test_pallas_mix_fn_matches_reference_mix():
+    """core/gossip.make_mix_fn('pallas') — the FedSPD gossip fast path —
+    equals core/gossip.mix to fp32 tolerance on arbitrary trees/selections."""
+    from repro.core.gossip import GossipSpec, make_mix_fn, mix
+    from repro.graphs.topology import make_graph
+
+    for seed in range(3):
+        g = make_graph("er", 10, 4.0, seed=seed)
+        spec = GossipSpec.from_graph(g, mode="dense")
+        key = jax.random.PRNGKey(seed)
+        tree = {
+            "a": jax.random.normal(key, (10, 5, 3)),
+            "b": jax.random.normal(key, (10, 17)),
+            "c": jax.random.normal(key, (10,)),
+        }
+        s = jax.random.randint(key, (10,), 0, 2)
+        ref_out = mix(spec, tree, s)
+        pallas_out = make_mix_fn(spec, backend="pallas")(tree, s)
+        for k in tree:
+            np.testing.assert_allclose(
+                np.asarray(pallas_out[k]), np.asarray(ref_out[k]), atol=1e-5)
+
+
+def test_make_mix_fn_rejects_unknown_backend():
+    from repro.core.gossip import GossipSpec, make_mix_fn
+    from repro.graphs.topology import make_graph
+
+    spec = GossipSpec.from_graph(make_graph("er", 6, 3.0, seed=0))
+    with pytest.raises(ValueError, match="unknown gossip backend"):
+        make_mix_fn(spec, backend="cuda")

@@ -2,7 +2,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# skip (not error) the whole module where hypothesis isn't installed; CI
+# installs it from requirements.txt
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.gossip import (
     GossipSpec,

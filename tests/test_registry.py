@@ -1,0 +1,137 @@
+"""Method-registry contract tests: every registered method id round-trips
+through the one shared driver; multi-seed batching compiles once; the
+Pallas gossip backend matches the reference mixing path end to end."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.data.synthetic import make_mixture_classification
+from repro.experiments import (
+    METHODS,
+    available_methods,
+    build_context,
+    get_method,
+    run_method,
+    run_method_batch,
+)
+
+EXPECTED_IDS = {
+    "fedspd", "fedspd_permute", "local",
+    "dfl_fedavg", "cfl_fedavg", "dfl_fedem", "cfl_fedem",
+    "dfl_ifca", "cfl_ifca", "dfl_fedsoft", "cfl_fedsoft",
+    "dfl_pfedme", "cfl_pfedme",
+}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    exp = PaperExpConfig(
+        n_clients=5, n_per_client=32, rounds=3, tau=1, batch=8,
+        avg_degree=3.0, model="mlp", dim=8, n_classes=3,
+    )
+    data = make_mixture_classification(
+        n_clients=5, n_clusters=2, n_per_client=32, dim=8, n_classes=3,
+        seed=0, noise=0.3,
+    )
+    return exp, data
+
+
+def test_registry_lists_all_method_ids():
+    assert set(available_methods()) == EXPECTED_IDS
+    assert set(METHODS) == EXPECTED_IDS
+    assert len(METHODS) == 13
+
+
+def test_unknown_method_raises():
+    with pytest.raises(KeyError, match="unknown method"):
+        get_method("fedmagic")
+
+
+# full lane round-trips every id; the fast lane keeps one id per adapter
+# class (the centralized variants and fedspd_permute only change the mixing
+# matrix / gossip wiring, not the adapter plumbing)
+_FAST_IDS = {"fedspd", "local", "dfl_fedavg", "dfl_fedem", "dfl_ifca",
+             "dfl_fedsoft"}
+
+
+@pytest.mark.parametrize(
+    "method",
+    [m if m in _FAST_IDS else pytest.param(m, marks=pytest.mark.slow)
+     for m in sorted(EXPECTED_IDS)],
+)
+def test_method_round_trips_through_driver(setup, method):
+    """Every id resolves via the registry and completes one smoke run with
+    coherent results — no per-method branching anywhere in the driver."""
+    exp, data = setup
+    r = run_method(method, data, exp, seed=0, eval_every=2)
+    assert r.method == method
+    assert np.isfinite(r.mean_acc)
+    assert r.acc_per_client.shape == (exp.n_clients,)
+    assert len(r.curve) == 2  # rounds 0, 2 at eval_every=2, rounds=3
+    if method == "local":
+        assert r.comm_bytes == 0
+    else:
+        assert r.comm_bytes > 0
+
+
+def test_comm_accounting_matches_topology(setup):
+    """Static comm models reflect the transport: centralized star costs
+    2·N·model_bytes per round; FedEM multiplies by S models."""
+    exp, data = setup
+    ctx = build_context(data, exp, seed=0)
+    cfl = get_method("cfl_fedavg").comm_model(ctx)
+    dfl = get_method("dfl_fedavg").comm_model(ctx)
+    em = get_method("dfl_fedem").comm_model(ctx)
+    assert cfl.per_round_bytes == 2.0 * ctx.n_clients * ctx.model_bytes
+    directed_links = float(ctx.graph.adj.sum() - ctx.graph.n)
+    assert dfl.per_round_bytes == directed_links * ctx.model_bytes
+    assert em.per_round_bytes == ctx.n_clusters * dfl.per_round_bytes
+    assert get_method("fedspd").comm_model(ctx).kind == "tracked"
+
+
+@pytest.mark.parametrize(
+    "method",
+    ["dfl_fedavg", pytest.param("fedspd", marks=pytest.mark.slow)],
+)
+def test_multi_seed_batch_single_compile(setup, method):
+    """≥3 seeds produce distinct per-seed results out of ONE jit compile of
+    the vmapped step."""
+    exp, data = setup
+    results = run_method_batch(method, data, exp, seeds=(0, 1, 2),
+                               eval_every=2)
+    assert len(results) == 3
+    assert all(np.isfinite(r.mean_acc) for r in results)
+    assert all(r.acc_per_client.shape == (exp.n_clients,) for r in results)
+    # different seeds -> different random inits/batches -> different results
+    assert len({float(r.mean_acc) for r in results}) > 1
+    assert results[0].extras["n_compiles"] == 1
+
+
+@pytest.mark.slow
+def test_fedspd_pallas_backend_matches_reference(setup):
+    """Same seed, dense reference vs Pallas streaming kernel: the mixing is
+    the same linear map, so the entire run must agree to fp32 tolerance.
+    (The fast lane covers the kernel-level parity in test_kernels.py; this
+    is the end-to-end cross-check.)"""
+    exp, data = setup
+    a = run_method("fedspd", data, exp, seed=0, eval_every=100)
+    b = run_method("fedspd", data, exp, seed=0, eval_every=100,
+                   gossip_backend="pallas")
+    np.testing.assert_allclose(a.acc_per_client, b.acc_per_client, atol=1e-5)
+    np.testing.assert_allclose(a.extras["u"], b.extras["u"], atol=1e-5)
+    assert abs(a.comm_bytes - b.comm_bytes) < 1e-3 * max(a.comm_bytes, 1.0)
+
+
+@pytest.mark.slow
+def test_fedspd_options_flow_through(setup):
+    """Per-run options reach the adapter: tau_final=0 degenerates the final
+    phase to the pure Eq. (2) aggregate (different accuracy than the
+    personalized run), and DP noise perturbs the trajectory."""
+    exp, data = setup
+    base = run_method("fedspd", data, exp, seed=0, eval_every=100)
+    agg = run_method("fedspd", data, exp, seed=0, eval_every=100,
+                     options={"tau_final": 0})
+    noisy = run_method("fedspd", data, exp, seed=0, eval_every=100,
+                       options={"dp_clip": 1.0, "dp_noise_multiplier": 0.5})
+    assert not np.allclose(base.acc_per_client, agg.acc_per_client)
+    assert not np.allclose(base.extras["u"], noisy.extras["u"])
