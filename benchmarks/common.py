@@ -7,10 +7,8 @@ full suite completes on CPU; ``--full`` approaches the paper's scale.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
-import time
 
 import numpy as np
 

@@ -1,0 +1,192 @@
+"""Round-step wall-time benchmark: packed parameter plane vs pytree state.
+
+Times ONE full FedSPD round (the hot path of every experiment and of the
+production train loop) across:
+
+  representation  pytree leaves (S, N, ...)  vs packed (S, N, X) plane
+  gossip backend  reference (dense einsum)   vs pallas streaming kernel
+  regime          full (paper-faithful)      vs stream (production)
+  model           mlp (few dense leaves)     vs conv (multi-leaf CNN)
+
+and writes ``BENCH_roundstep.json`` at the repo root — the first point of
+the repo's perf trajectory (tracked across PRs; CI uploads it as an
+artifact from the bench-smoke lane).
+
+  PYTHONPATH=src python -m benchmarks.perf_roundstep --smoke   # CI sizes
+  PYTHONPATH=src python -m benchmarks.perf_roundstep           # CPU bench
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedspd import FedSPDConfig, init_state, make_round_step
+from repro.core.gossip import GossipSpec, make_mix_fn
+from repro.core.packing import make_pack_spec, pack_state
+from repro.data.synthetic import make_mixture_classification
+from repro.graphs.topology import make_graph
+from repro.models.smallnets import make_classifier
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_roundstep.json")
+
+
+def _block(tree):
+    for leaf in jax.tree.leaves(tree):
+        leaf.block_until_ready()
+
+
+def _build(model: str, regime: str, backend: str, packed: bool,
+           *, n: int, m: int, dim: int, tau: int, seed: int = 0):
+    data = make_mixture_classification(
+        n_clients=n, n_clusters=2, n_per_client=m, dim=dim, n_classes=4,
+        seed=seed,
+    )
+    key = jax.random.PRNGKey(seed)
+    _, _, loss_fn, pel_fn, _ = make_classifier(model, key, dim, 4)
+
+    def model_init(k):
+        p, *_ = make_classifier(model, k, dim, 4)
+        return p
+
+    fcfg = FedSPDConfig(n_clients=n, n_clusters=2, tau=tau, batch=16,
+                        regime=regime)
+    spec = GossipSpec.from_graph(make_graph("er", n, 4.0, seed=seed))
+    state = init_state(key, model_init, fcfg, m)
+    pack_spec = make_pack_spec(jax.eval_shape(model_init, key))
+    if packed:
+        state = pack_state(state, pack_spec)
+    step = jax.jit(make_round_step(
+        loss_fn, pel_fn, spec, fcfg,
+        mix_fn=make_mix_fn(spec, backend, plane=packed),
+        pack_spec=pack_spec if packed else None,
+        model_bytes=pack_spec.model_bytes,
+    ))
+    if regime == "full":
+        payload = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
+    else:
+        payload = {"x": jnp.asarray(data.x[:, :16]),
+                   "y": jnp.asarray(data.y[:, :16])}
+    return step, state, payload, pack_spec
+
+
+def bench_pair(model: str, regime: str, backend: str,
+               *, n: int, m: int, dim: int, tau: int, reps: int,
+               seed: int = 0) -> list[dict]:
+    """Time the pytree and packed representations of the SAME config with
+    strictly interleaved repetitions (A, B, A, B, ...) so slow host drift —
+    large on shared CPU runners — cancels out of the comparison. Each
+    representation reports min-of-reps (measurement noise is strictly
+    additive); the speedup is additionally computed as the median of the
+    per-rep PAIRED ratios, the statistic least sensitive to drift."""
+    built = {p: _build(model, regime, backend, p,
+                       n=n, m=m, dim=dim, tau=tau, seed=seed)
+             for p in (False, True)}
+    compile_s, times = {}, {False: [], True: []}
+    states = {}
+    for p, (step, state, payload, _) in built.items():
+        t0 = time.perf_counter()
+        state, _aux = step(state, payload)
+        _block(state)
+        compile_s[p] = time.perf_counter() - t0
+        states[p] = state
+    for _ in range(reps):
+        for p, (step, _, payload, _) in built.items():
+            t0 = time.perf_counter()
+            states[p], _aux = step(states[p], payload)
+            _block(states[p])
+            times[p].append(time.perf_counter() - t0)
+    paired = statistics.median(
+        a / b for a, b in zip(times[False], times[True])
+    )
+    out = []
+    for p in (False, True):
+        pack_spec = built[p][3]
+        out.append({
+            "model": model, "regime": regime, "backend": backend,
+            "packed": p,
+            "n_clients": n, "n_leaves": pack_spec.n_leaves,
+            "n_params": pack_spec.size,
+            "compile_s": round(compile_s[p], 4),
+            "round_ms": round(min(times[p]) * 1e3, 4),
+            "round_ms_median": round(statistics.median(times[p]) * 1e3, 4),
+            "paired_speedup_vs_pytree": round(paired, 3) if p else 1.0,
+        })
+    return out
+
+
+def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
+    n, m, dim, tau = (8, 32, 16, 2) if fast else (16, 96, 16, 5)
+    reps = reps or (80 if fast else 30)
+    results = []
+    for model in ("mlp", "conv"):
+        for regime in ("full", "stream"):
+            for backend in ("reference", "pallas"):
+                pair = bench_pair(model, regime, backend,
+                                  n=n, m=m, dim=dim, tau=tau, reps=reps)
+                results.extend(pair)
+                for r in pair:
+                    print(f"{model:>5s} {regime:>6s} {backend:>9s} "
+                          f"{'packed' if r['packed'] else 'pytree':>6s}  "
+                          f"round {r['round_ms']:9.2f} ms   "
+                          f"compile {r['compile_s']:6.2f} s")
+    comparisons = []
+    for model in ("mlp", "conv"):
+        for regime in ("full", "stream"):
+            for backend in ("reference", "pallas"):
+                pair = {r["packed"]: r for r in results
+                        if (r["model"], r["regime"], r["backend"])
+                        == (model, regime, backend)}
+                comparisons.append({
+                    "model": model, "regime": regime, "backend": backend,
+                    "pytree_ms": pair[False]["round_ms"],
+                    "packed_ms": pair[True]["round_ms"],
+                    "speedup": pair[True]["paired_speedup_vs_pytree"],
+                })
+    payload = {
+        "bench": "roundstep",
+        "meta": {
+            "jax": jax.__version__,
+            "device_backend": jax.default_backend(),
+            "smoke": fast,
+            "sizes": {"n_clients": n, "n_per_client": m, "dim": dim,
+                      "tau": tau, "reps": reps},
+            "unix_time": int(time.time()),
+        },
+        "results": results,
+        "comparisons": comparisons,
+    }
+    out = os.path.abspath(out)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("\npacked-vs-pytree speedups "
+          f"({'smoke' if fast else 'bench'} sizes):")
+    for c in comparisons:
+        print(f"  {c['model']:>5s} {c['regime']:>6s} {c['backend']:>9s}  "
+              f"{c['pytree_ms']:9.2f} -> {c['packed_ms']:9.2f} ms  "
+              f"x{c['speedup']}")
+    print(f"wrote {out}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="CI sizes (small clients/rounds)")
+    mode.add_argument("--full", action="store_true",
+                      help="bench sizes (the no-flag default)")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    run(fast=args.smoke, out=args.out, reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

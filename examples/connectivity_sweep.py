@@ -3,8 +3,6 @@ LOW-connectivity networks where other DFL methods degrade.
 
     PYTHONPATH=src python examples/connectivity_sweep.py
 """
-import numpy as np
-
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
 from repro.experiments import run_method

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.data.pipeline import client_uniform_batches
 from repro.graphs.mixing import metropolis_weights
-from repro.graphs.topology import Graph, complete
+from repro.graphs.topology import Graph
 from repro.optim.sgd import Optimizer, sgd
 
 PyTree = Any

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 
 from repro.baselines.common import gossip_avg, local_sgd

@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.baselines.common import gossip_avg
-from repro.data.pipeline import client_uniform_batches
 
 
 class FedEMState(NamedTuple):

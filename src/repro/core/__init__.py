@@ -18,6 +18,7 @@ from repro.core.fedspd import (  # noqa: F401
     select_clusters,
 )
 from repro.core.gossip import (  # noqa: F401
+    MIX_BACKENDS,
     GossipSpec,
     consensus_distance,
     fedspd_weight_matrix,
@@ -26,4 +27,12 @@ from repro.core.gossip import (  # noqa: F401
     mix_dense,
     mix_permute,
     round_comm_bytes,
+)
+from repro.core.packing import (  # noqa: F401
+    PackSpec,
+    make_pack_spec,
+    pack,
+    pack_state,
+    unpack,
+    unpack_state,
 )

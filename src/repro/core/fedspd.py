@@ -22,6 +22,19 @@ Two data regimes:
 - ``stream`` (production): each round consumes a fresh batch; assignments
   are computed per-batch, training uses a cluster-masked loss, and u is
   updated as an EMA of batch assignment fractions. Used by launch/train.
+
+Two parameter representations (``make_round_step(pack_spec=...)``):
+- pytree (reference): ``state.centers`` has leaves (S, N, ...); every
+  cross-client stage walks the tree leaf-by-leaf.
+- packed plane (core/packing.py): ``state.centers`` is ONE (S, N, X)
+  fp32 buffer; gather/scatter are single-array indexing, DP clip+noise is
+  one flat L2 norm + fused scale-and-noise over (N, X), gossip mixes the
+  whole plane in one pass (exactly one ``pallas_call`` on the Pallas
+  backend), consensus and Eq. (2) are flat reductions. Models re-enter
+  pytree form only where gradients/forwards need model structure (the
+  local-SGD inner loop and the clustering forward) and at the API
+  boundary (init, eval, checkpoint). Parity with the pytree path is
+  asserted in tests/test_packing.py.
 """
 from __future__ import annotations
 
@@ -38,6 +51,7 @@ from repro.core.gossip import (
     mix,
     round_comm_bytes,
 )
+from repro.core.packing import PackSpec, pack, unpack
 from repro.data.pipeline import client_batches, client_uniform_batches
 from repro.optim.sgd import Optimizer, sgd
 from repro.utils.pytree import (
@@ -134,7 +148,11 @@ def seeded_init(
     grad_fn = jax.grad(loss_fn)
 
     def pretrain_one(s_idx, seed_client):
-        p = model_init(jax.random.fold_in(k_run, s_idx))
+        # distinct subkeys: reusing fold_in(k_run, s_idx) for BOTH the model
+        # init and the batch-sampling scan would correlate the init weights
+        # with the batch sequence (same underlying key stream)
+        k_model, k_scan = jax.random.split(jax.random.fold_in(k_run, s_idx))
+        p = model_init(k_model)
         x_i = jax.tree.map(lambda l: l[seed_client], data)
         batch_all = {"x": x_i["inputs"], "y": x_i["targets"]}
         opt_s = optimizer.init(p)
@@ -147,7 +165,7 @@ def seeded_init(
             return (p, opt_s), None
 
         (p, _), _ = jax.lax.scan(
-            one, (p, opt_s), jax.random.split(jax.random.fold_in(k_run, s_idx), steps)
+            one, (p, opt_s), jax.random.split(k_scan, steps)
         )
         return p
 
@@ -186,9 +204,21 @@ def make_round_step(
     optimizer: Optimizer = None,
     lr_schedule: Callable = None,
     mix_fn: Callable = None,        # (c_sel, s) -> mixed; default Eq. (1)
+    pack_spec: Optional[PackSpec] = None,  # packed (S, N, X) engine
+    model_bytes: Optional[int] = None,     # per-model wire bytes (hoisted)
 ):
     """Returns step(state, data) -> (state, metrics). ``data`` leaves:
-    (N, M, ...) in the "full" regime; (N, B, ...) fresh batch in "stream"."""
+    (N, M, ...) in the "full" regime; (N, B, ...) fresh batch in "stream".
+
+    With ``pack_spec`` (core/packing.py), ``state.centers`` must be the
+    packed (S, N, X) plane (``packing.pack_state``) and the round runs the
+    flat engine; ``mix_fn`` then receives a (N, X) array instead of a
+    pytree (every backend in core/gossip.make_mix_fn handles both).
+    ``model_bytes`` fixes the per-model wire size for comm accounting once
+    at build time (it is static per model); when omitted it is derived
+    once at first trace — packed runs always account ORIGINAL dtypes via
+    the pack spec, so packing never changes reported comm bytes.
+    """
     optimizer = optimizer or sgd()
     if lr_schedule is None:
         lr_schedule = lambda t: cfg.lr0 * (cfg.lr_decay ** t)  # noqa: E731
@@ -196,6 +226,18 @@ def make_round_step(
         mix_fn = lambda c, sel: mix(gossip, c, sel)  # noqa: E731
 
     grad_fn = jax.grad(loss_fn)
+    sigma = cfg.dp_clip * cfg.dp_noise_multiplier
+
+    # static per-model wire bytes: computed once here (not per trace in the
+    # step bodies); the trace-time fallback fills the cell exactly once
+    _model_b = [model_bytes if model_bytes is not None
+                else (pack_spec.model_bytes if pack_spec is not None
+                      else None)]
+
+    def model_b_of(c_sel):
+        if _model_b[0] is None:
+            _model_b[0] = tree_bytes(c_sel) // cfg.n_clients
+        return _model_b[0]
 
     def dp_sanitize(c_old, c_new, key):
         """Clip the round's update to cfg.dp_clip and add Gaussian noise
@@ -222,6 +264,40 @@ def make_round_step(
 
         n = jax.tree.leaves(c_new)[0].shape[0]
         return jax.vmap(one)(c_old, c_new, jax.random.split(key, n))
+
+    def dp_flat_parts(c_old, c_new, key):
+        """Packed-plane DP: ONE flat L2 norm over (N, X) and one fused
+        noise draw — no per-leaf walk, no per-leaf key splits. (The noise
+        stream therefore differs from the pytree path's per-leaf draws;
+        clip-only parity is exact, noisy parity is statistical.) Clip-only
+        rounds (sigma == 0) skip the full-plane draw entirely."""
+        delta = c_new - c_old
+        sq = jnp.sum(jnp.square(delta), axis=-1, keepdims=True)
+        scale = jnp.minimum(1.0, cfg.dp_clip / jnp.sqrt(sq + 1e-12))
+        noise = (jax.random.normal(key, c_new.shape, c_new.dtype)
+                 if sigma > 0 else None)
+        return scale, noise
+
+    def exchange_packed(plane, c_old, c_new, s, k_dp):
+        """Steps (2)+(3) on the flat plane: DP sanitize, Eq. (1) mix, and
+        the scatter back into (S, N, X) — all single-array ops. When the
+        mix backend exposes a fused clip·scale+W·C kernel (Pallas) and no
+        cosine filtering is on (the weight matrix must not depend on the
+        sanitized values), the DP round stays a single HBM pass."""
+        if cfg.dp_clip > 0:
+            scale, noise = dp_flat_parts(c_old, c_new, k_dp)
+            fused = getattr(mix_fn, "fused_dp", None)
+            if fused is not None and gossip.cos_align_threshold <= -1.0:
+                c_mixed = fused(c_old, c_new, scale, noise, sigma, s)
+            else:
+                c_sel = c_old + scale * (c_new - c_old)
+                if noise is not None:
+                    c_sel = c_sel + sigma * noise
+                c_mixed = mix_fn(c_sel, s)
+        else:
+            c_mixed = mix_fn(c_new, s)
+        n = s.shape[0]
+        return plane.at[s, jnp.arange(n)].set(c_mixed.astype(plane.dtype))
 
     def local_updates(c_sel, data, z, s, key, lr):
         """τ SGD steps on the selected centers, cluster-conditional batches."""
@@ -276,9 +352,8 @@ def make_round_step(
             chunk=cfg.cluster_chunk,
         )
 
-        model_b = tree_bytes(c_sel) // cfg.n_clients
         comm = state.comm_bytes + round_comm_bytes(
-            gossip, s, model_b, point_to_point=cfg.point_to_point
+            gossip, s, model_b_of(c_sel), point_to_point=cfg.point_to_point
         )
         new_state = FedSPDState(
             centers=centers, u=u, z=z, round=state.round + 1, key=key,
@@ -322,9 +397,8 @@ def make_round_step(
         )(zb)
         u = (1 - cfg.u_ema) * state.u + cfg.u_ema * u_batch
 
-        model_b = tree_bytes(c_sel) // cfg.n_clients
         comm = state.comm_bytes + round_comm_bytes(
-            gossip, s, model_b, point_to_point=cfg.point_to_point
+            gossip, s, model_b_of(c_sel), point_to_point=cfg.point_to_point
         )
         new_state = FedSPDState(
             centers=centers, u=u, z=state.z, round=state.round + 1, key=key,
@@ -338,6 +412,98 @@ def make_round_step(
         }
         return new_state, metrics
 
+    # ---------------- packed (S, N, X) parameter-plane engine -------------
+
+    def step_full_packed(state: FedSPDState, data: dict):
+        plane = state.centers                       # (S, N, X)
+        key, k_sel, k_local = jax.random.split(state.key, 3)
+        lr = lr_schedule(state.round)
+
+        # (1) cluster selection + τ local steps. gather = ONE dynamic
+        # slice on the plane; the local-SGD scan needs model structure, so
+        # parameters take pytree form only inside this scope.
+        s = select_clusters(k_sel, state.u)
+        c_old = plane[s, jnp.arange(s.shape[0])]    # (N, X)
+        c_new_tree = local_updates(
+            unpack(c_old, pack_spec), data, state.z, s, k_local, lr
+        )
+        c_new = pack(c_new_tree, pack_spec)
+        key, k_dp = jax.random.split(key)
+
+        # (2)+(3) flat sanitize + mix + scatter
+        plane = exchange_packed(plane, c_old, c_new, s, k_dp)
+
+        # (4) re-cluster: the forward pass needs model structure again
+        batch_all = {"x": data["inputs"], "y": data["targets"]}
+        z, u = cluster_all_clients(
+            per_example_loss, unpack(plane, pack_spec), batch_all,
+            cfg.n_clusters, chunk=cfg.cluster_chunk,
+        )
+
+        comm = state.comm_bytes + round_comm_bytes(
+            gossip, s, model_b_of(None), point_to_point=cfg.point_to_point
+        )
+        new_state = FedSPDState(
+            centers=plane, u=u, z=z, round=state.round + 1, key=key,
+            comm_bytes=comm,
+        )
+        metrics = {
+            "lr": lr,
+            "selected": s,
+            "consensus": _consensus_per_cluster_flat(plane),
+            "comm_bytes": comm,
+        }
+        return new_state, metrics
+
+    def step_stream_packed(state: FedSPDState, batch: dict):
+        plane = state.centers                       # (S, N, X)
+        key, k_sel, k_local = jax.random.split(state.key, 3)
+        lr = lr_schedule(state.round)
+        s = select_clusters(k_sel, state.u)
+        c_old = plane[s, jnp.arange(s.shape[0])]    # (N, X)
+
+        # per-batch clustering under *current* centers (model structure)
+        centers_nc = jax.tree.map(
+            lambda l: jnp.swapaxes(l, 0, 1), unpack(plane, pack_spec)
+        )
+
+        def assign(centers_i, batch_i):
+            losses = jax.vmap(lambda c: per_example_loss(c, batch_i))(centers_i)
+            return jnp.argmin(losses, axis=0)  # (B,)
+
+        zb = jax.vmap(assign)(centers_nc, batch)  # (N, B)
+        mask = (zb == s[:, None]).astype(jnp.float32)
+
+        c_new_tree = local_updates(
+            unpack(c_old, pack_spec), {"batch": batch, "mask": mask},
+            None, s, k_local, lr,
+        )
+        c_new = pack(c_new_tree, pack_spec)
+        key, k_dp = jax.random.split(key)
+        plane = exchange_packed(plane, c_old, c_new, s, k_dp)
+
+        u_batch = jax.vmap(
+            lambda z_: mixture_coefficients(z_, cfg.n_clusters)
+        )(zb)
+        u = (1 - cfg.u_ema) * state.u + cfg.u_ema * u_batch
+
+        comm = state.comm_bytes + round_comm_bytes(
+            gossip, s, model_b_of(None), point_to_point=cfg.point_to_point
+        )
+        new_state = FedSPDState(
+            centers=plane, u=u, z=state.z, round=state.round + 1, key=key,
+            comm_bytes=comm,
+        )
+        metrics = {
+            "lr": lr,
+            "selected": s,
+            "consensus": _consensus_per_cluster_flat(plane),
+            "comm_bytes": comm,
+        }
+        return new_state, metrics
+
+    if pack_spec is not None:
+        return step_full_packed if cfg.regime == "full" else step_stream_packed
     return step_full if cfg.regime == "full" else step_stream
 
 
@@ -349,13 +515,32 @@ def _consensus_per_cluster(centers: PyTree, s_clusters: int) -> jnp.ndarray:
     return jnp.stack(ds)
 
 
+def _consensus_per_cluster_flat(plane: jnp.ndarray) -> jnp.ndarray:
+    """Theorem 5.10's E_t per cluster as ONE flat reduction over the packed
+    (S, N, X) plane — no per-cluster/per-leaf python loop."""
+    p32 = plane.astype(jnp.float32)
+    mean = jnp.mean(p32, axis=1, keepdims=True)
+    return jnp.sum(jnp.square(p32 - mean), axis=(1, 2)) / plane.shape[1]
+
+
 # --------------------------------------------------------------------------
 # Final phase (Algorithm 1, FINALPHASE)
 # --------------------------------------------------------------------------
 
 
-def personalize(state: FedSPDState) -> PyTree:
-    """Eq. (2): x_i = Σ_s u_{i,s} c_{i,s}. Returns leaves (N, ...)."""
+def personalize(state: FedSPDState,
+                pack_spec: Optional[PackSpec] = None) -> PyTree:
+    """Eq. (2): x_i = Σ_s u_{i,s} c_{i,s}. Returns leaves (N, ...).
+
+    Packed states collapse to ONE weighted contraction over the plane
+    (`(N, S)·(S, N, X) -> (N, X)`), unpacked to pytree form only here —
+    the API boundary."""
+    if pack_spec is not None:
+        plane = state.centers  # (S, N, X)
+        mixed = jnp.einsum(
+            "ns,snx->nx", state.u.astype(plane.dtype), plane
+        )
+        return unpack(mixed, pack_spec)
     centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
 
     def one(centers_i, u_i):
@@ -371,11 +556,12 @@ def final_phase(
     cfg: FedSPDConfig,
     optimizer: Optimizer = None,
     lr: float | None = None,
+    pack_spec: Optional[PackSpec] = None,
 ) -> PyTree:
     """Aggregate (Eq. 2) then τ_final local epochs on ALL local data —
     communication-free personalization. Returns personalized params (N, ...)."""
     optimizer = optimizer or sgd()
-    params = personalize(state)
+    params = personalize(state, pack_spec)
     lr = lr if lr is not None else cfg.lr0 * cfg.final_lr_scale * (
         cfg.lr_decay ** state.round
     )

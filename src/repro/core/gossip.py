@@ -22,7 +22,6 @@ center (cos ≥ threshold), which resolves label switching across clients.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -31,7 +30,6 @@ import numpy as np
 
 from repro.graphs.coloring import permute_schedule
 from repro.graphs.topology import Graph
-from repro.utils.pytree import tree_bytes, tree_vdot
 
 PyTree = Any
 
@@ -139,33 +137,96 @@ def mix(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray) -> PyTree:
     raise ValueError(f"unknown gossip mode {spec.mode!r}")
 
 
-MIX_BACKENDS = ("reference", "pallas")
+MIX_BACKENDS = ("reference", "pallas", "ppermute")
 
 
-def make_mix_fn(spec: GossipSpec, backend: str = "reference"):
+def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
+                plane: bool = False, mesh=None):
     """Gossip backend selector: a ``mix_fn(c_sel, s)`` for FedSPD's round
     step (core/fedspd.make_round_step).
 
     - ``reference``: the pure-jnp paths above (dense einsum or edge-colored
-      permute schedule, per ``spec.mode``).
+      permute schedule, per ``spec.mode``). Polymorphic over pytree and
+      packed (N, X) inputs (a bare array is a one-leaf pytree).
     - ``pallas``: build the Eq. (1) weight matrix, then stream C <- W·C
       through the Pallas TPU kernel (kernels/gossip_mix) — one HBM pass over
       the flattened parameters. Interpret mode on CPU hosts, compiled Mosaic
-      on TPU (kernels/ops convention). Parity with the reference path is
-      asserted in tests/test_kernels.py.
+      on TPU (kernels/ops convention). With ``plane=True`` the input is the
+      packed (N, X) parameter plane and the backend issues exactly ONE
+      ``pallas_call`` per mix (asserted in tests/test_packing.py); DP rounds
+      additionally expose ``mix_fn.fused_dp`` — the fused clip·scale + W·C
+      kernel — so a sanitized exchange stays a single HBM pass.
+    - ``ppermute``: the launch/steps.py shard_map edge-colored
+      ``lax.ppermute`` schedule (one collective permute per color class,
+      bytes ∝ deg·X per client instead of the dense all-gather's N·X).
+      Needs EXACTLY one client per mesh row: pass a mesh whose
+      ("pod","data") rows number exactly N, or leave ``mesh=None`` to
+      auto-build an (N, 1) ("data","model") mesh from visible devices
+      (raises if fewer than N are visible — force with
+      --xla_force_host_platform_device_count on CPU hosts; an oversized
+      mesh is NOT valid, the shard_map specs divide the client axis by
+      the row count). Parity with the reference path is asserted in tests.
     """
     if backend in ("reference", None):
         return lambda c_sel, s: mix(spec, c_sel, s)
     if backend == "pallas":
-        from repro.kernels.gossip_mix import gossip_mix_tree
+        from repro.kernels.gossip_mix import (
+            gossip_mix_flat,
+            gossip_mix_fused_dp,
+            gossip_mix_tree,
+        )
 
         interpret = jax.default_backend() != "tpu"
+
+        if plane:
+            def mix_pallas(c_sel, s):
+                w = fedspd_weight_matrix(spec, s, c_sel)
+                return gossip_mix_flat(
+                    w, c_sel, interpret=interpret
+                ).astype(c_sel.dtype)
+
+            def fused_dp(c_old, c_new, scale, noise, sigma, s):
+                # weight matrix from selections only — cos alignment would
+                # need the sanitized values this kernel is about to build
+                w = fedspd_weight_matrix(spec, s, None)
+                return gossip_mix_fused_dp(
+                    w, c_old, c_new, scale, noise, sigma,
+                    interpret=interpret,
+                ).astype(c_old.dtype)
+
+            if spec.cos_align_threshold <= -1.0:
+                mix_pallas.fused_dp = fused_dp
+            return mix_pallas
 
         def mix_pallas(c_sel, s):
             w = fedspd_weight_matrix(spec, s, c_sel)
             return gossip_mix_tree(w, c_sel, interpret=interpret)
 
         return mix_pallas
+    if backend == "ppermute":
+        if spec.cos_align_threshold > -1.0:
+            raise ValueError(
+                "ppermute backend does not implement cosine-alignment "
+                "filtering; use the reference or pallas backend"
+            )
+        from repro.launch.steps import make_ppermute_gossip_mix
+
+        n = spec.adj.shape[0]
+        if mesh is None:
+            devices = jax.devices()
+            if len(devices) < n:
+                raise RuntimeError(
+                    "ppermute backend needs one device per client "
+                    f"({n} clients, {len(devices)} devices visible) — run "
+                    "under a mesh, or force host devices with "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count"
+                )
+            mesh = jax.sharding.Mesh(
+                np.asarray(devices[:n]).reshape(n, 1), ("data", "model")
+            )
+        return make_ppermute_gossip_mix(
+            spec, mesh, replicate_model_dims=True
+        )
     raise ValueError(
         f"unknown gossip backend {backend!r}; expected one of {MIX_BACKENDS}"
     )

@@ -1,0 +1,132 @@
+"""Packed parameter plane: the whole center stack as ONE flat array.
+
+FedSPD's matrix notation treats the cluster-s center stack as C_s in
+R^{N x X}; the code historically realized it as a pytree with leaves
+(S, N, *model_dims) and walked the tree leaf-by-leaf in every hot-path
+stage (gossip mix, DP sanitize, cosine alignment, consensus, Eq. (2)).
+That turns what should be one streaming HBM pass into L passes with
+ragged tails, and the Pallas gossip backend into L ``pallas_call``
+launches per round.
+
+``PackSpec`` computes the unravel metadata ONCE — per-leaf offsets,
+shapes, dtypes, and the total flat width X are static Python values fixed
+at trace time — so the round step can run end-to-end on a single
+``(S, N, X)`` buffer:
+
+    plane = pack(centers_tree, spec)     # (S, N, X) fp32
+    tree  = unpack(plane, spec)          # leaves (S, N, ...) orig dtypes
+
+``pack``/``unpack`` are shape-polymorphic in the leading batch dims (the
+same spec serves (X,), (N, X), (S, N, X), and a vmapped (K, S, N, X)) and
+jit/vmap-safe: all slicing uses static offsets. The plane dtype defaults
+to fp32 — the master-precision accumulate dtype of every hot-path stage —
+and ``unpack`` casts back to each leaf's original dtype, so pack∘unpack
+is exact for fp32/bf16/fp16 leaves. Models only enter/leave pytree form
+at the API boundary (init, eval, checkpoint); everything between is flat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static unravel metadata for one model pytree (computed once)."""
+
+    treedef: Any
+    shapes: tuple  # per-leaf model-dim shapes, e.g. ((128, 64), (64,), ...)
+    dtypes: tuple  # per-leaf original dtypes
+    sizes: tuple   # per-leaf flat sizes (prod of shape)
+    offsets: tuple  # per-leaf start offset into the X axis
+    size: int       # X: total flat width
+    dtype: Any = jnp.float32  # plane dtype (master precision)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    @property
+    def model_bytes(self) -> int:
+        """Per-model bytes in the ORIGINAL dtypes — what actually crosses
+        the wire (comm accounting must not change when the compute
+        representation does)."""
+        return int(sum(s * np.dtype(d).itemsize
+                       for s, d in zip(self.sizes, self.dtypes)))
+
+
+def make_pack_spec(example: PyTree, dtype=jnp.float32) -> PackSpec:
+    """Build the static packing metadata from ONE model's pytree (arrays or
+    ``jax.ShapeDtypeStruct``s — use ``jax.eval_shape(model_init, key)`` to
+    avoid materializing weights)."""
+    leaves, treedef = jax.tree.flatten(example)
+    shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+    dtypes = tuple(jnp.dtype(leaf.dtype) for leaf in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    return PackSpec(
+        treedef=treedef, shapes=shapes, dtypes=dtypes, sizes=sizes,
+        offsets=offsets, size=int(sum(sizes)), dtype=jnp.dtype(dtype),
+    )
+
+
+def _batch_ndim(leaf_ndim: int, shape: tuple) -> int:
+    bnd = leaf_ndim - len(shape)
+    if bnd < 0:
+        raise ValueError(
+            f"leaf rank {leaf_ndim} smaller than packed model rank "
+            f"{len(shape)} — tree does not match the pack spec"
+        )
+    return bnd
+
+
+def pack(tree: PyTree, spec: PackSpec) -> jnp.ndarray:
+    """Leaves (*B, *model_dims) -> one (*B, X) plane (any batch prefix B,
+    shared by all leaves: (), (N,), (S, N), a vmapped (K, S, N), ...)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if treedef != spec.treedef:
+        raise ValueError(f"tree structure {treedef} != spec {spec.treedef}")
+    bnd = _batch_ndim(leaves[0].ndim, spec.shapes[0])
+    flat = []
+    for leaf, shape, size in zip(leaves, spec.shapes, spec.sizes):
+        if _batch_ndim(leaf.ndim, shape) != bnd or tuple(leaf.shape[bnd:]) != shape:
+            raise ValueError(
+                f"leaf shape {leaf.shape} does not end with packed shape "
+                f"{shape} (batch ndim {bnd})"
+            )
+        flat.append(jnp.reshape(leaf, leaf.shape[:bnd] + (size,))
+                    .astype(spec.dtype))
+    return jnp.concatenate(flat, axis=-1)
+
+
+def unpack(plane: jnp.ndarray, spec: PackSpec) -> PyTree:
+    """(*B, X) plane -> pytree with leaves (*B, *model_dims), cast back to
+    each leaf's original dtype. Offsets are static, so this lowers to
+    static slices (free under XLA fusion)."""
+    if plane.shape[-1] != spec.size:
+        raise ValueError(f"plane width {plane.shape[-1]} != spec X {spec.size}")
+    batch = plane.shape[:-1]
+    leaves = [
+        jnp.reshape(plane[..., o:o + sz], batch + shape).astype(dt)
+        for o, sz, shape, dt in zip(spec.offsets, spec.sizes, spec.shapes,
+                                    spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def pack_state(state, spec: PackSpec):
+    """FedSPDState with pytree centers -> same state with the (S, N, X)
+    plane as ``centers`` (an array is a valid pytree, so the NamedTuple —
+    and everything downstream that treats centers opaquely — is unchanged)."""
+    return state._replace(centers=pack(state.centers, spec))
+
+
+def unpack_state(state, spec: PackSpec):
+    """Inverse of ``pack_state`` (checkpoint / eval boundary)."""
+    return state._replace(centers=unpack(state.centers, spec))

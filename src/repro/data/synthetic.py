@@ -22,7 +22,6 @@ client's mixture, again with U[0.1, 0.9] fractions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

@@ -20,9 +20,14 @@ The ``Method`` protocol (all functions pure & traceable so the driver can
 
 FedSPD additionally honours per-run ``options``:
     mode            gossip wiring: "dense" | "permute"
-    gossip_backend  execution path for Eq. (1): "reference" | "pallas"
-                    (core/gossip.make_mix_fn — the Pallas fast path streams
-                    C <- W·C through kernels/gossip_mix)
+    gossip_backend  execution path for Eq. (1): "reference" | "pallas" |
+                    "ppermute" (core/gossip.make_mix_fn — the Pallas fast
+                    path streams C <- W·C through kernels/gossip_mix; the
+                    ppermute path runs the launch/steps.py shard_map
+                    edge-colored collective schedule, one device per client)
+    param_plane     run the round step on the packed (S, N, X) parameter
+                    plane (core/packing.py) instead of per-leaf pytree
+                    walks; parity-tested against the pytree reference
     dp_clip, dp_noise_multiplier, tau_final, cos_align_threshold
 """
 from __future__ import annotations
@@ -44,6 +49,7 @@ from repro.core import (
     seeded_init,
 )
 from repro.core.gossip import make_mix_fn
+from repro.core.packing import make_pack_spec, pack_state
 from repro.graphs.topology import Graph, complete
 from repro.models.smallnets import make_classifier
 from repro.utils.pytree import tree_bytes, tree_weighted_sum
@@ -211,11 +217,25 @@ class FedSPDMethod(Method):
     """Paper Algorithm 1 behind the registry contract. ``mode`` selects the
     gossip wiring (dense Eq. (1) matrix vs edge-colored permute schedule);
     ``ctx.options['gossip_backend']`` additionally routes execution through
-    the Pallas streaming kernel."""
+    the Pallas streaming kernel or the shard_map ppermute schedule, and
+    ``ctx.options['param_plane']`` switches the round step onto the packed
+    (S, N, X) parameter plane (core/packing.py)."""
 
     def __init__(self, name: str, mode: str = "dense"):
         self.name = name
         self.mode = mode
+
+    def _pack_spec(self, ctx: ExperimentContext):
+        if not ctx.opt("param_plane", False):
+            return None
+        # static per context — derive once and stash in the per-run options
+        # dict (init/make_step/personalize/evaluate all come through here)
+        spec = ctx.options.get("_pack_spec")
+        if spec is None:
+            sds = jax.eval_shape(ctx.model_init, jax.random.PRNGKey(0))
+            spec = make_pack_spec(sds)
+            ctx.options["_pack_spec"] = spec
+        return spec
 
     def _fcfg(self, ctx: ExperimentContext) -> FedSPDConfig:
         exp = ctx.exp
@@ -234,14 +254,23 @@ class FedSPDMethod(Method):
         )
 
     def init(self, ctx, key):
-        return seeded_init(key, ctx.model_init, self._fcfg(ctx), ctx.loss_fn,
-                           ctx.train)
+        state = seeded_init(key, ctx.model_init, self._fcfg(ctx), ctx.loss_fn,
+                            ctx.train)
+        ps = self._pack_spec(ctx)
+        # pytree -> packed plane at the API boundary (models re-enter
+        # pytree form only for eval/checkpoint)
+        return pack_state(state, ps) if ps is not None else state
 
     def make_step(self, ctx):
         spec = self._spec(ctx)
-        mix_fn = make_mix_fn(spec, backend=ctx.opt("gossip_backend", "reference"))
+        ps = self._pack_spec(ctx)
+        mix_fn = make_mix_fn(
+            spec, backend=ctx.opt("gossip_backend", "reference"),
+            plane=ps is not None,
+        )
         step = make_round_step(ctx.loss_fn, ctx.pel_fn, spec, self._fcfg(ctx),
-                               mix_fn=mix_fn)
+                               mix_fn=mix_fn, pack_spec=ps,
+                               model_bytes=ctx.model_bytes)
 
         def wrapped(state, train, key, lr):
             # FedSPD's round step carries its own key and lr schedule in
@@ -253,7 +282,8 @@ class FedSPDMethod(Method):
 
     def personalize(self, ctx, state, key):
         del key
-        return final_phase(state, ctx.loss_fn, ctx.train, self._fcfg(ctx))
+        return final_phase(state, ctx.loss_fn, ctx.train, self._fcfg(ctx),
+                           pack_spec=self._pack_spec(ctx))
 
     def comm_model(self, ctx):
         return CommModel(kind="tracked")

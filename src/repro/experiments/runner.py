@@ -82,13 +82,15 @@ def run_method(
     eval_every: int = 10,
     gossip_mode: str | None = None,
     gossip_backend: str | None = None,
+    param_plane: bool | None = None,
     options: dict | None = None,
 ) -> RunResult:
     """Run one method for ``exp.rounds`` rounds; returns RunResult.
 
-    ``gossip_mode`` / ``gossip_backend`` are FedSPD conveniences forwarded
-    into ``options`` ("dense"/"permute" wiring; "reference"/"pallas"
-    execution).  Arbitrary per-method knobs go through ``options``.
+    ``gossip_mode`` / ``gossip_backend`` / ``param_plane`` are FedSPD
+    conveniences forwarded into ``options`` ("dense"/"permute" wiring;
+    "reference"/"pallas"/"ppermute" execution; packed (S, N, X) plane vs
+    pytree state).  Arbitrary per-method knobs go through ``options``.
     """
     t0 = time.time()
     m = get_method(method)
@@ -97,6 +99,8 @@ def run_method(
         options.setdefault("mode", gossip_mode)
     if gossip_backend is not None:
         options.setdefault("gossip_backend", gossip_backend)
+    if param_plane is not None:
+        options.setdefault("param_plane", param_plane)
     ctx = build_context(data, exp, graph=graph, seed=seed, options=options)
 
     key = jax.random.PRNGKey(seed)

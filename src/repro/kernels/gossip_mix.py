@@ -8,7 +8,9 @@ tens of billions is tiled along X: grid = (n_x_blocks,), each step loads a
 (N, x_block) slab, does one (N×N)·(N×x_block) MXU matmul, and writes the
 mixed slab. x_block = 2048 keeps the slab (N=128 → 1 MB bf16 in + 1 MB out
 + W) comfortably inside VMEM with room for double buffering, and the matmul
-K-dim = N is zero-padded to 8/128 alignment by Mosaic.
+K-dim = N is zero-padded to 8/128 alignment by Mosaic. Interpret mode
+(CPU validation) defaults to one whole-X block instead — there is no VMEM
+to respect and each grid step costs ~100 µs of interpreter overhead.
 
 This fuses FedSPD's neighbor averaging into a single streaming pass over
 the parameters — the HBM-bound ideal (read C once, write C once).
@@ -22,7 +24,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _mix_kernel(w_ref, c_ref, o_ref):
@@ -33,21 +34,43 @@ def _mix_kernel(w_ref, c_ref, o_ref):
     ).astype(o_ref.dtype)
 
 
+def _plan_blocks(x: int, x_block: int | None, interpret: bool) -> int:
+    """Block width for tiling the X axis.
+
+    The X grid exists to bound VMEM residency on real TPUs; interpret
+    mode (CPU validation / CI) has no VMEM and pays ~100 µs of
+    interpreter overhead PER GRID STEP, so its default is one whole-X
+    block. An explicit ``x_block`` is always honored (the multi-block
+    path is exercised in tests via small explicit blocks).
+
+    A requested ``x_block`` is re-planned into ``ceil(X / x_block)``
+    equal-width blocks instead of always tiling at the full width: the
+    trailing block's waste drops from up to ``x_block - 1`` columns to
+    under one lane tile. Blocks stay 128-lane aligned whenever the
+    caller's ``x_block`` is (the Mosaic tiling constraint); tiny or
+    unaligned test sizes fall back to align=1. Non-dividing trailing
+    blocks are handled by Pallas's edge masking — no host-side zero-pad
+    / crop copies of the plane."""
+    if x_block is None:
+        x_block = x if interpret else 2048
+    x_block = min(x_block, x)
+    align = 128 if (x_block % 128 == 0 and x >= 128) else 1
+    k = -(-x // x_block)          # number of grid steps
+    per = -(-x // k)              # ceil(x / k) columns per step
+    return -(-per // align) * align
+
+
 def gossip_mix_flat(
     w: jnp.ndarray,  # (N, N) row-stochastic mixing weights
     c: jnp.ndarray,  # (N, X) flattened per-client parameters
     *,
-    x_block: int = 2048,
+    x_block: int | None = None,  # default: 2048 compiled, whole-X interpret
     interpret: bool = True,
 ) -> jnp.ndarray:
     n, x = c.shape
-    x_block = min(x_block, x)
-    pad = (-x) % x_block
-    if pad:
-        c = jnp.pad(c, ((0, 0), (0, pad)))
-    xp = c.shape[1]
-    grid = (xp // x_block,)
-    out = pl.pallas_call(
+    x_block = _plan_blocks(x, x_block, interpret)
+    grid = (-(-x // x_block),)
+    return pl.pallas_call(
         _mix_kernel,
         grid=grid,
         in_specs=[
@@ -55,15 +78,20 @@ def gossip_mix_flat(
             pl.BlockSpec((n, x_block), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((n, x_block), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, xp), c.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, x), c.dtype),
         interpret=interpret,
     )(w, c)
-    return out[:, :x] if pad else out
 
 
-def gossip_mix_tree(w: jnp.ndarray, c_tree, *, x_block: int = 2048,
+def gossip_mix_tree(w: jnp.ndarray, c_tree, *, x_block: int | None = None,
                     interpret: bool = True):
-    """Apply the mix to a pytree of (N, ...) leaves (flatten / unflatten)."""
+    """Apply the mix to a pytree of (N, ...) leaves (flatten / unflatten).
+
+    One ``pallas_call`` PER LEAF with ragged sub-block tails — kept as the
+    compatibility path for pytree states. The packed parameter plane
+    (core/packing.py) feeds ``gossip_mix_flat`` directly: exactly one call
+    over the whole (N, X) buffer per round.
+    """
     def one(leaf):
         n = leaf.shape[0]
         flat = leaf.reshape(n, -1)
@@ -71,3 +99,66 @@ def gossip_mix_tree(w: jnp.ndarray, c_tree, *, x_block: int = 2048,
         return mixed.reshape(leaf.shape).astype(leaf.dtype)
 
     return jax.tree.map(one, c_tree)
+
+
+def _mix_dp_kernel(w_ref, co_ref, cn_ref, sc_ref, *refs, sigma: float):
+    """Fused DP sanitize + mix on one (N, x_block) slab:
+    o = W · (c_old + scale ⊙ (c_new − c_old) + σ·noise).
+    ``refs`` is (nz_ref, o_ref) when σ > 0, else just (o_ref,) — clip-only
+    rounds carry no noise operand at all (no wasted HBM traffic)."""
+    o_ref = refs[-1]
+    w = w_ref[...].astype(jnp.float32)        # (N, N)
+    co = co_ref[...].astype(jnp.float32)      # (N, x_block)
+    cn = cn_ref[...].astype(jnp.float32)
+    sc = sc_ref[...].astype(jnp.float32)      # (N, 1) per-client clip scale
+    c = co + sc * (cn - co)
+    if sigma > 0.0:
+        c = c + sigma * refs[0][...].astype(jnp.float32)
+    o_ref[...] = jax.lax.dot_general(
+        w, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def gossip_mix_fused_dp(
+    w: jnp.ndarray,      # (N, N) row-stochastic mixing weights
+    c_old: jnp.ndarray,  # (N, X) pre-round selected centers (packed plane)
+    c_new: jnp.ndarray,  # (N, X) post-local-update centers
+    scale: jnp.ndarray,  # (N, 1) per-client L2 clip scale (precomputed)
+    noise,               # (N, X) standard Gaussian draw; None iff sigma == 0
+    sigma: float,        # dp_clip * dp_noise_multiplier (static)
+    *,
+    x_block: int | None = None,  # default: 2048 compiled, whole-X interpret
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """DP round in a single streaming pass: clip·scale + noise + W·C fused
+    into one ``pallas_call`` over the packed plane, so the parameters are
+    read from and written to HBM exactly once. The per-client clip scale
+    (one flat L2 norm) and the noise array are tiny / cheap by comparison
+    and are produced outside the kernel. Clip-only DP (sigma == 0) passes
+    ``noise=None`` and the kernel takes no noise operand."""
+    n, x = c_old.shape
+    sigma = float(sigma)
+    assert c_new.shape == (n, x)
+    assert (noise is None) == (sigma <= 0.0)
+    scale = scale.reshape(n, 1)
+    x_block = _plan_blocks(x, x_block, interpret)
+    slab = pl.BlockSpec((n, x_block), lambda i: (0, i))
+    in_specs = [
+        pl.BlockSpec((n, n), lambda i: (0, 0)),
+        slab,
+        slab,
+        pl.BlockSpec((n, 1), lambda i: (0, 0)),
+    ]
+    operands = [w, c_old, c_new, scale]
+    if sigma > 0.0:
+        assert noise.shape == (n, x)
+        in_specs.append(slab)
+        operands.append(noise)
+    return pl.pallas_call(
+        functools.partial(_mix_dp_kernel, sigma=sigma),
+        grid=(-(-x // x_block),),
+        in_specs=in_specs,
+        out_specs=slab,
+        out_shape=jax.ShapeDtypeStruct((n, x), c_old.dtype),
+        interpret=interpret,
+    )(*operands)

@@ -16,9 +16,8 @@ pod-aware: dense intra-pod (ICI), sparse bridges inter-pod (DCN).
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
+import numpy as np
 
 # --- TPU v5e hardware constants (per chip), used by roofline/ ---
 PEAK_FLOPS_BF16 = 197e12     # FLOP/s

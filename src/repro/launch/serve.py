@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ARCH_ALIASES, get_config, get_smoke_config
 from repro.checkpoint import ckpt
+from repro.configs.base import ARCH_ALIASES, get_config, get_smoke_config
 from repro.models.registry import build_model
 
 

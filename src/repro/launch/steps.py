@@ -15,7 +15,6 @@ seq_len-deep cache (decode_32k, long_500k).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -25,7 +24,7 @@ from repro.configs.base import ArchConfig
 from repro.core.fedspd import FedSPDConfig, make_round_step
 from repro.core.gossip import GossipSpec
 from repro.graphs.topology import pod_aware
-from repro.models.registry import ModelBundle, build_model
+from repro.models.registry import ModelBundle
 from repro.optim.sgd import make_optimizer
 
 PyTree = Any
@@ -44,10 +43,22 @@ def make_fedspd_train_step(
     gossip: GossipSpec,
     fcfg: FedSPDConfig,
     mix_fn=None,
+    pack_spec=None,
 ):
-    """One FedSPD round over (N_clients, per_client_batch, ...) batches."""
+    """One FedSPD round over (N_clients, per_client_batch, ...) batches.
+
+    ``pack_spec`` (core/packing.py) selects the packed (S, N, X)
+    parameter-plane engine; the per-model wire bytes are derived once here
+    (static per model) instead of per-trace inside the step body."""
+    model_bytes = None
+    if getattr(bundle, "init", None) is not None:
+        from repro.utils.pytree import tree_bytes
+
+        p_sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        model_bytes = tree_bytes(p_sds)
     step = make_round_step(
         bundle.loss, bundle.per_example_loss, gossip, fcfg, mix_fn=mix_fn,
+        pack_spec=pack_spec, model_bytes=model_bytes,
     )
 
     def train_step(state, batch):
@@ -110,7 +121,7 @@ def supports_shape(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
     return True, ""
 
 
-def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example,
+def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
                              replicate_model_dims: bool = False):
     """FedSPD's Eq. (1) as an explicit edge-colored ``lax.ppermute`` schedule
     under shard_map (§Perf H1 iter 2 found that ``jnp.take`` along the
@@ -120,16 +131,19 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example,
 
     Requires exactly one client per ("pod","data") mesh row (the production
     mapping). ``state_example`` provides the selected-center pytree SDS so
-    per-leaf shard_map specs can be derived once.
+    per-leaf shard_map specs can be derived once; when omitted (the
+    registry path — core/gossip.make_mix_fn backend="ppermute") the specs
+    are derived at trace time from the actual ``c_sel`` argument, which
+    also makes the schedule polymorphic over pytree and packed-plane
+    inputs.
     """
     import numpy as np
-    from functools import partial
 
-    from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
 
-    from repro.launch.mesh import dp_axes
     from repro.launch import sharding as shd
+    from repro.launch.mesh import dp_axes
 
     dp = dp_axes(mesh)
     n = gossip.adj.shape[0]
@@ -154,12 +168,16 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example,
             inner = shd.param_spec(path, leaf.shape[1:], mesh)
         return P(dp, *inner)
 
-    c_specs = jax.tree_util.tree_map_with_path(
-        lambda pth, l: leaf_spec(pth, l), state_example
-    )
+    def build_specs(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda pth, l: leaf_spec(pth, l), tree
+        )
+
+    c_specs = build_specs(state_example) if state_example is not None else None
     axis = dp if len(dp) > 1 else dp[0]
 
     def mix_fn(c_sel, s):
+        specs = c_specs if c_specs is not None else build_specs(c_sel)
         def body(c_loc, s_loc):
             # c_loc leaves (1, X_shard...); s_loc (1,)
             idx = jax.lax.axis_index(dp[-1])
@@ -189,8 +207,8 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example,
         fn = shard_map(
             lambda c, sv: body(c, sv)[0],
             mesh=mesh,
-            in_specs=(c_specs, P(dp)),
-            out_specs=c_specs,
+            in_specs=(specs, P(dp)),
+            out_specs=specs,
         )
         return fn(c_sel, s)
 

@@ -22,15 +22,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.configs.base import ARCH_ALIASES, get_config, get_smoke_config
 from repro.core.fedspd import (
-    FedSPDConfig, final_phase, init_state, make_round_step, personalize,
+    FedSPDConfig, init_state, make_round_step, personalize,
 )
 from repro.core.gossip import GossipSpec
 from repro.data.synthetic import make_mixture_tokens
 from repro.graphs.topology import make_graph
 from repro.models.registry import build_model
-from repro.checkpoint import ckpt
 
 
 def fl_perplexity(bundle, params_stack, batch) -> float:
@@ -115,7 +115,7 @@ def main(argv=None):
         d_enc = cfg.encoder_d_model or cfg.d_model
         eval_batch["frames"] = jnp.zeros(
             (n, args.batch, cfg.encoder_frames or 16, d_enc), jnp.float32)
-    print(f"final mean per-client loss (personalized Eq.2): "
+    print("final mean per-client loss (personalized Eq.2): "
           f"{fl_perplexity(bundle, personalized, eval_batch):.4f}")
     print(f"mixture coefficients u:\n{np.asarray(state.u).round(3)}")
     if args.save:

@@ -20,10 +20,9 @@ All functions take GQA-layout tensors:
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
 

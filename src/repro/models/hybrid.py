@@ -13,15 +13,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
 from repro.models.attention import decode_attention
 from repro.models.layers import (
     apply_norm,
     cast_params_for_compute,
-    unroll_arg,
     dense_init,
     embed_init,
     rmsnorm_init,
     stack_init,
+    unroll_arg,
 )
 from repro.models.ssm import (
     apply_mamba_layer,
@@ -29,7 +30,6 @@ from repro.models.ssm import (
     init_mamba_cache,
     init_mamba_layer,
 )
-from repro.models import transformer as tfm
 
 
 def segment_sizes(cfg: ArchConfig) -> list[int]:

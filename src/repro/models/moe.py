@@ -21,7 +21,8 @@ def init_moe(key, d_model: int, d_ff: int, n_experts: int, act: str, dtype):
     kr, k1, k2, k3 = jax.random.split(key, 4)
     p = {
         "router": dense_init(kr, d_model, n_experts, jnp.float32),
-        "w_in": (jax.random.normal(k1, (n_experts, d_model, d_ff)) / jnp.sqrt(d_model)).astype(dtype),
+        "w_in": (jax.random.normal(k1, (n_experts, d_model, d_ff))
+                 / jnp.sqrt(d_model)).astype(dtype),
         "w_out": (jax.random.normal(k2, (n_experts, d_ff, d_model)) / jnp.sqrt(d_ff)).astype(dtype),
     }
     if act == "silu":

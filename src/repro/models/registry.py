@@ -17,9 +17,8 @@ batch: {"tokens": (B, L)} (+ {"frames": (B, T, D)} for audio).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig

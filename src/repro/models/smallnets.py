@@ -4,8 +4,6 @@ counterpart is an MLP — plus a tiny 1D-conv net mirroring the paper's CNN
 structure for the "more complex model" ablations)."""
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 

@@ -20,12 +20,11 @@ from repro.configs.base import ArchConfig
 from repro.models.layers import (
     apply_norm,
     cast_params_for_compute,
-    unroll_arg,
     dense_init,
     embed_init,
-    next_token_loss,
     rmsnorm_init,
     stack_init,
+    unroll_arg,
 )
 
 NEG_INF = -1e30

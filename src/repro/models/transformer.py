@@ -29,7 +29,6 @@ from repro.models.layers import (
     init_mlp,
     next_token_loss,
     rmsnorm_init,
-    softmax_xent,
     stack_init,
     unroll_arg,
 )

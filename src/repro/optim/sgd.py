@@ -8,7 +8,6 @@ optax-style (init/update) but self-contained — no external deps.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -19,8 +19,6 @@ import json
 import re
 from typing import Optional
 
-import numpy as np
-
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 _DTYPE_BYTES = {

@@ -7,7 +7,6 @@ import pytest
 
 from repro.models.attention import (
     blocked_attention,
-    combine_decode_parts,
     decode_attention,
     decode_attention_parts,
     ref_attention,

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core.clustering import (
-    assign_clusters,
     cluster_all_clients,
     clustering_accuracy,
     mixture_coefficients,

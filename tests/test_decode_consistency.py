@@ -1,7 +1,6 @@
 """Strong integration invariant: prefill + decode_step logits must match the
 full teacher-forced forward at the same position, for every family."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -139,8 +139,9 @@ def test_moe_dispatch_modes_agree():
 
 @pytest.mark.parametrize("x,x_block", [(13, 8), (5000, 2048), (7, 32), (2048, 2048)])
 def test_gossip_mix_flat_padding(x, x_block):
-    """X not divisible by x_block exercises the zero-pad + crop path (and
-    x_block > X exercises the block clamp); both must equal the dense W@C."""
+    """X not divisible by x_block exercises the ragged trailing block
+    (Pallas edge masking — no host-side pad/crop copies) and x_block > X
+    exercises the block clamp; both must equal the dense W@C."""
     from repro.kernels.gossip_mix import gossip_mix_flat
 
     key = jax.random.PRNGKey(x)

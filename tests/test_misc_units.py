@@ -1,7 +1,5 @@
 """Unit tests: optimizers, schedules, checkpointing, pipeline, topology,
 synthetic data, pytree utils."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,13 +7,12 @@ import pytest
 
 from repro.checkpoint import ckpt
 from repro.data.pipeline import (
-    client_batches,
     sample_cluster_batch_indices,
 )
 from repro.data.synthetic import make_mixture_classification, make_mixture_tokens
-from repro.graphs.topology import make_graph, pod_aware, rewire, ring
+from repro.graphs.topology import make_graph, pod_aware, rewire
 from repro.optim.sgd import adamw, clip_by_global_norm, momentum, sgd
-from repro.utils.pytree import tree_ravel, tree_sq_norm, tree_weighted_sum
+from repro.utils.pytree import tree_sq_norm, tree_weighted_sum
 
 
 def test_optimizers_descend_quadratic():

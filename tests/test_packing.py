@@ -1,0 +1,346 @@
+"""Packed parameter-plane engine (core/packing.py + the flat round step).
+
+Covers the ISSUE-2 acceptance criteria:
+- pack -> unpack round-trips mixed-dtype pytrees exactly, under any batch
+  prefix and under vmap;
+- the packed round step matches the pytree reference within fp32
+  tolerance for BOTH regimes and ALL gossip backends, including the
+  DP-enabled path (clip-only parity is exact; the fused Pallas DP kernel
+  matches the packed reference bit-for-bit on the same noise stream);
+- the Pallas backend issues exactly ONE pallas_call per mix on the
+  packed plane (vs one per leaf on the pytree path);
+- the registry/runner ``param_plane`` toggle reproduces the pytree run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedspd import (
+    FedSPDConfig,
+    init_state,
+    make_round_step,
+    personalize,
+)
+from repro.core.gossip import GossipSpec, make_mix_fn
+from repro.core.packing import (
+    make_pack_spec,
+    pack,
+    pack_state,
+    unpack,
+    unpack_state,
+)
+from repro.data.synthetic import make_mixture_classification
+from repro.graphs.topology import make_graph
+from repro.models.smallnets import make_classifier
+from repro.utils.pytree import tree_bytes
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mixed_tree(key, batch=()):
+    ks = jax.random.split(key, 4)
+    mk = lambda k, shape, dt: jax.random.normal(  # noqa: E731
+        k, batch + shape, jnp.float32).astype(dt)
+    return {
+        "w32": mk(ks[0], (5, 3), jnp.float32),
+        "b16": mk(ks[1], (7,), jnp.bfloat16),
+        "h16": mk(ks[2], (2, 2, 2), jnp.float16),
+        "scalar": mk(ks[3], (), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------- metadata
+
+
+def test_pack_spec_static_metadata():
+    tree = _mixed_tree(KEY)
+    spec = make_pack_spec(tree)
+    assert spec.size == 15 + 7 + 8 + 1
+    assert spec.n_leaves == 4
+    assert spec.offsets[0] == 0
+    assert spec.offsets == tuple(np.cumsum((0,) + spec.sizes)[:-1])
+    # wire accounting uses ORIGINAL dtypes, not the fp32 plane dtype
+    assert spec.model_bytes == tree_bytes(tree)
+
+
+def test_pack_spec_from_eval_shape():
+    def model_init(k):
+        p, *_ = make_classifier("mlp", k, 8, 4)
+        return p
+
+    spec = make_pack_spec(jax.eval_shape(model_init, KEY))
+    params = model_init(KEY)
+    plane = pack(params, spec)
+    assert plane.shape == (spec.size,)
+    assert spec.model_bytes == tree_bytes(params)
+
+
+# --------------------------------------------------------------- roundtrip
+
+
+@pytest.mark.parametrize("batch", [(), (6,), (2, 6)])
+def test_pack_unpack_roundtrip_mixed_dtypes(batch):
+    """fp32 plane exactly represents fp32/bf16/fp16 leaves: pack -> unpack
+    is bitwise, for any leading batch prefix (model, (N,), (S, N))."""
+    tree = _mixed_tree(KEY, batch)
+    spec = make_pack_spec(_mixed_tree(jax.random.PRNGKey(1)))
+    plane = pack(tree, spec)
+    assert plane.shape == batch + (spec.size,)
+    assert plane.dtype == jnp.float32
+    back = unpack(plane, spec)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_pack_unpack_under_vmap_and_jit():
+    spec = make_pack_spec(_mixed_tree(KEY))
+    trees = _mixed_tree(KEY, (3, 5))
+
+    def through(tree):
+        return unpack(pack(tree, spec), spec)
+
+    out = jax.jit(jax.vmap(jax.vmap(through)))(trees)
+    for a, b in zip(jax.tree.leaves(trees), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_pack_rejects_mismatched_tree():
+    spec = make_pack_spec(_mixed_tree(KEY))
+    bad = dict(_mixed_tree(KEY), w32=jnp.zeros((4, 3)))
+    with pytest.raises(ValueError, match="does not end with packed shape"):
+        pack(bad, spec)
+    with pytest.raises(ValueError, match="plane width"):
+        unpack(jnp.zeros((3, spec.size + 1)), spec)
+
+
+# ------------------------------------------------------ round-step parity
+
+
+def _setup(n=6, s=2, m=48, dim=8, seed=0, model="mlp"):
+    data = make_mixture_classification(
+        n_clients=n, n_clusters=s, n_per_client=m, dim=dim, n_classes=4,
+        seed=seed,
+    )
+    _, _, loss_fn, pel_fn, _ = make_classifier(model, KEY, dim, 4)
+
+    def model_init(k):
+        p, *_ = make_classifier(model, k, dim, 4)
+        return p
+
+    return data, loss_fn, pel_fn, model_init
+
+
+def _run_both(regime, mode, backend, dp=(0.0, 0.0), rounds=3, n=6):
+    data, loss_fn, pel_fn, model_init = _setup(n=n)
+    fcfg = FedSPDConfig(
+        n_clients=n, n_clusters=2, tau=2, batch=8, regime=regime,
+        dp_clip=dp[0], dp_noise_multiplier=dp[1],
+    )
+    spec = GossipSpec.from_graph(make_graph("er", n, 3.0, seed=0), mode=mode)
+    ps = make_pack_spec(jax.eval_shape(model_init, KEY))
+    state = init_state(KEY, model_init, fcfg, data.points_per_client)
+    step_tree = jax.jit(make_round_step(
+        loss_fn, pel_fn, spec, fcfg, mix_fn=make_mix_fn(spec, backend),
+    ))
+    step_pack = jax.jit(make_round_step(
+        loss_fn, pel_fn, spec, fcfg,
+        mix_fn=make_mix_fn(spec, backend, plane=True), pack_spec=ps,
+    ))
+    if regime == "full":
+        payload = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
+    else:
+        payload = {"x": jnp.asarray(data.x[:, :8]),
+                   "y": jnp.asarray(data.y[:, :8])}
+    st_t, st_p = state, pack_state(state, ps)
+    for _ in range(rounds):
+        st_t, m_t = step_tree(st_t, payload)
+        st_p, m_p = step_pack(st_p, payload)
+    return st_t, m_t, st_p, m_p, ps
+
+
+def _assert_state_parity(st_t, m_t, st_p, m_p, ps, atol=2e-5):
+    up = unpack_state(st_p, ps)
+    for a, b in zip(jax.tree.leaves(st_t.centers), jax.tree.leaves(up.centers)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol)
+    np.testing.assert_allclose(np.asarray(st_t.u), np.asarray(st_p.u),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m_t["consensus"]),
+                               np.asarray(m_p["consensus"]), rtol=1e-3,
+                               atol=1e-6)
+    # identical comm accounting (original-dtype wire bytes)
+    assert float(st_t.comm_bytes) == float(st_p.comm_bytes)
+    # Eq. (2) personalization parity at the API boundary
+    pa, pb = personalize(st_t), personalize(st_p, ps)
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol)
+
+
+# fast lane keeps one combo per axis; the full matrix runs in the slow lane
+_SLOW = pytest.mark.slow
+_PARITY_CASES = [
+    ("full", "dense", "reference"),
+    ("stream", "dense", "pallas"),
+    pytest.param("full", "permute", "reference", marks=_SLOW),
+    pytest.param("full", "dense", "pallas", marks=_SLOW),
+    pytest.param("stream", "dense", "reference", marks=_SLOW),
+    pytest.param("stream", "permute", "reference", marks=_SLOW),
+]
+
+
+@pytest.mark.parametrize("regime,mode,backend", _PARITY_CASES)
+def test_packed_matches_pytree_round_step(regime, mode, backend):
+    """The packed (S, N, X) engine IS the pytree round step, re-expressed:
+    same selections, same batches, same updates, same mixing — to fp32
+    tolerance — across regimes and gossip backends."""
+    st_t, m_t, st_p, m_p, ps = _run_both(regime, mode, backend)
+    _assert_state_parity(st_t, m_t, st_p, m_p, ps)
+
+
+@pytest.mark.parametrize("regime", ["full", pytest.param("stream", marks=_SLOW)])
+def test_packed_dp_clip_parity_exact(regime):
+    """DP with clipping but no noise is deterministic: the flat (N, X) L2
+    clip must equal the per-leaf-summed pytree clip."""
+    st_t, m_t, st_p, m_p, ps = _run_both(regime, "dense", "reference",
+                                         dp=(0.5, 0.0))
+    _assert_state_parity(st_t, m_t, st_p, m_p, ps)
+
+
+def test_packed_dp_fused_pallas_matches_packed_reference():
+    """With noise enabled the packed reference and the fused Pallas
+    clip·scale+W·C kernel consume the SAME key stream and noise draw, so
+    the whole trajectory must agree to fp32 tolerance."""
+    data, loss_fn, pel_fn, model_init = _setup()
+    fcfg = FedSPDConfig(n_clients=6, n_clusters=2, tau=2, batch=8,
+                        dp_clip=0.5, dp_noise_multiplier=0.7)
+    spec = GossipSpec.from_graph(make_graph("er", 6, 3.0, seed=0))
+    ps = make_pack_spec(jax.eval_shape(model_init, KEY))
+    st0 = pack_state(init_state(KEY, model_init, fcfg,
+                                data.points_per_client), ps)
+    mix_pal = make_mix_fn(spec, "pallas", plane=True)
+    assert hasattr(mix_pal, "fused_dp")
+    step_ref = jax.jit(make_round_step(
+        loss_fn, pel_fn, spec, fcfg,
+        mix_fn=make_mix_fn(spec, "reference", plane=True), pack_spec=ps,
+    ))
+    step_fus = jax.jit(make_round_step(
+        loss_fn, pel_fn, spec, fcfg, mix_fn=mix_pal, pack_spec=ps,
+    ))
+    payload = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
+    sr, sf = st0, st0
+    for _ in range(2):
+        sr, _ = step_ref(sr, payload)
+        sf, _ = step_fus(sf, payload)
+    np.testing.assert_allclose(np.asarray(sr.centers), np.asarray(sf.centers),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(sr.u), np.asarray(sf.u), atol=1e-5)
+
+
+# ------------------------------------------------- exactly one pallas_call
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if "pallas_call" in eqn.primitive.name:
+            n += 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                if type(sub).__name__ == "ClosedJaxpr":
+                    n += _count_pallas_calls(sub.jaxpr)
+                elif type(sub).__name__ == "Jaxpr":
+                    n += _count_pallas_calls(sub)
+    return n
+
+
+def test_pallas_backend_single_call_on_packed_plane():
+    """The whole point of the packed plane: one streaming kernel launch per
+    mix over the (N, X) buffer, versus one per leaf on the pytree path."""
+    _, _, _, model_init = _setup(model="conv", dim=16)
+    ps = make_pack_spec(jax.eval_shape(model_init, KEY))
+    n = 6
+    spec = GossipSpec.from_graph(make_graph("er", n, 3.0, seed=0))
+    s = jnp.zeros((n,), jnp.int32)
+    plane = jnp.zeros((n, ps.size), jnp.float32)
+    tree = jax.tree.map(
+        lambda sd: jnp.zeros((n,) + sd.shape, sd.dtype),
+        jax.eval_shape(model_init, KEY),
+    )
+    flat_calls = _count_pallas_calls(
+        jax.make_jaxpr(make_mix_fn(spec, "pallas", plane=True))(plane, s).jaxpr
+    )
+    tree_calls = _count_pallas_calls(
+        jax.make_jaxpr(make_mix_fn(spec, "pallas"))(tree, s).jaxpr
+    )
+    assert flat_calls == 1
+    assert tree_calls == ps.n_leaves  # one launch per leaf on the old path
+
+
+def test_packed_round_step_issues_exactly_one_pallas_call():
+    """End to end: a FULL packed round on the Pallas backend contains
+    exactly one pallas_call — gossip is the only kernel stage."""
+    data, loss_fn, pel_fn, model_init = _setup()
+    fcfg = FedSPDConfig(n_clients=6, n_clusters=2, tau=2, batch=8)
+    spec = GossipSpec.from_graph(make_graph("er", 6, 3.0, seed=0))
+    ps = make_pack_spec(jax.eval_shape(model_init, KEY))
+    state = pack_state(init_state(KEY, model_init, fcfg,
+                                  data.points_per_client), ps)
+    step = make_round_step(
+        loss_fn, pel_fn, spec, fcfg,
+        mix_fn=make_mix_fn(spec, "pallas", plane=True), pack_spec=ps,
+    )
+    payload = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
+    jaxpr = jax.make_jaxpr(step)(state, payload)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+
+
+# --------------------------------------------------- registry integration
+
+
+@pytest.fixture(scope="module")
+def reg_setup():
+    from repro.configs.paper_cnn import PaperExpConfig
+
+    exp = PaperExpConfig(
+        n_clients=5, n_per_client=32, rounds=3, tau=1, batch=8,
+        avg_degree=3.0, model="mlp", dim=8, n_classes=3,
+    )
+    data = make_mixture_classification(
+        n_clients=5, n_clusters=2, n_per_client=32, dim=8, n_classes=3,
+        seed=0, noise=0.3,
+    )
+    return exp, data
+
+
+def test_registry_param_plane_matches_pytree_run(reg_setup):
+    """run_method(param_plane=True) — packed engine through the whole
+    driver (seeded init, rounds, final phase, eval) — reproduces the
+    pytree run of the same seed."""
+    from repro.experiments import run_method
+
+    exp, data = reg_setup
+    a = run_method("fedspd", data, exp, seed=0, eval_every=100)
+    b = run_method("fedspd", data, exp, seed=0, eval_every=100,
+                   param_plane=True)
+    np.testing.assert_allclose(a.acc_per_client, b.acc_per_client, atol=1e-4)
+    np.testing.assert_allclose(a.extras["u"], b.extras["u"], atol=1e-4)
+    assert abs(a.comm_bytes - b.comm_bytes) <= 1e-6 * max(a.comm_bytes, 1.0)
+
+
+@pytest.mark.slow
+def test_registry_param_plane_pallas_batch(reg_setup):
+    """Packed plane + Pallas backend under the multi-seed vmapped driver:
+    one compile, finite results."""
+    from repro.experiments import run_method_batch
+
+    exp, data = reg_setup
+    rs = run_method_batch(
+        "fedspd", data, exp, seeds=(0, 1), eval_every=2,
+        options={"param_plane": True, "gossip_backend": "pallas"},
+    )
+    assert len(rs) == 2
+    assert all(np.isfinite(r.mean_acc) for r in rs)
+    assert rs[0].extras["n_compiles"] == 1

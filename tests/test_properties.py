@@ -1,5 +1,4 @@
 """Hypothesis property-based tests on system invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,17 +10,16 @@ pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.clustering import mixture_coefficients
 from repro.core.gossip import (
     GossipSpec,
     fedspd_weight_matrix,
     mix_dense,
     mix_permute,
 )
-from repro.core.clustering import mixture_coefficients
 from repro.graphs.coloring import greedy_edge_coloring, permute_schedule
 from repro.graphs.mixing import metropolis_weights, spectral_gap
 from repro.graphs.topology import make_graph
-from repro.utils.pytree import tree_ravel, tree_sq_norm
 
 SET = settings(max_examples=25, deadline=None)
 
