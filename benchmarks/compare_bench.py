@@ -1,0 +1,134 @@
+"""Bench trend gate: compare a fresh BENCH_roundstep.json against the
+previous point of the perf trajectory.
+
+CI's bench-smoke lane runs ``perf_roundstep --smoke`` then calls this with
+the previous run's ``bench-roundstep`` artifact as the baseline (falling
+back to the committed ``BENCH_roundstep.json`` when no artifact exists —
+first run, expired retention, forked PRs). Per-lane medians are compared;
+any lane whose median round time regresses by more than ``--threshold``
+(default 25%) fails the job. A markdown delta table — per-lane timings plus
+the packed-vs-pytree speedup matrix — is appended to
+``$GITHUB_STEP_SUMMARY`` when set, and always printed to stdout.
+
+  python -m benchmarks.compare_bench --baseline prev.json --new BENCH_roundstep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _lane(row: dict) -> str:
+    """Stable lane id; derived from the row fields for pre-lane payloads."""
+    if "lane" in row:
+        return row["lane"]
+    if "method" in row:
+        return f"{row['method']}/{'packed' if row['packed'] else 'pytree'}"
+    rep = "packed" if row["packed"] else "pytree"
+    return f"{row['model']}/{row['regime']}/{row['backend']}/{rep}"
+
+
+def lane_medians(payload: dict) -> dict:
+    """lane -> median round ms (falls back to min-of-reps for old files)."""
+    return {
+        _lane(r): r.get("round_ms_median", r.get("round_ms"))
+        for r in payload.get("results", [])
+    }
+
+
+def compare(base: dict, new: dict, threshold: float) -> tuple[list, list]:
+    """Returns (rows, regressions). Each row:
+    (lane, old_ms, new_ms, ratio_or_None, status)."""
+    old_l, new_l = lane_medians(base), lane_medians(new)
+    rows, regressions = [], []
+    for lane in sorted(set(old_l) | set(new_l)):
+        o, n = old_l.get(lane), new_l.get(lane)
+        if o is None:
+            rows.append((lane, None, n, None, "new lane"))
+            continue
+        if n is None:
+            rows.append((lane, o, None, None, "removed"))
+            continue
+        ratio = n / o if o > 0 else float("inf")
+        if ratio > 1.0 + threshold:
+            status = f"REGRESSION (> +{threshold:.0%})"
+            regressions.append(lane)
+        elif ratio < 1.0 - threshold:
+            status = "improved"
+        else:
+            status = "ok"
+        rows.append((lane, o, n, ratio, status))
+    return rows, regressions
+
+
+def _fmt(v, spec=".2f") -> str:
+    return "—" if v is None else format(v, spec)
+
+
+def markdown_report(base: dict, new: dict, rows: list,
+                    regressions: list, threshold: float) -> str:
+    lines = [
+        "## bench-roundstep trend",
+        "",
+        f"baseline: jax {base.get('meta', {}).get('jax', '?')} @ "
+        f"{base.get('meta', {}).get('unix_time', '?')} · "
+        f"new: jax {new.get('meta', {}).get('jax', '?')} · "
+        f"gate: median regression > {threshold:.0%} in any lane",
+        "",
+        "| lane | prev ms | new ms | Δ | status |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for lane, o, n, ratio, status in rows:
+        delta = "—" if ratio is None else f"{(ratio - 1) * 100:+.1f}%"
+        lines.append(f"| {lane} | {_fmt(o)} | {_fmt(n)} | {delta} "
+                     f"| {status} |")
+    lines += [
+        "",
+        "### packed vs pytree (new run)",
+        "",
+        "| lane | pytree ms | packed ms | speedup |",
+        "|---|---:|---:|---:|",
+    ]
+    for c in new.get("comparisons", []):
+        lane = c.get("lane") or "/".join(
+            str(c[k]) for k in ("model", "regime", "backend") if k in c
+        )
+        lines.append(f"| {lane} | {c['pytree_ms']:.2f} | "
+                     f"{c['packed_ms']:.2f} | x{c['speedup']} |")
+    lines.append("")
+    lines.append("**FAIL**: " + ", ".join(regressions) if regressions
+                 else "**gate green** — no lane regressed past threshold")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="previous BENCH_roundstep.json (artifact or "
+                         "committed fallback)")
+    ap.add_argument("--new", required=True, dest="new_path",
+                    help="freshly produced BENCH_roundstep.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed per-lane median regression (0.25 = +25%%)")
+    args = ap.parse_args(argv)
+
+    base, new = load(args.baseline), load(args.new_path)
+    rows, regressions = compare(base, new, args.threshold)
+    report = markdown_report(base, new, rows, regressions, args.threshold)
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(report)
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,21 @@
 """Round-step wall-time benchmark: packed parameter plane vs pytree state.
 
-Times ONE full FedSPD round (the hot path of every experiment and of the
+Times ONE full round (the hot path of every experiment and of the
 production train loop) across:
 
   representation  pytree leaves (S, N, ...)  vs packed (S, N, X) plane
   gossip backend  reference (dense einsum)   vs pallas streaming kernel
   regime          full (paper-faithful)      vs stream (production)
   model           mlp (few dense leaves)     vs conv (multi-leaf CNN)
+  method          FedSPD round step          + registry baseline steps
+                                               (dfl_fedavg, dfl_fedem)
 
-and writes ``BENCH_roundstep.json`` at the repo root — the first point of
-the repo's perf trajectory (tracked across PRs; CI uploads it as an
-artifact from the bench-smoke lane).
+All steps are jitted with the state donated (the production loop's
+configuration). Every result row carries a stable ``lane`` id; the output
+``BENCH_roundstep.json`` at the repo root is one point of the repo's perf
+trajectory — CI uploads it as an artifact from the bench-smoke lane and
+``benchmarks/compare_bench.py`` gates each commit against the previous
+point (>25% median regression in any lane fails the lane).
 
   PYTHONPATH=src python -m benchmarks.perf_roundstep --smoke   # CI sizes
   PYTHONPATH=src python -m benchmarks.perf_roundstep           # CPU bench
@@ -62,12 +67,13 @@ def _build(model: str, regime: str, backend: str, packed: bool,
     pack_spec = make_pack_spec(jax.eval_shape(model_init, key))
     if packed:
         state = pack_state(state, pack_spec)
-    step = jax.jit(make_round_step(
+    step = make_round_step(
         loss_fn, pel_fn, spec, fcfg,
         mix_fn=make_mix_fn(spec, backend, plane=packed),
         pack_spec=pack_spec if packed else None,
         model_bytes=pack_spec.model_bytes,
-    ))
+        donate=True,  # the production loop's configuration
+    )
     if regime == "full":
         payload = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
     else:
@@ -108,7 +114,9 @@ def bench_pair(model: str, regime: str, backend: str,
     out = []
     for p in (False, True):
         pack_spec = built[p][3]
+        rep = "packed" if p else "pytree"
         out.append({
+            "lane": f"{model}/{regime}/{backend}/{rep}",
             "model": model, "regime": regime, "backend": backend,
             "packed": p,
             "n_clients": n, "n_leaves": pack_spec.n_leaves,
@@ -119,6 +127,60 @@ def bench_pair(model: str, regime: str, backend: str,
             "paired_speedup_vs_pytree": round(paired, 3) if p else 1.0,
         })
     return out
+
+
+BASELINE_METHODS = ("dfl_fedavg", "dfl_fedem")
+
+
+def bench_method_pair(method: str, *, n: int, m: int, dim: int, tau: int,
+                      reps: int, seed: int = 0) -> list[dict]:
+    """Registry baseline steps, pytree vs packed (N, X)/(S, N, X) plane —
+    the same interleaved paired protocol as ``bench_pair``, through the
+    exact adapters the experiment driver uses (donated jitted step)."""
+    from repro.configs.paper_cnn import PaperExpConfig
+    from repro.experiments import build_context, get_method
+
+    exp = PaperExpConfig(
+        n_clients=n, n_per_client=m, rounds=1, tau=tau, batch=16,
+        avg_degree=4.0, model="mlp", dim=dim, n_classes=4,
+    )
+    data = make_mixture_classification(
+        n_clients=n, n_clusters=2, n_per_client=m, dim=dim, n_classes=4,
+        seed=seed,
+    )
+    mth = get_method(method)
+    built = {}
+    for p in (False, True):
+        ctx = build_context(data, exp, seed=seed,
+                            options={"param_plane": p})
+        state = mth.init(ctx, jax.random.PRNGKey(seed))
+        step = jax.jit(mth.make_step(ctx), donate_argnums=0)
+        built[p] = (step, state, ctx)
+    key, lr = jax.random.PRNGKey(seed + 1), exp.lr0
+    compile_s, times, states = {}, {False: [], True: []}, {}
+    for p, (step, state, ctx) in built.items():
+        t0 = time.perf_counter()
+        state, _aux = step(state, ctx.train, key, lr)
+        _block(state)
+        compile_s[p] = time.perf_counter() - t0
+        states[p] = state
+    for _ in range(reps):
+        for p, (step, _, ctx) in built.items():
+            t0 = time.perf_counter()
+            states[p], _aux = step(states[p], ctx.train, key, lr)
+            _block(states[p])
+            times[p].append(time.perf_counter() - t0)
+    paired = statistics.median(
+        a / b for a, b in zip(times[False], times[True])
+    )
+    return [{
+        "lane": f"{method}/{'packed' if p else 'pytree'}",
+        "method": method, "packed": p, "n_clients": n,
+        "compile_s": round(compile_s[p], 4),
+        "round_ms": round(min(times[p]) * 1e3, 4),
+        "round_ms_median": round(statistics.median(times[p]) * 1e3, 4),
+        "paired_speedup_vs_pytree": round(paired, 3) if p else 1.0,
+    } for p in (False, True)]
 
 
 def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
@@ -136,19 +198,38 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
                           f"{'packed' if r['packed'] else 'pytree':>6s}  "
                           f"round {r['round_ms']:9.2f} ms   "
                           f"compile {r['compile_s']:6.2f} s")
+    # baseline lanes run the stream-loop shape (train.py defaults): more
+    # clients, τ=1 — the exchange-dominant regime the plane targets
+    for method in BASELINE_METHODS:
+        pair = bench_method_pair(method, n=16, m=m, dim=dim, tau=1,
+                                 reps=reps)
+        results.extend(pair)
+        for r in pair:
+            print(f"{r['lane']:>24s}  round {r['round_ms']:9.2f} ms   "
+                  f"compile {r['compile_s']:6.2f} s")
     comparisons = []
     for model in ("mlp", "conv"):
         for regime in ("full", "stream"):
             for backend in ("reference", "pallas"):
                 pair = {r["packed"]: r for r in results
-                        if (r["model"], r["regime"], r["backend"])
+                        if (r.get("model"), r.get("regime"), r.get("backend"))
                         == (model, regime, backend)}
                 comparisons.append({
+                    "lane": f"{model}/{regime}/{backend}",
                     "model": model, "regime": regime, "backend": backend,
                     "pytree_ms": pair[False]["round_ms"],
                     "packed_ms": pair[True]["round_ms"],
                     "speedup": pair[True]["paired_speedup_vs_pytree"],
                 })
+    for method in BASELINE_METHODS:
+        pair = {r["packed"]: r for r in results
+                if r.get("method") == method}
+        comparisons.append({
+            "lane": method, "method": method,
+            "pytree_ms": pair[False]["round_ms"],
+            "packed_ms": pair[True]["round_ms"],
+            "speedup": pair[True]["paired_speedup_vs_pytree"],
+        })
     payload = {
         "bench": "roundstep",
         "meta": {
@@ -168,7 +249,7 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
     print("\npacked-vs-pytree speedups "
           f"({'smoke' if fast else 'bench'} sizes):")
     for c in comparisons:
-        print(f"  {c['model']:>5s} {c['regime']:>6s} {c['backend']:>9s}  "
+        print(f"  {c['lane']:>24s}  "
               f"{c['pytree_ms']:9.2f} -> {c['packed_ms']:9.2f} ms  "
               f"x{c['speedup']}")
     print(f"wrote {out}")

@@ -1,7 +1,18 @@
 """Shared machinery for the baseline FL algorithms (paper Section 6
 baselines: FedAvg, FedEM, IFCA, FedSoft, pFedMe, Local — each in a
 decentralized (static gossip matrix) and centralized (complete averaging)
-variant)."""
+variant).
+
+Every helper here is polymorphic over the two parameter representations:
+
+- pytree: model leaves with a leading client/cluster batch prefix — the
+  historical layout, one tree walk per stage;
+- packed plane (core/packing.py): ONE flat (N, X) / (S, N, X) fp32 array.
+  A bare array is a one-leaf pytree, so ``gossip_avg`` / ``local_sgd``
+  collapse to single-array arithmetic on it; the loss/grad boundary is
+  bridged by ``packing.plane_losses`` (pytree re-entry only inside the
+  forward pass). The baseline modules pass ``pack_spec`` through to here.
+"""
 from __future__ import annotations
 
 from typing import Any, Callable
@@ -10,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packing import flat_add_grads, flat_grad, unpack
 from repro.data.pipeline import client_uniform_batches
 from repro.graphs.mixing import metropolis_weights
 from repro.graphs.topology import Graph
@@ -27,8 +39,32 @@ def mixing_matrix(graph: Graph | None, n: int, centralized: bool) -> np.ndarray:
     return metropolis_weights(graph)
 
 
-def gossip_avg(params: PyTree, w: jnp.ndarray) -> PyTree:
-    """params leaves (N, ...) <- W @ params."""
+_GOSSIP_BACKENDS = ("reference", "pallas")
+
+
+def _require_gossip_backend(backend: str) -> None:
+    if backend not in _GOSSIP_BACKENDS:
+        raise ValueError(
+            f"unknown baseline gossip backend {backend!r}; "
+            f"expected one of {_GOSSIP_BACKENDS}"
+        )
+
+
+def gossip_avg(params: PyTree, w: jnp.ndarray, *,
+               backend: str = "reference") -> PyTree:
+    """params leaves (N, ...) <- W @ params.
+
+    On the packed (N, X) plane the reference path is ONE (N,N)·(N,X)
+    matmul; ``backend="pallas"`` streams each leaf's flattened (N, -1)
+    view through the kernels/gossip_mix Pallas kernel instead — exactly
+    one ``pallas_call`` for a plane input."""
+    _require_gossip_backend(backend)
+    if backend == "pallas":
+        from repro.kernels.gossip_mix import gossip_mix_tree
+
+        return gossip_mix_tree(
+            w, params, interpret=jax.default_backend() != "tpu"
+        )
     return jax.tree.map(
         lambda l: jnp.einsum(
             "ij,j...->i...", w.astype(jnp.float32), l.astype(jnp.float32)
@@ -37,9 +73,27 @@ def gossip_avg(params: PyTree, w: jnp.ndarray) -> PyTree:
     )
 
 
+def gossip_avg_stack(plane: jnp.ndarray, w: jnp.ndarray, *,
+                     backend: str = "reference") -> jnp.ndarray:
+    """Packed (S, N, X) center stacks <- W @ C_s for EVERY cluster s in one
+    shot (the FedEM exchange): one einsum on the reference path, one
+    ``pallas_call`` with an (S, x_blocks) grid on the Pallas path — versus
+    the pytree layout's per-leaf-per-cluster walks."""
+    _require_gossip_backend(backend)
+    if backend == "pallas":
+        from repro.kernels.gossip_mix import gossip_mix_stack
+
+        return gossip_mix_stack(
+            w, plane, interpret=jax.default_backend() != "tpu"
+        ).astype(plane.dtype)
+    return jnp.einsum(
+        "ij,sjx->six", w.astype(jnp.float32), plane.astype(jnp.float32)
+    ).astype(plane.dtype)
+
+
 def local_sgd(
-    loss_fn: Callable,
-    params: PyTree,  # (N, ...)
+    loss_fn: Callable,  # PYTREE-parameter loss, packed or not
+    params: PyTree,  # (N, ...) leaves — or the packed (N, X) plane
     data: dict,      # {"inputs": (N, M, d), "targets": (N, M)}
     key: jax.Array,
     tau: int,
@@ -47,10 +101,38 @@ def local_sgd(
     lr,
     optimizer: Optimizer | None = None,
     extra_grad: Callable | None = None,  # (params) -> grad pytree to add
+    pack_spec=None,
 ) -> PyTree:
-    """τ uniform-batch SGD steps per client (vmapped)."""
+    """τ uniform-batch SGD steps per client (vmapped).
+
+    With ``pack_spec`` (core/packing.py) ``params`` is the packed (N, X)
+    plane: the loss re-enters pytree form only inside its forward, leaf
+    gradients are scatter-added straight into the (donated) plane
+    (``packing.flat_add_grads`` — no flat-grad concat, no per-leaf
+    parameter walk), and any ``extra_grad`` regularizer is flat (N, X)
+    arithmetic. A stateful ``optimizer`` falls back to flat gradients
+    through ``packing.flat_grad``. ``loss_fn`` is the pytree-parameter
+    loss in both representations."""
+    if pack_spec is not None and optimizer is None:
+        # paper-faithful stateless SGD on the plane
+        grad_fn = jax.grad(loss_fn)
+
+        def one_flat(vec, k):
+            bx, by = client_uniform_batches(k, data["inputs"],
+                                            data["targets"], batch)
+            grads = jax.vmap(grad_fn)(unpack(vec, pack_spec),
+                                      {"x": bx, "y": by})
+            if extra_grad is not None:
+                vec = vec - lr * extra_grad(vec)
+            return flat_add_grads(vec, grads, -lr, pack_spec), None
+
+        params, _ = jax.lax.scan(one_flat, params,
+                                 jax.random.split(key, tau))
+        return params
+
     optimizer = optimizer or sgd()
-    grad_fn = jax.grad(loss_fn)
+    grad_fn = (flat_grad(loss_fn, pack_spec) if pack_spec is not None
+               else jax.grad(loss_fn))
     opt_state = jax.vmap(optimizer.init)(params)
 
     def one(carry, k):

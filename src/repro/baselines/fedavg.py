@@ -1,5 +1,12 @@
 """FedAvg [McMahan et al. 2017] — centralized and decentralized (D-SGD
-gossip) variants. The non-personalized reference point."""
+gossip) variants. The non-personalized reference point.
+
+With ``pack_spec`` (core/packing.py) the state is the packed (N, X) plane:
+local SGD is one fused update over the plane (the loss re-enters pytree
+form only inside the forward) and the gossip average is a single
+(N,N)·(N,X) matmul — or one Pallas streaming pass with
+``gossip_backend="pallas"`` — instead of one einsum per leaf.
+"""
 from __future__ import annotations
 
 from typing import Callable
@@ -7,19 +14,24 @@ from typing import Callable
 import jax.numpy as jnp
 
 from repro.baselines.common import gossip_avg, local_sgd
+from repro.core.packing import PackSpec, maybe_unpack
 
 
-def make_step(loss_fn: Callable, w, *, tau: int, batch: int):
+def make_step(loss_fn: Callable, w, *, tau: int, batch: int,
+              pack_spec: PackSpec | None = None,
+              gossip_backend: str = "reference"):
     w = jnp.asarray(w)
 
     def step(params, data, key, lr):
-        params = local_sgd(loss_fn, params, data, key, tau, batch, lr)
-        return gossip_avg(params, w), {}
+        params = local_sgd(loss_fn, params, data, key, tau, batch, lr,
+                           pack_spec=pack_spec)
+        return gossip_avg(params, w, backend=gossip_backend), {}
 
     return step
 
 
-def personalized_params(params):
+def personalized_params(params, pack_spec: PackSpec | None = None):
     """FedAvg has no personalization: every client evaluates its own copy
-    (equal to the consensus model up to gossip error)."""
-    return params
+    (equal to the consensus model up to gossip error). Packed states
+    re-enter pytree form here — the API boundary."""
+    return maybe_unpack(params, pack_spec)

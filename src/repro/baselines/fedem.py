@@ -5,6 +5,13 @@ and communication are S× FedSPD's (the comparison the paper draws in §6.3).
 
 Decentralized variant: each of the S stacks is gossip-averaged with the
 static Metropolis matrix. Personalized prediction = u-weighted mixture.
+
+With ``pack_spec`` (core/packing.py) the whole (S, N, X) center stack is
+ONE packed plane: the responsibility-weighted M-step updates are fused
+single-array SGD (the per-example loss re-enters pytree form only inside
+its forward), and the all-S exchange — FedEM's S× communication cost — is
+one einsum over the stack (or one Pallas call with
+``gossip_backend="pallas"``) instead of S × n_leaves walks.
 """
 from __future__ import annotations
 
@@ -13,19 +20,29 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.baselines.common import gossip_avg
+from repro.baselines.common import gossip_avg, gossip_avg_stack
+from repro.core.packing import (
+    PackSpec,
+    flat_add_grads,
+    pack,
+    plane_losses,
+    unpack,
+)
 
 
 class FedEMState(NamedTuple):
-    centers: any      # leaves (S, N, ...)
+    centers: any      # leaves (S, N, ...) — or the packed (S, N, X) plane
     u: jnp.ndarray    # (N, S)
 
 
-def init_state(key, model_init, n_clients: int, s_clusters: int) -> FedEMState:
+def init_state(key, model_init, n_clients: int, s_clusters: int,
+               pack_spec: PackSpec | None = None) -> FedEMState:
     keys = jax.random.split(key, s_clusters * n_clients).reshape(
         s_clusters, n_clients, -1
     )
     centers = jax.vmap(jax.vmap(model_init))(keys)
+    if pack_spec is not None:
+        centers = pack(centers, pack_spec)
     u = jnp.full((n_clients, s_clusters), 1.0 / s_clusters, jnp.float32)
     return FedEMState(centers=centers, u=u)
 
@@ -38,8 +55,14 @@ def make_step(
     tau: int,
     batch: int,
     s_clusters: int,
+    pack_spec: PackSpec | None = None,
+    gossip_backend: str = "reference",
 ):
     w = jnp.asarray(w)
+    # flat view of the per-example loss for the E-step forwards; the
+    # M-step gradient goes through packing.flat_grad on the pytree loss
+    pel_tree = per_example_loss
+    _, per_example_loss = plane_losses(pack_spec, None, per_example_loss)
 
     def e_step(centers, u, data):
         """Responsibilities r (N, M, S) ∝ u_is · exp(-ℓ(c_s; d))."""
@@ -62,10 +85,12 @@ def make_step(
 
         # M-step: τ responsibility-weighted SGD steps for EVERY cluster model
         def train_cluster(c_s, r_s, k):
-            # c_s leaves (N, ...), r_s (N, M)
+            # c_s leaves (N, ...) — or the (N, X) plane slab — r_s (N, M)
             def weighted_loss(params, batch_i, rw):
-                pel = per_example_loss(params, batch_i)
+                pel = pel_tree(params, batch_i)
                 return jnp.sum(pel * rw) / jnp.maximum(jnp.sum(rw), 1e-6)
+
+            wgrad = jax.grad(weighted_loss)
 
             def one(carry, kk):
                 p = carry
@@ -77,10 +102,14 @@ def make_step(
                 )
                 by = jnp.take_along_axis(data["targets"], idx, axis=1)
                 rw = jnp.take_along_axis(r_s, idx, axis=1)
-                grads = jax.vmap(jax.grad(weighted_loss))(
-                    p, {"x": bx, "y": by}, rw
-                )
-                p = jax.tree.map(lambda pp, g: pp - lr * g, p, grads)
+                if pack_spec is not None:
+                    # leaf grads scatter-added into the (N, X) plane slab
+                    grads = jax.vmap(wgrad)(unpack(p, pack_spec),
+                                            {"x": bx, "y": by}, rw)
+                    p = flat_add_grads(p, grads, -lr, pack_spec)
+                else:
+                    grads = jax.vmap(wgrad)(p, {"x": bx, "y": by}, rw)
+                    p = jax.tree.map(lambda pp, g: pp - lr * g, p, grads)
                 return p, None
 
             keys = jax.random.split(k, tau)
@@ -91,8 +120,12 @@ def make_step(
         centers = jax.vmap(train_cluster, in_axes=(0, 2, 0))(
             state.centers, r, keys
         )
-        # exchange ALL S models (the S× communication cost)
-        centers = jax.vmap(lambda c_s: gossip_avg(c_s, w))(centers)
+        # exchange ALL S models (the S× communication cost); the packed
+        # plane mixes the whole (S, N, X) stack in one shot
+        if pack_spec is not None:
+            centers = gossip_avg_stack(centers, w, backend=gossip_backend)
+        else:
+            centers = jax.vmap(lambda c_s: gossip_avg(c_s, w))(centers)
         return FedEMState(centers=centers, u=u), {"u": u}
 
     return step
@@ -105,7 +138,12 @@ def mixture_predict(apply_fn: Callable, state: FedEMState, x_i, u_i, centers_i):
     return jnp.einsum("s,sbk->bk", u_i, probs)
 
 
-def personalized_accuracy(apply_fn: Callable, state: FedEMState, data) -> jnp.ndarray:
+def personalized_accuracy(apply_fn: Callable, state: FedEMState, data,
+                          pack_spec: PackSpec | None = None) -> jnp.ndarray:
+    if pack_spec is not None:
+        from repro.core.packing import flat_apply
+
+        apply_fn = flat_apply(apply_fn, pack_spec)
     centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
 
     def one(centers_i, u_i, x_i, y_i):

@@ -7,6 +7,13 @@ whole population (centralized) or the graph neighborhood (decentralized).
 Appendix C of the FedSPD paper argues exactly this update is what biases
 FedSoft's gradients toward a mixture of optima and breaks consensus in
 low-connectivity DFL — reproduced in our connectivity benchmark.
+
+With ``pack_spec`` (core/packing.py) both the center stack (S, N, X) and
+the client models y (N, X) are packed planes: the proximal pull, the
+local SGD, and the importance-weighted aggregation are all single-array
+arithmetic (the per-leaf closures below are representation-polymorphic —
+a plane is a one-leaf pytree); losses re-enter pytree form only inside
+their forwards.
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.baselines.common import local_sgd
 from repro.core.clustering import mixture_coefficients
+from repro.core.packing import PackSpec, maybe_unpack, pack, plane_losses
 
 
 class FedSoftState(NamedTuple):
@@ -25,13 +33,16 @@ class FedSoftState(NamedTuple):
     u: jnp.ndarray     # (N, S)
 
 
-def init_state(key, model_init, n_clients: int, s_clusters: int) -> FedSoftState:
+def init_state(key, model_init, n_clients: int, s_clusters: int,
+               pack_spec: PackSpec | None = None) -> FedSoftState:
     k1, k2 = jax.random.split(key)
     keys = jax.random.split(k1, s_clusters * n_clients).reshape(
         s_clusters, n_clients, -1
     )
     centers = jax.vmap(jax.vmap(model_init))(keys)
     y = jax.vmap(model_init)(jax.random.split(k2, n_clients))
+    if pack_spec is not None:
+        centers, y = pack(centers, pack_spec), pack(y, pack_spec)
     u = jnp.full((n_clients, s_clusters), 1.0 / s_clusters, jnp.float32)
     return FedSoftState(centers=centers, y=y, u=u)
 
@@ -45,8 +56,12 @@ def make_step(
     batch: int,
     s_clusters: int,
     prox_lambda: float = 0.1,
+    pack_spec: PackSpec | None = None,
 ):
     w = jnp.asarray(w)
+    # flat view of the per-example loss for the importance forward; local
+    # SGD takes the pytree loss + pack_spec (packing.flat_grad)
+    _, per_example_loss = plane_losses(pack_spec, None, per_example_loss)
 
     def step(state: FedSoftState, data, key, lr):
         centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
@@ -73,7 +88,8 @@ def make_step(
             return jax.tree.map(per_leaf, y, state.centers)
 
         y = local_sgd(
-            loss_fn, state.y, data, key, tau, batch, lr, extra_grad=prox_grad
+            loss_fn, state.y, data, key, tau, batch, lr,
+            extra_grad=prox_grad, pack_spec=pack_spec,
         )
 
         # importance-weighted center aggregation over the neighborhood
@@ -94,5 +110,6 @@ def make_step(
     return step
 
 
-def personalized_params(state: FedSoftState):
-    return state.y
+def personalized_params(state: FedSoftState,
+                        pack_spec: PackSpec | None = None):
+    return maybe_unpack(state.y, pack_spec)

@@ -2,7 +2,14 @@
 cluster whose model has the lowest loss on its full local data, trains that
 model on ALL its data, and (decentralized variant) averages with neighbors
 that picked the same cluster. No mixtures: the paper's hard-clustering
-baseline."""
+baseline.
+
+With ``pack_spec`` (core/packing.py) the centers live on the packed
+(S, N, X) plane: gather/scatter of the chosen models are single-array
+indexing, local SGD is one fused update over (N, X), and the same-choice
+mixing runs on the flat slab (``mix_dense`` is representation-
+polymorphic). Losses re-enter pytree form only inside their forwards.
+"""
 from __future__ import annotations
 
 from typing import Callable, NamedTuple
@@ -12,18 +19,22 @@ import jax.numpy as jnp
 
 from repro.baselines.common import local_sgd
 from repro.core.gossip import GossipSpec, mix_dense
+from repro.core.packing import PackSpec, maybe_unpack, pack, plane_losses
 
 
 class IFCAState(NamedTuple):
-    centers: any       # leaves (S, N, ...)
+    centers: any       # leaves (S, N, ...) — or the packed (S, N, X) plane
     choice: jnp.ndarray  # (N,) hard assignment
 
 
-def init_state(key, model_init, n_clients: int, s_clusters: int) -> IFCAState:
+def init_state(key, model_init, n_clients: int, s_clusters: int,
+               pack_spec: PackSpec | None = None) -> IFCAState:
     keys = jax.random.split(key, s_clusters * n_clients).reshape(
         s_clusters, n_clients, -1
     )
     centers = jax.vmap(jax.vmap(model_init))(keys)
+    if pack_spec is not None:
+        centers = pack(centers, pack_spec)
     return IFCAState(centers=centers, choice=jnp.zeros((n_clients,), jnp.int32))
 
 
@@ -34,7 +45,11 @@ def make_step(
     *,
     tau: int,
     batch: int,
+    pack_spec: PackSpec | None = None,
 ):
+    # flat view of the per-example loss for the cluster-estimation forward;
+    # local SGD takes the pytree loss + pack_spec (packing.flat_grad)
+    _, per_example_loss = plane_losses(pack_spec, None, per_example_loss)
     def step(state: IFCAState, data, key, lr):
         centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
 
@@ -50,7 +65,8 @@ def make_step(
         )
         n = choice.shape[0]
         c_sel = jax.tree.map(lambda l: l[choice, jnp.arange(n)], state.centers)
-        c_sel = local_sgd(loss_fn, c_sel, data, key, tau, batch, lr)
+        c_sel = local_sgd(loss_fn, c_sel, data, key, tau, batch, lr,
+                          pack_spec=pack_spec)
         # same-choice neighborhood averaging (decentralized IFCA)
         c_mixed = mix_dense(gossip, c_sel, choice)
         centers = jax.tree.map(
@@ -62,8 +78,9 @@ def make_step(
     return step
 
 
-def personalized_params(state: IFCAState):
+def personalized_params(state: IFCAState, pack_spec: PackSpec | None = None):
     n = state.choice.shape[0]
-    return jax.tree.map(
+    chosen = jax.tree.map(
         lambda l: l[state.choice, jnp.arange(n)], state.centers
     )
+    return maybe_unpack(chosen, pack_spec)

@@ -1,17 +1,24 @@
-"""Local-only training: the no-collaboration floor in the paper's tables."""
+"""Local-only training: the no-collaboration floor in the paper's tables.
+
+With ``pack_spec`` the per-client models live on the packed (N, X) plane
+and every SGD step is one fused update over the plane (core/packing.py).
+"""
 from __future__ import annotations
 
 from typing import Callable
 
 from repro.baselines.common import local_sgd
+from repro.core.packing import PackSpec, maybe_unpack
 
 
-def make_step(loss_fn: Callable, w=None, *, tau: int, batch: int):
+def make_step(loss_fn: Callable, w=None, *, tau: int, batch: int,
+              pack_spec: PackSpec | None = None):
     def step(params, data, key, lr):
-        return local_sgd(loss_fn, params, data, key, tau, batch, lr), {}
+        return local_sgd(loss_fn, params, data, key, tau, batch, lr,
+                         pack_spec=pack_spec), {}
 
     return step
 
 
-def personalized_params(params):
-    return params
+def personalized_params(params, pack_spec: PackSpec | None = None):
+    return maybe_unpack(params, pack_spec)

@@ -4,6 +4,11 @@ Each client maintains a "global" iterate w_i; per round it approximately
 solves θ_i = argmin f_i(θ) + λ/2 ||θ - w_i||² with K inner SGD steps, then
 takes the outer step w_i <- w_i - η λ (w_i - θ_i). Decentralized variant
 gossips w with the static Metropolis matrix. Personalized model = θ_i.
+
+With ``pack_spec`` (core/packing.py) w lives on the packed (N, X) plane:
+the inner proximal steps and the outer Moreau step are fused single-array
+updates (the tree.map arithmetic below is polymorphic — a plane is a
+one-leaf pytree) and the gossip is one (N,N)·(N,X) matmul.
 """
 from __future__ import annotations
 
@@ -13,21 +18,49 @@ import jax
 import jax.numpy as jnp
 
 from repro.baselines.common import gossip_avg
+from repro.core.packing import PackSpec, maybe_unpack, pack, unpack
 from repro.data.pipeline import client_uniform_batches
 
 
 class PFedMeState(NamedTuple):
-    w: any  # leaves (N, ...)
+    w: any  # leaves (N, ...) — or the packed (N, X) plane
 
 
-def init_state(key, model_init, n_clients: int) -> PFedMeState:
-    return PFedMeState(w=jax.vmap(model_init)(jax.random.split(key, n_clients)))
+def init_state(key, model_init, n_clients: int,
+               pack_spec: PackSpec | None = None) -> PFedMeState:
+    w = jax.vmap(model_init)(jax.random.split(key, n_clients))
+    if pack_spec is not None:
+        w = pack(w, pack_spec)
+    return PFedMeState(w=w)
 
 
-def _inner_solve(loss_fn, w, data, key, k_inner, batch, inner_lr, lam):
-    """K SGD steps on f_i(θ) + λ/2||θ - w||², θ init = w. Returns θ."""
+def _inner_solve(loss_fn, w, data, key, k_inner, batch, inner_lr, lam,
+                 pack_spec=None):
+    """K SGD steps on f_i(θ) + λ/2||θ - w||², θ init = w. Returns θ.
+
+    Packed w: the proximal pull is flat (N, X) arithmetic and the loss
+    gradient is scatter-added into the plane (packing.flat_add_grads) —
+    the loss re-enters pytree form only inside its forward."""
     grad_fn = jax.grad(loss_fn)
     theta = w
+
+    def one_flat(theta, kk):
+        bx, by = client_uniform_batches(kk, data["inputs"], data["targets"],
+                                        batch)
+        grads = jax.vmap(grad_fn)(unpack(theta, pack_spec),
+                                  {"x": bx, "y": by})
+        # θ ← θ − η·λ·(θ − w) − η·g, leaf-local slices so the whole inner
+        # step is ONE in-place pass over the plane's X axis (a separate
+        # full-width prox pass would double the write traffic)
+        for o, sz, shape, g in zip(pack_spec.offsets, pack_spec.sizes,
+                                   pack_spec.shapes, jax.tree.leaves(grads)):
+            bnd = g.ndim - len(shape)
+            gv = jnp.reshape(g, g.shape[:bnd] + (sz,)).astype(theta.dtype)
+            sl = theta[..., o:o + sz]
+            theta = theta.at[..., o:o + sz].add(
+                -inner_lr * (lam * (sl - w[..., o:o + sz]) + gv)
+            )
+        return theta, None
 
     def one(theta, kk):
         bx, by = client_uniform_batches(kk, data["inputs"], data["targets"], batch)
@@ -41,7 +74,8 @@ def _inner_solve(loss_fn, w, data, key, k_inner, batch, inner_lr, lam):
         return theta, None
 
     keys = jax.random.split(key, k_inner)
-    theta, _ = jax.lax.scan(one, theta, keys)
+    theta, _ = jax.lax.scan(one_flat if pack_spec is not None else one,
+                            theta, keys)
     return theta
 
 
@@ -54,6 +88,8 @@ def make_step(
     lam: float = 15.0,
     k_inner: int = 5,
     inner_lr: float = 5e-2,
+    pack_spec: PackSpec | None = None,
+    gossip_backend: str = "reference",
 ):
     w_mix = jnp.asarray(w_mix)
 
@@ -62,7 +98,7 @@ def make_step(
 
         def outer(w, kk):
             theta = _inner_solve(loss_fn, w, data, kk, k_inner, batch,
-                                 inner_lr, lam)
+                                 inner_lr, lam, pack_spec=pack_spec)
             w = jax.tree.map(
                 lambda ww, t: (
                     ww.astype(jnp.float32)
@@ -74,7 +110,7 @@ def make_step(
 
         keys = jax.random.split(key, tau)
         w, _ = jax.lax.scan(outer, w, keys)
-        w = gossip_avg(w, w_mix)
+        w = gossip_avg(w, w_mix, backend=gossip_backend)
         return PFedMeState(w=w), {}
 
     return step
@@ -82,8 +118,11 @@ def make_step(
 
 def personalized_params(
     state: PFedMeState, loss_fn, data, key, *, batch=32, lam=15.0,
-    k_inner=10, inner_lr=5e-2,
+    k_inner=10, inner_lr=5e-2, pack_spec: PackSpec | None = None,
 ):
-    """θ_i from the final w_i (a fresh inner solve on local data)."""
-    return _inner_solve(loss_fn, state.w, data, key, k_inner, batch,
-                        inner_lr, lam)
+    """θ_i from the final w_i (a fresh inner solve on local data). Packed
+    states solve flat and re-enter pytree form only here — the API
+    boundary."""
+    theta = _inner_solve(loss_fn, state.w, data, key, k_inner, batch,
+                         inner_lr, lam, pack_spec=pack_spec)
+    return maybe_unpack(theta, pack_spec)

@@ -206,6 +206,7 @@ def make_round_step(
     mix_fn: Callable = None,        # (c_sel, s) -> mixed; default Eq. (1)
     pack_spec: Optional[PackSpec] = None,  # packed (S, N, X) engine
     model_bytes: Optional[int] = None,     # per-model wire bytes (hoisted)
+    donate: bool = False,           # jit + donate the state in place
 ):
     """Returns step(state, data) -> (state, metrics). ``data`` leaves:
     (N, M, ...) in the "full" regime; (N, B, ...) fresh batch in "stream".
@@ -218,6 +219,12 @@ def make_round_step(
     at build time (it is static per model); when omitted it is derived
     once at first trace — packed runs always account ORIGINAL dtypes via
     the pack spec, so packing never changes reported comm bytes.
+
+    ``donate=True`` returns the step already jitted with
+    ``donate_argnums=0``: XLA aliases the state's buffers input→output
+    (the (S, N, X) plane — every round's dominant allocation — is updated
+    in place across rounds, no per-round copy). The caller must not reuse
+    a state it passed in; drive the loop as ``state, m = step(state, d)``.
     """
     optimizer = optimizer or sgd()
     if lr_schedule is None:
@@ -503,8 +510,10 @@ def make_round_step(
         return new_state, metrics
 
     if pack_spec is not None:
-        return step_full_packed if cfg.regime == "full" else step_stream_packed
-    return step_full if cfg.regime == "full" else step_stream
+        step = step_full_packed if cfg.regime == "full" else step_stream_packed
+    else:
+        step = step_full if cfg.regime == "full" else step_stream
+    return jax.jit(step, donate_argnums=0) if donate else step
 
 
 def _consensus_per_cluster(centers: PyTree, s_clusters: int) -> jnp.ndarray:

@@ -18,16 +18,20 @@ The ``Method`` protocol (all functions pure & traceable so the driver can
                                               to personalize + acc_fn)
     extras(ctx, state, aux) -> dict           host-side diagnostics
 
-FedSPD additionally honours per-run ``options``:
+Per-run ``options`` honoured across methods:
+    param_plane     run the method's step on the packed parameter plane
+                    (core/packing.py: (N, X) per-client models, (S, N, X)
+                    center stacks) instead of per-leaf pytree walks.
+                    Supported by ALL built-in method ids and parity-tested
+                    against the pytree reference; the driver raises
+                    ValueError for adapters that have not opted in.
+    gossip_backend  execution path for the exchange: "reference" | "pallas"
+                    (+ "ppermute" for FedSPD — core/gossip.make_mix_fn's
+                    shard_map edge-colored collective schedule, one device
+                    per client). Baselines route their static-matrix
+                    average through kernels/gossip_mix on "pallas".
+FedSPD additionally honours:
     mode            gossip wiring: "dense" | "permute"
-    gossip_backend  execution path for Eq. (1): "reference" | "pallas" |
-                    "ppermute" (core/gossip.make_mix_fn — the Pallas fast
-                    path streams C <- W·C through kernels/gossip_mix; the
-                    ppermute path runs the launch/steps.py shard_map
-                    edge-colored collective schedule, one device per client)
-    param_plane     run the round step on the packed (S, N, X) parameter
-                    plane (core/packing.py) instead of per-leaf pytree
-                    walks; parity-tested against the pytree reference
     dp_clip, dp_noise_multiplier, tau_final, cos_align_threshold
 """
 from __future__ import annotations
@@ -49,7 +53,7 @@ from repro.core import (
     seeded_init,
 )
 from repro.core.gossip import make_mix_fn
-from repro.core.packing import make_pack_spec, pack_state
+from repro.core.packing import make_pack_spec, pack, pack_state, unpack
 from repro.graphs.topology import Graph, complete
 from repro.models.smallnets import make_classifier
 from repro.utils.pytree import tree_bytes, tree_weighted_sum
@@ -150,10 +154,38 @@ def star_bytes(n: int, model_b: int, models: int = 1) -> float:
 
 class Method:
     """Base adapter. Subclasses implement init/make_step/personalize/
-    comm_model; evaluate and extras have sensible defaults."""
+    comm_model; evaluate and extras have sensible defaults.
+
+    ``supports_param_plane`` declares that the adapter implements the
+    packed (S, N, X) parameter-plane representation (core/packing.py) end
+    to end — init packs, the step runs flat, personalize/evaluate unpack at
+    the API boundary. The driver hard-errors on ``param_plane=True`` for
+    adapters that have not opted in (a silent pytree fallback would
+    misreport the benchmark matrix). Every built-in method supports it."""
 
     name: str = ""
     centralized: bool = False
+    supports_param_plane: bool = False
+
+    def _pack_spec(self, ctx: ExperimentContext):
+        """The per-run PackSpec when ``param_plane`` is on, else None.
+        Static per context — derived once from the model's eval_shape and
+        stashed in the per-run options dict (init/make_step/personalize/
+        evaluate all come through here)."""
+        if not ctx.opt("param_plane", False):
+            return None
+        if not self.supports_param_plane:
+            raise ValueError(
+                f"method {self.name!r} does not support param_plane=True; "
+                "set supports_param_plane after porting its state onto the "
+                "packed (S, N, X) plane (core/packing.py)"
+            )
+        spec = ctx.options.get("_pack_spec")
+        if spec is None:
+            sds = jax.eval_shape(ctx.model_init, jax.random.PRNGKey(0))
+            spec = make_pack_spec(sds)
+            ctx.options["_pack_spec"] = spec
+        return spec
 
     def init(self, ctx: ExperimentContext, key: jax.Array):
         raise NotImplementedError
@@ -221,21 +253,11 @@ class FedSPDMethod(Method):
     ``ctx.options['param_plane']`` switches the round step onto the packed
     (S, N, X) parameter plane (core/packing.py)."""
 
+    supports_param_plane = True
+
     def __init__(self, name: str, mode: str = "dense"):
         self.name = name
         self.mode = mode
-
-    def _pack_spec(self, ctx: ExperimentContext):
-        if not ctx.opt("param_plane", False):
-            return None
-        # static per context — derive once and stash in the per-run options
-        # dict (init/make_step/personalize/evaluate all come through here)
-        spec = ctx.options.get("_pack_spec")
-        if spec is None:
-            sds = jax.eval_shape(ctx.model_init, jax.random.PRNGKey(0))
-            spec = make_pack_spec(sds)
-            ctx.options["_pack_spec"] = spec
-        return spec
 
     def _fcfg(self, ctx: ExperimentContext) -> FedSPDConfig:
         exp = ctx.exp
@@ -303,20 +325,30 @@ class FedSPDMethod(Method):
 
 
 class FedAvgMethod(Method):
+    supports_param_plane = True
+
     def __init__(self, name: str, centralized: bool):
         self.name = name
         self.centralized = centralized
 
     def init(self, ctx, key):
-        return jax.vmap(ctx.model_init)(jax.random.split(key, ctx.n_clients))
+        params = jax.vmap(ctx.model_init)(
+            jax.random.split(key, ctx.n_clients)
+        )
+        ps = self._pack_spec(ctx)
+        return pack(params, ps) if ps is not None else params
 
     def make_step(self, ctx):
-        return fedavg.make_step(ctx.loss_fn, self.mixing(ctx),
-                                tau=ctx.exp.tau, batch=ctx.exp.batch)
+        return fedavg.make_step(
+            ctx.loss_fn, self.mixing(ctx), tau=ctx.exp.tau,
+            batch=ctx.exp.batch, pack_spec=self._pack_spec(ctx),
+            gossip_backend=ctx.opt("gossip_backend", "reference"),
+        )
 
     def personalize(self, ctx, state, key):
         del key
-        return fedavg.personalized_params(state)
+        return fedavg.personalized_params(state,
+                                          pack_spec=self._pack_spec(ctx))
 
     def comm_model(self, ctx):
         per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)
@@ -327,17 +359,24 @@ class FedAvgMethod(Method):
 
 class LocalMethod(Method):
     name = "local"
+    supports_param_plane = True
 
     def init(self, ctx, key):
-        return jax.vmap(ctx.model_init)(jax.random.split(key, ctx.n_clients))
+        params = jax.vmap(ctx.model_init)(
+            jax.random.split(key, ctx.n_clients)
+        )
+        ps = self._pack_spec(ctx)
+        return pack(params, ps) if ps is not None else params
 
     def make_step(self, ctx):
         return local.make_step(ctx.loss_fn, tau=ctx.exp.tau,
-                               batch=ctx.exp.batch)
+                               batch=ctx.exp.batch,
+                               pack_spec=self._pack_spec(ctx))
 
     def personalize(self, ctx, state, key):
         del key
-        return local.personalized_params(state)
+        return local.personalized_params(state,
+                                         pack_spec=self._pack_spec(ctx))
 
     def comm_model(self, ctx):
         return CommModel(kind="static", per_round_bytes=0.0)
@@ -348,31 +387,43 @@ class FedEMMethod(Method):
     personalized prediction is the u-weighted probability mixture, so
     ``evaluate`` overrides the personalize-based default."""
 
+    supports_param_plane = True
+
     def __init__(self, name: str, centralized: bool):
         self.name = name
         self.centralized = centralized
 
     def init(self, ctx, key):
         return fedem.init_state(key, ctx.model_init, ctx.n_clients,
-                                ctx.n_clusters)
+                                ctx.n_clusters,
+                                pack_spec=self._pack_spec(ctx))
 
     def make_step(self, ctx):
         return fedem.make_step(
             ctx.loss_fn, ctx.pel_fn, self.mixing(ctx), tau=ctx.exp.tau,
             batch=ctx.exp.batch, s_clusters=ctx.n_clusters,
+            pack_spec=self._pack_spec(ctx),
+            gossip_backend=ctx.opt("gossip_backend", "reference"),
         )
 
     def personalize(self, ctx, state, key):
         """Eq.-(2)-style projection (u-weighted parameter average) — used
         for serve-style export; accuracy uses the probability mixture."""
         del key
+        ps = self._pack_spec(ctx)
+        if ps is not None:
+            plane = state.centers  # (S, N, X)
+            mixed = jnp.einsum("ns,snx->nx", state.u.astype(plane.dtype),
+                               plane)
+            return unpack(mixed, ps)
         centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1),
                                   state.centers)
         return jax.vmap(tree_weighted_sum)(centers_nc, state.u)
 
     def evaluate(self, ctx, state, key, on):
         del key
-        return fedem.personalized_accuracy(ctx.apply_fn, state, on)
+        return fedem.personalized_accuracy(ctx.apply_fn, state, on,
+                                           pack_spec=self._pack_spec(ctx))
 
     def comm_model(self, ctx):
         s = ctx.n_clusters
@@ -388,23 +439,28 @@ class FedEMMethod(Method):
 
 
 class IFCAMethod(Method):
+    supports_param_plane = True
+
     def __init__(self, name: str, centralized: bool):
         self.name = name
         self.centralized = centralized
 
     def init(self, ctx, key):
         return ifca.init_state(key, ctx.model_init, ctx.n_clients,
-                               ctx.n_clusters)
+                               ctx.n_clusters,
+                               pack_spec=self._pack_spec(ctx))
 
     def make_step(self, ctx):
         g_eff = ctx.graph if not self.centralized else complete(ctx.n_clients)
         spec = GossipSpec.from_graph(g_eff, mode="dense")
         return ifca.make_step(ctx.loss_fn, ctx.pel_fn, spec,
-                              tau=ctx.exp.tau, batch=ctx.exp.batch)
+                              tau=ctx.exp.tau, batch=ctx.exp.batch,
+                              pack_spec=self._pack_spec(ctx))
 
     def personalize(self, ctx, state, key):
         del key
-        return ifca.personalized_params(state)
+        return ifca.personalized_params(state,
+                                        pack_spec=self._pack_spec(ctx))
 
     def comm_model(self, ctx):
         per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)
@@ -419,23 +475,28 @@ class IFCAMethod(Method):
 
 
 class FedSoftMethod(Method):
+    supports_param_plane = True
+
     def __init__(self, name: str, centralized: bool):
         self.name = name
         self.centralized = centralized
 
     def init(self, ctx, key):
         return fedsoft.init_state(key, ctx.model_init, ctx.n_clients,
-                                  ctx.n_clusters)
+                                  ctx.n_clusters,
+                                  pack_spec=self._pack_spec(ctx))
 
     def make_step(self, ctx):
         return fedsoft.make_step(
             ctx.loss_fn, ctx.pel_fn, self.mixing(ctx), tau=ctx.exp.tau,
             batch=ctx.exp.batch, s_clusters=ctx.n_clusters,
+            pack_spec=self._pack_spec(ctx),
         )
 
     def personalize(self, ctx, state, key):
         del key
-        return fedsoft.personalized_params(state)
+        return fedsoft.personalized_params(state,
+                                           pack_spec=self._pack_spec(ctx))
 
     def comm_model(self, ctx):
         per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)
@@ -450,21 +511,28 @@ class FedSoftMethod(Method):
 
 
 class PFedMeMethod(Method):
+    supports_param_plane = True
+
     def __init__(self, name: str, centralized: bool):
         self.name = name
         self.centralized = centralized
 
     def init(self, ctx, key):
         return pfedme.init_state(key, n_clients=ctx.n_clients,
-                                 model_init=ctx.model_init)
+                                 model_init=ctx.model_init,
+                                 pack_spec=self._pack_spec(ctx))
 
     def make_step(self, ctx):
-        return pfedme.make_step(ctx.loss_fn, self.mixing(ctx),
-                                tau=ctx.exp.tau, batch=ctx.exp.batch)
+        return pfedme.make_step(
+            ctx.loss_fn, self.mixing(ctx), tau=ctx.exp.tau,
+            batch=ctx.exp.batch, pack_spec=self._pack_spec(ctx),
+            gossip_backend=ctx.opt("gossip_backend", "reference"),
+        )
 
     def personalize(self, ctx, state, key):
         return pfedme.personalized_params(state, ctx.loss_fn, ctx.train, key,
-                                          batch=ctx.exp.batch)
+                                          batch=ctx.exp.batch,
+                                          pack_spec=self._pack_spec(ctx))
 
     def comm_model(self, ctx):
         per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)

@@ -50,6 +50,28 @@ def _lr_schedule(exp: PaperExpConfig):
     return lambda t: exp.lr0 * (exp.lr_decay ** t)
 
 
+def _check_param_plane(m: Method, options: dict) -> None:
+    """Hard error instead of a silent pytree fallback: a run that ASKED for
+    the packed engine must either get it or fail loudly (benchmark results
+    would otherwise misattribute the representation)."""
+    if options.get("param_plane") and not m.supports_param_plane:
+        raise ValueError(
+            f"method {m.name!r} does not support param_plane=True — its "
+            "adapter has not been ported onto the packed (S, N, X) "
+            "parameter plane (core/packing.py); drop param_plane or port "
+            "the adapter and set supports_param_plane"
+        )
+
+
+def _donate_argnums(options: dict) -> tuple:
+    """The round step is jitted with the state argument donated by default:
+    the (S, N, X) plane (or pytree state) is aliased input→output, so the
+    round updates it in place instead of allocating a second copy each
+    call. ``options={"donate": False}`` opts out (e.g. when a caller holds
+    onto intermediate states)."""
+    return (0,) if options.get("donate", True) else ()
+
+
 def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
             curve, t0, n_compiles=None) -> RunResult:
     comm_model = method.comm_model(ctx)
@@ -87,10 +109,13 @@ def run_method(
 ) -> RunResult:
     """Run one method for ``exp.rounds`` rounds; returns RunResult.
 
-    ``gossip_mode`` / ``gossip_backend`` / ``param_plane`` are FedSPD
+    ``gossip_mode`` (FedSPD) / ``gossip_backend`` / ``param_plane`` are
     conveniences forwarded into ``options`` ("dense"/"permute" wiring;
     "reference"/"pallas"/"ppermute" execution; packed (S, N, X) plane vs
-    pytree state).  Arbitrary per-method knobs go through ``options``.
+    pytree state — valid for EVERY method id, ValueError for adapters that
+    have not opted in).  Arbitrary per-method knobs go through ``options``;
+    ``options={"donate": False}`` disables the default in-place state
+    donation of the jitted round step.
     """
     t0 = time.time()
     m = get_method(method)
@@ -101,12 +126,13 @@ def run_method(
         options.setdefault("gossip_backend", gossip_backend)
     if param_plane is not None:
         options.setdefault("param_plane", param_plane)
+    _check_param_plane(m, options)
     ctx = build_context(data, exp, graph=graph, seed=seed, options=options)
 
     key = jax.random.PRNGKey(seed)
     k_init, k_run, k_eval = jax.random.split(key, 3)
     state = m.init(ctx, k_init)
-    step = jax.jit(m.make_step(ctx))
+    step = jax.jit(m.make_step(ctx), donate_argnums=_donate_argnums(options))
     lr_at = _lr_schedule(exp)
 
     curve = []
@@ -143,8 +169,10 @@ def run_method_batch(
     """
     t0 = time.time()
     m = get_method(method)
+    options = dict(options or {})
+    _check_param_plane(m, options)
     ctx = build_context(data, exp, graph=graph, seed=int(seeds[0]),
-                        options=dict(options or {}))
+                        options=options)
     lr_at = _lr_schedule(exp)
 
     seed_keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
@@ -157,6 +185,7 @@ def run_method_batch(
     states = jax.tree.map(lambda l: l.astype(l.dtype), states)
     step = jax.jit(
         jax.vmap(m.make_step(ctx), in_axes=(0, None, 0, None)),
+        donate_argnums=_donate_argnums(options),
     )
     evaluate = jax.jit(
         jax.vmap(

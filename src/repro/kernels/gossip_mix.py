@@ -83,6 +83,41 @@ def gossip_mix_flat(
     )(w, c)
 
 
+def _mix_stack_kernel(w_ref, c_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)       # (N, N)
+    c = c_ref[...][0].astype(jnp.float32)    # (1, N, x_block) -> (N, x_block)
+    o_ref[...] = jax.lax.dot_general(
+        w, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)[None]
+
+
+def gossip_mix_stack(
+    w: jnp.ndarray,  # (N, N) mixing weights, shared by every stack
+    c: jnp.ndarray,  # (S, N, X) packed center stacks
+    *,
+    x_block: int | None = None,  # default: 2048 compiled, whole-X interpret
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Mix EVERY cluster stack of a packed (S, N, X) plane with the same
+    weight matrix in ONE ``pallas_call``: grid = (S, x_blocks), each step
+    one (N×N)·(N×x_block) MXU matmul on cluster s's slab. This is the
+    FedEM/FedSoft-shaped exchange (all S models move every round) — the
+    pytree layout pays S × n_leaves kernel launches for the same traffic."""
+    s, n, x = c.shape
+    x_block = _plan_blocks(x, x_block, interpret)
+    return pl.pallas_call(
+        _mix_stack_kernel,
+        grid=(s, -(-x // x_block)),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda si, i: (0, 0)),
+            pl.BlockSpec((1, n, x_block), lambda si, i: (si, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, n, x_block), lambda si, i: (si, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((s, n, x), c.dtype),
+        interpret=interpret,
+    )(w, c)
+
+
 def gossip_mix_tree(w: jnp.ndarray, c_tree, *, x_block: int | None = None,
                     interpret: bool = True):
     """Apply the mix to a pytree of (N, ...) leaves (flatten / unflatten).

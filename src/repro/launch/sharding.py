@@ -94,8 +94,11 @@ def params_shardings(params: PyTree, mesh: Mesh) -> PyTree:
 
 
 def fedspd_state_pspecs(state, mesh: Mesh):
-    """PartitionSpecs for a FedSPDState whose centers leaves are
-    (S, N_clients, *param_shape)."""
+    """PartitionSpecs for a FedSPDState: pytree centers with leaves
+    (S, N_clients, *param_shape), or the packed (S, N, X) plane
+    (dispatches to ``plane_state_pspecs``)."""
+    if hasattr(state.centers, "ndim"):  # packed plane, not a pytree
+        return plane_state_pspecs(state, mesh)
     dp = dp_axes(mesh)
 
     def center_spec(path, leaf):
@@ -110,6 +113,34 @@ def fedspd_state_pspecs(state, mesh: Mesh):
         round=P(),
         key=P(),
         comm_bytes=P(),
+    )
+
+
+def plane_state_pspecs(state, mesh: Mesh):
+    """PartitionSpecs for a FedSPDState carrying the packed (S, N, X)
+    parameter plane: the client (N) axis shards over the mesh's
+    ("pod","data") rows — one client per row, matching the edge-colored
+    ppermute gossip schedule — and the flat X axis stays replicated
+    (sharding it over "model" would cut across the PackSpec's static leaf
+    offsets; tensor-parallel model dims live INSIDE the per-client forward,
+    not on the plane). u and z shard their client axis."""
+    dp = dp_axes(mesh)
+    return type(state)(
+        centers=P(None, dp, None),
+        u=P(dp, None),
+        z=P(dp, None),
+        round=P(),
+        key=P(),
+        comm_bytes=P(),
+    )
+
+
+def shard_plane_state(state, mesh: Mesh):
+    """Place a packed FedSPDState on the mesh (client axis over rows) —
+    the one device_put the stream loop does before carrying the plane
+    donated round to round."""
+    return jax.device_put(
+        state, to_shardings(plane_state_pspecs(state, mesh), mesh)
     )
 
 

@@ -44,21 +44,42 @@ def make_fedspd_train_step(
     fcfg: FedSPDConfig,
     mix_fn=None,
     pack_spec=None,
+    mesh=None,
+    donate: bool = False,
 ):
     """One FedSPD round over (N_clients, per_client_batch, ...) batches.
 
     ``pack_spec`` (core/packing.py) selects the packed (S, N, X)
     parameter-plane engine; the per-model wire bytes are derived once here
-    (static per model) instead of per-trace inside the step body."""
+    (static per model) instead of per-trace inside the step body.
+
+    ``mesh`` (requires the packed plane) is the multi-host path: the
+    plane's client axis is sharded over the mesh's ("pod","data") rows
+    (launch/sharding.plane_state_pspecs) and the gossip runs the
+    edge-colored ``lax.ppermute`` schedule under shard_map — place the
+    state with ``sharding.shard_plane_state`` and GSPMD keeps it there.
+    ``donate=True`` jits the step with the state donated, so the plane is
+    updated in place round over round (no per-round copy of the largest
+    buffer in the program)."""
     model_bytes = None
     if getattr(bundle, "init", None) is not None:
         from repro.utils.pytree import tree_bytes
 
         p_sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
         model_bytes = tree_bytes(p_sds)
+    if mesh is not None:
+        if pack_spec is None:
+            raise ValueError(
+                "mesh sharding of the round step requires the packed "
+                "parameter plane (pass pack_spec)"
+            )
+        if mix_fn is None:
+            mix_fn = make_ppermute_gossip_mix(
+                gossip, mesh, replicate_model_dims=True
+            )
     step = make_round_step(
         bundle.loss, bundle.per_example_loss, gossip, fcfg, mix_fn=mix_fn,
-        pack_spec=pack_spec, model_bytes=model_bytes,
+        pack_spec=pack_spec, model_bytes=model_bytes, donate=donate,
     )
 
     def train_step(state, batch):

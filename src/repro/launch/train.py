@@ -1,14 +1,22 @@
 """Training launcher: FedSPD over any assigned architecture.
 
-Two modes:
+The stream loop CARRIES the packed (S, N, X) parameter plane between
+rounds (default): models are packed once after init, every round's step is
+jitted with the state donated (the plane is aliased in place, no per-round
+copy), and parameters re-enter pytree form only at the final personalize /
+checkpoint boundary. ``--pytree`` selects the historical per-leaf engine.
+
+Two placement modes:
 
 - ``--mesh none`` (default): single-device execution at whatever scale fits
   (smoke configs on CPU; the end-to-end example drivers use this).
-- ``--mesh pod|2pod``: the production mesh — clients sharded over
-  ("pod","data"), each client's model tensor-parallel over "model". On this
-  CPU container that mesh only exists under the dry-run device flag, so
-  ``--mesh`` here is exercised with real allocation only on hardware; the
-  sharded *program* is proven by launch/dryrun.py.
+- ``--mesh pod|2pod``: the production mesh — the plane's client axis
+  sharded over the ("pod","data") rows (one client per row; 16 clients on
+  one pod, 32 across two) with gossip running the edge-colored shard_map
+  ``ppermute`` schedule. On this CPU container that mesh only exists under
+  the dry-run device flag, so ``--mesh`` here is exercised with real
+  allocation only on hardware; the sharded *program* is proven by
+  launch/dryrun.py and the subprocess tests.
 
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \\
       --rounds 20 --clients 8
@@ -24,10 +32,9 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.configs.base import ARCH_ALIASES, get_config, get_smoke_config
-from repro.core.fedspd import (
-    FedSPDConfig, init_state, make_round_step, personalize,
-)
-from repro.core.gossip import GossipSpec
+from repro.core.fedspd import FedSPDConfig, init_state, personalize
+from repro.core.gossip import GossipSpec, make_mix_fn
+from repro.core.packing import make_pack_spec, pack_state
 from repro.data.synthetic import make_mixture_tokens
 from repro.graphs.topology import make_graph
 from repro.models.registry import build_model
@@ -55,6 +62,21 @@ def main(argv=None):
     ap.add_argument("--avg-degree", type=float, default=4)
     ap.add_argument("--gossip-mode", default="dense",
                     choices=["dense", "permute"])
+    ap.add_argument("--gossip-backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="Eq. (1) execution path (mesh mode uses the "
+                         "shard_map ppermute schedule regardless)")
+    ap.add_argument("--pytree", dest="param_plane", action="store_false",
+                    default=True,
+                    help="per-leaf pytree state (the pre-plane engine); "
+                         "default carries the packed (S, N, X) plane")
+    ap.add_argument("--no-donate", dest="donate", action="store_false",
+                    default=True,
+                    help="disable in-place state donation across rounds")
+    ap.add_argument("--mesh", default="none", choices=["none", "pod", "2pod"],
+                    help="shard the plane's client axis over the production "
+                         "mesh rows (requires the packed plane and one "
+                         "client per mesh row)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
@@ -74,9 +96,43 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     k_init, k_data = jax.random.split(key)
     state = init_state(k_init, bundle.init, fcfg, data_m=1)
-    step = jax.jit(make_round_step(
-        bundle.loss, bundle.per_example_loss, gossip, fcfg,
-    ))
+
+    # packed plane: pack ONCE here; the loop below carries the (S, N, X)
+    # buffer round to round (donated in place) — no re-packing per call
+    pack_spec = None
+    if args.param_plane:
+        pack_spec = make_pack_spec(
+            jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        )
+        state = pack_state(state, pack_spec)
+
+    mesh = None
+    mix_fn = None
+    if args.mesh != "none":
+        from repro.launch.mesh import dp_size, make_production_mesh
+        from repro.launch.sharding import shard_plane_state
+
+        if pack_spec is None:
+            raise SystemExit("--mesh requires the packed plane (drop --pytree)")
+        mesh = make_production_mesh(multi_pod=args.mesh == "2pod")
+        if dp_size(mesh) != n:
+            raise SystemExit(
+                f"--mesh {args.mesh} has {dp_size(mesh)} client rows; "
+                f"run with --clients {dp_size(mesh)}"
+            )
+        state = shard_plane_state(state, mesh)
+    else:
+        mix_fn = make_mix_fn(gossip, args.gossip_backend,
+                             plane=pack_spec is not None)
+
+    from repro.launch.steps import make_fedspd_train_step
+
+    step = make_fedspd_train_step(
+        bundle, gossip, fcfg, mix_fn=mix_fn, pack_spec=pack_spec,
+        mesh=mesh, donate=args.donate,
+    )
+    if not args.donate:
+        step = jax.jit(step)
 
     # document pool: cluster-specific Markov chains (paper's mixture analogue)
     pool = make_mixture_tokens(
@@ -108,7 +164,7 @@ def main(argv=None):
                   f"consensus={cons}  comm={float(metrics['comm_bytes']):.3e}B  "
                   f"({time.time()-t0:.1f}s)")
 
-    personalized = personalize(state)
+    personalized = personalize(state, pack_spec)  # pytree re-entry boundary
     k_data, kb = jax.random.split(k_data)
     eval_batch = sample_batch(kb)
     if cfg.family == "audio":

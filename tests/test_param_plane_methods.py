@@ -1,0 +1,146 @@
+"""param_plane=True for EVERY registry method id (ISSUE-3 tentpole).
+
+The packed (S, N, X) / (N, X) parameter-plane engine (core/packing.py) now
+backs all 13 method ids, not just FedSPD: init packs, the step runs flat
+(scatter-added gradients, single-matmul gossip), personalize/evaluate
+unpack at the API boundary. Each id must reproduce its pytree run to fp32
+tolerance through init → rounds → personalize → eval, with identical comm
+accounting; an adapter that has NOT opted in must be a hard ValueError,
+never a silent pytree fallback.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.data.synthetic import make_mixture_classification
+from repro.experiments import (
+    Method,
+    register,
+    registry,
+    run_method,
+    run_method_batch,
+)
+
+ALL_IDS = (
+    "fedspd", "fedspd_permute", "local",
+    "dfl_fedavg", "cfl_fedavg", "dfl_fedem", "cfl_fedem",
+    "dfl_ifca", "cfl_ifca", "dfl_fedsoft", "cfl_fedsoft",
+    "dfl_pfedme", "cfl_pfedme",
+)
+
+# fast lane keeps one id per adapter class (the cfl_ variants and
+# fedspd_permute only change the mixing matrix / gossip wiring; fedspd's
+# packed engine is already covered by tests/test_packing.py)
+_FAST_IDS = {"local", "dfl_fedavg", "dfl_ifca", "dfl_fedsoft"}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    exp = PaperExpConfig(
+        n_clients=5, n_per_client=32, rounds=3, tau=1, batch=8,
+        avg_degree=3.0, model="mlp", dim=8, n_classes=3,
+    )
+    data = make_mixture_classification(
+        n_clients=5, n_clusters=2, n_per_client=32, dim=8, n_classes=3,
+        seed=0, noise=0.3,
+    )
+    return exp, data
+
+
+@pytest.mark.parametrize(
+    "method",
+    [m if m in _FAST_IDS else pytest.param(m, marks=pytest.mark.slow)
+     for m in sorted(ALL_IDS)],
+)
+def test_param_plane_matches_pytree(setup, method):
+    """Same seed, pytree vs packed plane: identical trajectory (same key
+    streams, same batches, mathematically identical updates) to fp32
+    tolerance — accuracies, mixture coefficients / hard assignments, and
+    wire-byte accounting (original dtypes, never the fp32 plane's)."""
+    exp, data = setup
+    a = run_method(method, data, exp, seed=0, eval_every=100)
+    b = run_method(method, data, exp, seed=0, eval_every=100,
+                   param_plane=True)
+    np.testing.assert_allclose(a.acc_per_client, b.acc_per_client, atol=1e-4)
+    for k in ("u", "choice"):
+        if k in a.extras:
+            np.testing.assert_allclose(a.extras[k], b.extras[k], atol=1e-4)
+    assert abs(a.comm_bytes - b.comm_bytes) <= 1e-6 * max(a.comm_bytes, 1.0)
+
+
+def test_param_plane_batch_driver(setup):
+    """Packed engine under the multi-seed vmapped driver: one compile,
+    distinct finite per-seed results."""
+    exp, data = setup
+    rs = run_method_batch("dfl_fedavg", data, exp, seeds=(0, 1),
+                          eval_every=2, options={"param_plane": True})
+    assert len(rs) == 2
+    assert all(np.isfinite(r.mean_acc) for r in rs)
+    assert rs[0].extras["n_compiles"] == 1
+
+
+@pytest.mark.slow
+def test_param_plane_pallas_baseline_gossip(setup):
+    """Baselines honour gossip_backend="pallas" on the plane: the static
+    Metropolis average streams through kernels/gossip_mix and must match
+    the reference einsum end to end."""
+    exp, data = setup
+    a = run_method("dfl_fedavg", data, exp, seed=0, eval_every=100,
+                   param_plane=True)
+    b = run_method("dfl_fedavg", data, exp, seed=0, eval_every=100,
+                   param_plane=True, gossip_backend="pallas")
+    np.testing.assert_allclose(a.acc_per_client, b.acc_per_client, atol=1e-5)
+    c = run_method("dfl_fedem", data, exp, seed=0, eval_every=100,
+                   param_plane=True)
+    d = run_method("dfl_fedem", data, exp, seed=0, eval_every=100,
+                   param_plane=True, gossip_backend="pallas")
+    np.testing.assert_allclose(c.extras["u"], d.extras["u"], atol=1e-5)
+
+
+def test_unsupported_param_plane_is_hard_error(setup):
+    """A method whose adapter has not opted in must fail LOUDLY with its id
+    in the message — the old behaviour silently fell back to pytree and
+    misattributed benchmark results."""
+    exp, data = setup
+
+    class NoPlaneMethod(Method):
+        name = "test_noplane"
+
+        def init(self, ctx, key):  # pragma: no cover - never reached
+            raise AssertionError("driver must reject before init")
+
+    register(NoPlaneMethod())
+    try:
+        with pytest.raises(ValueError, match="test_noplane"):
+            run_method("test_noplane", data, exp, seed=0, param_plane=True)
+        with pytest.raises(ValueError, match="param_plane"):
+            run_method_batch("test_noplane", data, exp, seeds=(0,),
+                             options={"param_plane": True})
+    finally:
+        registry._REGISTRY.pop("test_noplane", None)
+
+
+def test_all_builtin_methods_support_param_plane():
+    """ISSUE-3 acceptance: param_plane is valid for all 13 registry ids."""
+    from repro.experiments import get_method
+
+    for m in ALL_IDS:
+        assert get_method(m).supports_param_plane, m
+
+
+def test_gossip_avg_stack_matches_reference():
+    """The one-shot (S, N, X) stack mix (FedEM's exchange) equals the
+    per-cluster reference einsum, on both backends."""
+    from repro.baselines.common import gossip_avg, gossip_avg_stack
+
+    key = jax.random.PRNGKey(0)
+    w = jax.nn.softmax(jax.random.normal(key, (6, 6)), axis=1)
+    plane = jax.random.normal(jax.random.PRNGKey(1), (3, 6, 41))
+    want = jax.vmap(lambda c_s: gossip_avg(c_s, w))(plane)
+    for backend in ("reference", "pallas"):
+        got = gossip_avg_stack(plane, w, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+    with pytest.raises(ValueError, match="gossip backend"):
+        gossip_avg_stack(plane, w, backend="nope")
