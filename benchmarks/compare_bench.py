@@ -6,8 +6,9 @@ the previous run's ``bench-roundstep`` artifact as the baseline (falling
 back to the committed ``BENCH_roundstep.json`` when no artifact exists —
 first run, expired retention, forked PRs). Per-lane medians are compared;
 any lane whose median round time regresses by more than ``--threshold``
-(default 25%) fails the job. A markdown delta table — per-lane timings plus
-the packed-vs-pytree speedup matrix — is appended to
+(default 25%) fails the job. A markdown delta table — per-lane timings,
+the packed-vs-pytree speedup matrix, and the wire-byte table for the
+compressed-communication lanes (fedspd/comm_*) — is appended to
 ``$GITHUB_STEP_SUMMARY`` when set, and always printed to stdout.
 
   python -m benchmarks.compare_bench --baseline prev.json --new BENCH_roundstep.json
@@ -102,6 +103,25 @@ def markdown_report(base: dict, new: dict, rows: list,
         )
         lines.append(f"| {lane} | {c['pytree_ms']:.2f} | "
                      f"{c['packed_ms']:.2f} | x{c['speedup']} |")
+    if new.get("comm_lanes"):
+        old_wire = {r.get("lane"): r.get("wire_model_bytes")
+                    for r in base.get("comm_lanes", [])}
+        lines += [
+            "",
+            "### wire bytes (comm lanes)",
+            "",
+            "| lane | prev wire B | wire B | logical B | ratio | Δ |",
+            "|---|---:|---:|---:|---:|---:|",
+        ]
+        for r in new["comm_lanes"]:
+            prev = old_wire.get(r["lane"])
+            delta = ("—" if prev in (None, 0)
+                     else f"{(r['wire_model_bytes'] / prev - 1) * 100:+.1f}%")
+            lines.append(
+                f"| {r['lane']} | {_fmt(prev, 'd')} "
+                f"| {r['wire_model_bytes']} | {r['logical_model_bytes']} "
+                f"| x{r['wire_ratio']} | {delta} |"
+            )
     lines.append("")
     lines.append("**FAIL**: " + ", ".join(regressions) if regressions
                  else "**gate green** — no lane regressed past threshold")

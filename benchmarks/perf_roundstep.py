@@ -9,6 +9,10 @@ production train loop) across:
   model           mlp (few dense leaves)     vs conv (multi-leaf CNN)
   method          FedSPD round step          + registry baseline steps
                                                (dfl_fedavg, dfl_fedem)
+  wire codec      fp32                       vs int8 / topk compressed
+                                               exchange (comm/codecs),
+                                               stable fedspd/comm_* lanes
+                                               + wire-byte accounting
 
 All steps are jitted with the state donated (the production loop's
 configuration). Every result row carries a stable ``lane`` id; the output
@@ -31,6 +35,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommConfig, make_channel
 from repro.core.fedspd import FedSPDConfig, init_state, make_round_step
 from repro.core.gossip import GossipSpec, make_mix_fn
 from repro.core.packing import make_pack_spec, pack_state
@@ -48,7 +53,8 @@ def _block(tree):
 
 
 def _build(model: str, regime: str, backend: str, packed: bool,
-           *, n: int, m: int, dim: int, tau: int, seed: int = 0):
+           *, n: int, m: int, dim: int, tau: int, seed: int = 0,
+           comm=None):
     data = make_mixture_classification(
         n_clients=n, n_clusters=2, n_per_client=m, dim=dim, n_classes=4,
         seed=seed,
@@ -67,12 +73,16 @@ def _build(model: str, regime: str, backend: str, packed: bool,
     pack_spec = make_pack_spec(jax.eval_shape(model_init, key))
     if packed:
         state = pack_state(state, pack_spec)
+        channel = make_channel(comm, pack_spec.size)
+        if channel is not None and channel.has_ef:
+            state = state._replace(ef=channel.init_residual((n,)))
     step = make_round_step(
         loss_fn, pel_fn, spec, fcfg,
-        mix_fn=make_mix_fn(spec, backend, plane=packed),
+        mix_fn=make_mix_fn(spec, backend, plane=packed, comm=comm),
         pack_spec=pack_spec if packed else None,
         model_bytes=pack_spec.model_bytes,
         donate=True,  # the production loop's configuration
+        comm=comm,
     )
     if regime == "full":
         payload = {"inputs": jnp.asarray(data.x), "targets": jnp.asarray(data.y)}
@@ -130,6 +140,53 @@ def bench_pair(model: str, regime: str, backend: str,
 
 
 BASELINE_METHODS = ("dfl_fedavg", "dfl_fedem")
+COMM_CODECS = ("int8", "topk")
+
+
+def bench_comm_pair(codec: str, *, n: int, m: int, dim: int, tau: int,
+                    reps: int, seed: int = 0) -> dict:
+    """Wire-codec overhead on the packed FedSPD round step: fp32 vs the
+    compressed exchange (error feedback on — the production setting),
+    interleaved like ``bench_pair``. One row per codec with a STABLE lane
+    id (``fedspd/comm_<codec>``) so compare_bench.py trend-gates it, plus
+    the static wire-byte accounting for the step-summary delta table."""
+    comm = CommConfig(codec=codec, error_feedback=True)
+    built = {
+        False: _build("mlp", "full", "reference", True,
+                      n=n, m=m, dim=dim, tau=tau, seed=seed),
+        True: _build("mlp", "full", "reference", True,
+                     n=n, m=m, dim=dim, tau=tau, seed=seed, comm=comm),
+    }
+    compile_s, times, states = {}, {False: [], True: []}, {}
+    for coded, (step, state, payload, _) in built.items():
+        t0 = time.perf_counter()
+        state, _aux = step(state, payload)
+        _block(state)
+        compile_s[coded] = time.perf_counter() - t0
+        states[coded] = state
+    for _ in range(reps):
+        for coded, (step, _, payload, _) in built.items():
+            t0 = time.perf_counter()
+            states[coded], _aux = step(states[coded], payload)
+            _block(states[coded])
+            times[coded].append(time.perf_counter() - t0)
+    paired = statistics.median(
+        b / a for a, b in zip(times[False], times[True])
+    )
+    pack_spec = built[True][3]
+    channel = make_channel(comm, pack_spec.size)
+    return {
+        "lane": f"fedspd/comm_{codec}",
+        "codec": codec, "error_feedback": True, "n_clients": n,
+        "compile_s": round(compile_s[True], 4),
+        "round_ms": round(min(times[True]) * 1e3, 4),
+        "round_ms_median": round(statistics.median(times[True]) * 1e3, 4),
+        "fp32_round_ms": round(min(times[False]) * 1e3, 4),
+        "paired_overhead_vs_fp32": round(paired, 3),
+        "logical_model_bytes": pack_spec.model_bytes,
+        "wire_model_bytes": channel.wire_model_bytes,
+        "wire_ratio": round(channel.wire_ratio(pack_spec.model_bytes), 4),
+    }
 
 
 def bench_method_pair(method: str, *, n: int, m: int, dim: int, tau: int,
@@ -207,6 +264,16 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
         for r in pair:
             print(f"{r['lane']:>24s}  round {r['round_ms']:9.2f} ms   "
                   f"compile {r['compile_s']:6.2f} s")
+    # compressed-communication lanes: codec overhead + wire-byte accounting
+    comm_lanes = []
+    for codec in COMM_CODECS:
+        row = bench_comm_pair(codec, n=n, m=m, dim=dim, tau=tau, reps=reps)
+        results.append(row)
+        comm_lanes.append(row)
+        print(f"{row['lane']:>24s}  round {row['round_ms']:9.2f} ms   "
+              f"(fp32 {row['fp32_round_ms']:8.2f} ms)  wire "
+              f"{row['wire_model_bytes']}/{row['logical_model_bytes']} B "
+              f"= x{row['wire_ratio']}")
     comparisons = []
     for model in ("mlp", "conv"):
         for regime in ("full", "stream"):
@@ -242,6 +309,7 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
         },
         "results": results,
         "comparisons": comparisons,
+        "comm_lanes": comm_lanes,
     }
     out = os.path.abspath(out)
     with open(out, "w") as f:

@@ -1,11 +1,19 @@
 """The paper's headline claim (Figure 4): FedSPD keeps its accuracy in
-LOW-connectivity networks where other DFL methods degrade.
+LOW-connectivity networks where other DFL methods degrade — extended with
+the BANDWIDTH axis the compressed-communication subsystem opens: the same
+sweep per wire codec, so each (topology, degree) cell reads as an
+accuracy-vs-wire-bytes frontier (fp32 vs int8+EF at ~25% of the bytes vs
+top-k at ~12%).
+
+All runs use the packed parameter plane (the compressing codecs operate on
+flat (N, X) slices; ``run_method`` enables it for them automatically, and
+``param_plane=True`` keeps the fp32 baseline on the identical engine).
 
     PYTHONPATH=src python examples/connectivity_sweep.py
 """
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments import run_method
+from repro.experiments import CommConfig, run_method
 from repro.graphs.topology import make_graph
 
 exp = PaperExpConfig(n_clients=12, rounds=60, tau=5, batch=16,
@@ -15,14 +23,27 @@ data = make_mixture_classification(
     dim=exp.dim, n_classes=exp.n_classes, seed=1, noise=0.25,
 )
 
-print(f"{'topology':9s} {'deg':>5s} {'fedspd':>8s} {'dfl_fedem':>10s} "
-      f"{'dfl_fedavg':>11s}")
+CODECS = {
+    "fp32": CommConfig(codec="fp32"),
+    "int8+ef": CommConfig(codec="int8", error_feedback=True),
+    "topk+ef": CommConfig(codec="topk", error_feedback=True),
+}
+
+print("connectivity sweep (paper Fig. 4) x bandwidth axis "
+      "(accuracy @ wire MB)\n")
+header = f"{'topology':9s} {'deg':>5s} {'codec':>8s}"
+for m in ("fedspd", "dfl_fedem", "dfl_fedavg"):
+    header += f" {m + ' acc@MB':>21s}"
+print(header)
 for kind in ("er", "ba", "rgg"):
     for deg in (2.5, 4.0, 6.0):
         g = make_graph(kind, exp.n_clients, deg, seed=2)
-        row = []
-        for m in ("fedspd", "dfl_fedem", "dfl_fedavg"):
-            r = run_method(m, data, exp, graph=g, seed=0, eval_every=10**9)
-            row.append(r.mean_acc)
-        print(f"{kind:9s} {g.avg_degree:5.1f} {row[0]:8.3f} {row[1]:10.3f} "
-              f"{row[2]:11.3f}")
+        for name, comm in CODECS.items():
+            row = f"{kind:9s} {g.avg_degree:5.1f} {name:>8s}"
+            for m in ("fedspd", "dfl_fedem", "dfl_fedavg"):
+                r = run_method(m, data, exp, graph=g, seed=0,
+                               eval_every=10**9, param_plane=True,
+                               comm=comm)
+                row += f" {r.mean_acc:12.3f}@{r.wire_bytes / 1e6:7.1f}"
+            print(row)
+        print()

@@ -36,6 +36,8 @@ for r, acc in result.curve:
     print(f"round {r:3d}  mean train acc {acc:.3f}")
 print(f"\nper-client test accuracy: {result.acc_per_client.round(3)}")
 print(f"mean: {result.mean_acc:.3f} (std across clients {result.std_acc:.3f})")
-print(f"communication: {result.comm_bytes / 1e6:.1f} MB")
+print(f"communication: {result.comm_bytes / 1e6:.1f} MB logical "
+      f"({result.wire_bytes / 1e6:.1f} MB on the wire; add "
+      f"comm=CommConfig(codec='int8') to compress)")
 print(f"estimated mixtures u:\n{np.asarray(result.extras['u']).round(2)}")
 print(f"true mixtures:\n{data.mix_true.round(2)}")

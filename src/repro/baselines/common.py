@@ -91,6 +91,40 @@ def gossip_avg_stack(plane: jnp.ndarray, w: jnp.ndarray, *,
     ).astype(plane.dtype)
 
 
+def gossip_avg_comm(plane: jnp.ndarray, w: jnp.ndarray, *,
+                    channel=None, key=None, ef=None,
+                    backend: str = "reference"):
+    """Compressed W-average on the packed plane: W · decode(encode(x + e)).
+
+    ``plane`` is the (N, X) per-client plane or FedEM's (S, N, X) stack
+    (all S models move, the codec applies to every message). With
+    ``channel=None`` this is EXACTLY ``gossip_avg`` / ``gossip_avg_stack``
+    — the uncompressed code path, bit for bit. On the Pallas backend the
+    quantization codecs feed the fused dequantize+mix kernel directly
+    (the mix's HBM read side is the int8 payload); top-k decodes outside
+    and streams the dense mix. Returns (mixed, ef')."""
+    if channel is None:
+        # pytree states (no pack_spec) also pass through here untouched
+        mixed = (gossip_avg_stack(plane, w, backend=backend)
+                 if getattr(plane, "ndim", 0) == 3
+                 else gossip_avg(plane, w, backend=backend))
+        return mixed, ef
+    if backend == "pallas" and channel.fused and plane.ndim == 2:
+        from repro.kernels.gossip_mix import gossip_mix_encoded
+
+        enc, _hat, ef = channel.encode_stream(plane, key, ef)
+        return gossip_mix_encoded(
+            w, enc, qblock=channel.cfg.block, x_out=plane.shape[-1],
+            out_dtype=plane.dtype,
+            interpret=jax.default_backend() != "tpu",
+        ), ef
+    x_hat, ef = channel.roundtrip(plane, key, ef)
+    mixed = (gossip_avg_stack(x_hat, w, backend=backend)
+             if plane.ndim == 3
+             else gossip_avg(x_hat, w, backend=backend))
+    return mixed.astype(plane.dtype), ef
+
+
 def local_sgd(
     loss_fn: Callable,  # PYTREE-parameter loss, packed or not
     params: PyTree,  # (N, ...) leaves — or the packed (N, X) plane

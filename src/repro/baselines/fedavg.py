@@ -11,27 +11,44 @@ from __future__ import annotations
 
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
-from repro.baselines.common import gossip_avg, local_sgd
+from repro.baselines.common import gossip_avg_comm, local_sgd
+from repro.comm.codecs import join_ef, split_ef
 from repro.core.packing import PackSpec, maybe_unpack
 
 
 def make_step(loss_fn: Callable, w, *, tau: int, batch: int,
               pack_spec: PackSpec | None = None,
-              gossip_backend: str = "reference"):
+              gossip_backend: str = "reference", channel=None):
+    """``channel`` (comm/codecs.Channel) runs the exchange through a wire
+    codec on the packed plane; with error feedback the state rides a
+    ``WithEF`` wrapper so the residual crosses rounds."""
+    if channel is not None and pack_spec is None:
+        raise ValueError("comm compression requires the packed plane")
     w = jnp.asarray(w)
 
-    def step(params, data, key, lr):
+    def step(state, data, key, lr):
+        params, ef = split_ef(state, channel)
+        if channel is not None:
+            key, k_comm = jax.random.split(key)
+        else:
+            k_comm = None
         params = local_sgd(loss_fn, params, data, key, tau, batch, lr,
                            pack_spec=pack_spec)
-        return gossip_avg(params, w, backend=gossip_backend), {}
+        mixed, ef = gossip_avg_comm(params, w, channel=channel, key=k_comm,
+                                    ef=ef, backend=gossip_backend)
+        return join_ef(mixed, ef, channel), {}
 
     return step
 
 
-def personalized_params(params, pack_spec: PackSpec | None = None):
+def personalized_params(params, pack_spec: PackSpec | None = None,
+                        channel=None):
     """FedAvg has no personalization: every client evaluates its own copy
     (equal to the consensus model up to gossip error). Packed states
-    re-enter pytree form here — the API boundary."""
+    re-enter pytree form here — the API boundary — and EF-wrapped states
+    drop their residual rider."""
+    params, _ = split_ef(params, channel)
     return maybe_unpack(params, pack_spec)

@@ -20,7 +20,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.baselines.common import gossip_avg, gossip_avg_stack
+from repro.baselines.common import gossip_avg, gossip_avg_comm
 from repro.core.packing import (
     PackSpec,
     flat_add_grads,
@@ -33,6 +33,9 @@ from repro.core.packing import (
 class FedEMState(NamedTuple):
     centers: any      # leaves (S, N, ...) — or the packed (S, N, X) plane
     u: jnp.ndarray    # (N, S)
+    ef: any = None    # (S, N, X) error-feedback residual (comm/codecs) —
+    #                   FedEM ships ALL S models, so the residual covers
+    #                   the whole stack; None unless an EF codec is on
 
 
 def init_state(key, model_init, n_clients: int, s_clusters: int,
@@ -57,7 +60,10 @@ def make_step(
     s_clusters: int,
     pack_spec: PackSpec | None = None,
     gossip_backend: str = "reference",
+    channel=None,
 ):
+    if channel is not None and pack_spec is None:
+        raise ValueError("comm compression requires the packed plane")
     w = jnp.asarray(w)
     # flat view of the per-example loss for the E-step forwards; the
     # M-step gradient goes through packing.flat_grad on the pytree loss
@@ -80,6 +86,10 @@ def make_step(
         )
 
     def step(state: FedEMState, data, key, lr):
+        if channel is not None:
+            key, k_comm = jax.random.split(key)
+        else:
+            k_comm = None
         r = e_step(state.centers, state.u, data)  # (N, M, S)
         u = jnp.mean(r, axis=1)  # (N, S)
 
@@ -121,12 +131,17 @@ def make_step(
             state.centers, r, keys
         )
         # exchange ALL S models (the S× communication cost); the packed
-        # plane mixes the whole (S, N, X) stack in one shot
+        # plane mixes the whole (S, N, X) stack in one shot — with a
+        # channel, every one of the S messages goes through the codec
+        ef = state.ef
         if pack_spec is not None:
-            centers = gossip_avg_stack(centers, w, backend=gossip_backend)
+            centers, ef = gossip_avg_comm(
+                centers, w, channel=channel, key=k_comm, ef=ef,
+                backend=gossip_backend,
+            )
         else:
             centers = jax.vmap(lambda c_s: gossip_avg(c_s, w))(centers)
-        return FedEMState(centers=centers, u=u), {"u": u}
+        return FedEMState(centers=centers, u=u, ef=ef), {"u": u}
 
     return step
 

@@ -31,6 +31,8 @@ class FedSoftState(NamedTuple):
     centers: any       # leaves (S, N, ...) — each client's center estimates
     y: any             # leaves (N, ...)    — client local models
     u: jnp.ndarray     # (N, S)
+    ef: any = None     # (N, X) error-feedback residual on the transmitted
+    #                    client models y (comm/codecs); None unless EF is on
 
 
 def init_state(key, model_init, n_clients: int, s_clusters: int,
@@ -57,13 +59,18 @@ def make_step(
     s_clusters: int,
     prox_lambda: float = 0.1,
     pack_spec: PackSpec | None = None,
+    channel=None,
 ):
+    if channel is not None and pack_spec is None:
+        raise ValueError("comm compression requires the packed plane")
     w = jnp.asarray(w)
     # flat view of the per-example loss for the importance forward; local
     # SGD takes the pytree loss + pack_spec (packing.flat_grad)
     _, per_example_loss = plane_losses(pack_spec, None, per_example_loss)
 
     def step(state: FedSoftState, data, key, lr):
+        if channel is not None:
+            key, k_comm = jax.random.split(key)
         centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
 
         # importance estimation: per-point min-loss counts (FedSoft Eq. 4)
@@ -92,6 +99,14 @@ def make_step(
             extra_grad=prox_grad, pack_spec=pack_spec,
         )
 
+        # what crosses the wire is the client model y_i; the receivers'
+        # center aggregation then runs on the decoded values while each
+        # client keeps its own y exact
+        ef = state.ef
+        y_tx = y
+        if channel is not None:
+            y_tx, ef = channel.roundtrip(y, k_comm, ef)
+
         # importance-weighted center aggregation over the neighborhood
         def agg_leaf(y_l):
             # c_s[i] = Σ_j W_ij u_js y_j / Σ_j W_ij u_js
@@ -104,8 +119,8 @@ def make_step(
                 out.append(jnp.einsum("ij,j...->i...", wu, y32))
             return jnp.stack(out, axis=0).astype(y_l.dtype)
 
-        centers = jax.tree.map(agg_leaf, y)
-        return FedSoftState(centers=centers, y=y, u=u), {"u": u}
+        centers = jax.tree.map(agg_leaf, y_tx)
+        return FedSoftState(centers=centers, y=y, u=u, ef=ef), {"u": u}
 
     return step
 

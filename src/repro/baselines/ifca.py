@@ -25,6 +25,7 @@ from repro.core.packing import PackSpec, maybe_unpack, pack, plane_losses
 class IFCAState(NamedTuple):
     centers: any       # leaves (S, N, ...) — or the packed (S, N, X) plane
     choice: jnp.ndarray  # (N,) hard assignment
+    ef: any = None     # (N, X) error-feedback residual (comm/codecs)
 
 
 def init_state(key, model_init, n_clients: int, s_clusters: int,
@@ -46,11 +47,17 @@ def make_step(
     tau: int,
     batch: int,
     pack_spec: PackSpec | None = None,
+    channel=None,
 ):
+    if channel is not None and pack_spec is None:
+        raise ValueError("comm compression requires the packed plane")
     # flat view of the per-example loss for the cluster-estimation forward;
     # local SGD takes the pytree loss + pack_spec (packing.flat_grad)
     _, per_example_loss = plane_losses(pack_spec, None, per_example_loss)
+
     def step(state: IFCAState, data, key, lr):
+        if channel is not None:
+            key, k_comm = jax.random.split(key)
         centers_nc = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), state.centers)
 
         # hard cluster estimation on the full local dataset
@@ -67,13 +74,18 @@ def make_step(
         c_sel = jax.tree.map(lambda l: l[choice, jnp.arange(n)], state.centers)
         c_sel = local_sgd(loss_fn, c_sel, data, key, tau, batch, lr,
                           pack_spec=pack_spec)
-        # same-choice neighborhood averaging (decentralized IFCA)
+        # same-choice neighborhood averaging (decentralized IFCA) — the
+        # transmitted chosen-model slab goes through the wire codec
+        ef = state.ef
+        if channel is not None:
+            c_sel, ef = channel.roundtrip(c_sel, k_comm, ef)
         c_mixed = mix_dense(gossip, c_sel, choice)
         centers = jax.tree.map(
             lambda l, v: l.at[choice, jnp.arange(n)].set(v.astype(l.dtype)),
             state.centers, c_mixed,
         )
-        return IFCAState(centers=centers, choice=choice), {"choice": choice}
+        return IFCAState(centers=centers, choice=choice, ef=ef), \
+            {"choice": choice}
 
     return step
 

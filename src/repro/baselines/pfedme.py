@@ -17,13 +17,14 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.baselines.common import gossip_avg
+from repro.baselines.common import gossip_avg_comm
 from repro.core.packing import PackSpec, maybe_unpack, pack, unpack
 from repro.data.pipeline import client_uniform_batches
 
 
 class PFedMeState(NamedTuple):
     w: any  # leaves (N, ...) — or the packed (N, X) plane
+    ef: any = None  # (N, X) error-feedback residual (comm/codecs)
 
 
 def init_state(key, model_init, n_clients: int,
@@ -90,11 +91,18 @@ def make_step(
     inner_lr: float = 5e-2,
     pack_spec: PackSpec | None = None,
     gossip_backend: str = "reference",
+    channel=None,
 ):
+    if channel is not None and pack_spec is None:
+        raise ValueError("comm compression requires the packed plane")
     w_mix = jnp.asarray(w_mix)
 
     def step(state: PFedMeState, data, key, lr):
         w = state.w
+        if channel is not None:
+            key, k_comm = jax.random.split(key)
+        else:
+            k_comm = None
 
         def outer(w, kk):
             theta = _inner_solve(loss_fn, w, data, kk, k_inner, batch,
@@ -110,8 +118,9 @@ def make_step(
 
         keys = jax.random.split(key, tau)
         w, _ = jax.lax.scan(outer, w, keys)
-        w = gossip_avg(w, w_mix, backend=gossip_backend)
-        return PFedMeState(w=w), {}
+        w, ef = gossip_avg_comm(w, w_mix, channel=channel, key=k_comm,
+                                ef=state.ef, backend=gossip_backend)
+        return PFedMeState(w=w, ef=ef), {}
 
     return step
 

@@ -1,0 +1,37 @@
+"""Compressed-communication subsystem: codecs, channels, wire accounting.
+
+One implementation on the packed parameter plane serves every method in
+the registry — see comm/codecs.py for the codec table and
+core/gossip.make_mix_fn(comm=...) for the execution paths.
+"""
+from repro.comm.codecs import (
+    CODECS,
+    Channel,
+    CommConfig,
+    WithEF,
+    available_codecs,
+    exchange,
+    join_ef,
+    make_channel,
+    quant_decode,
+    quant_encode,
+    split_ef,
+    topk_decode,
+    topk_encode,
+)
+
+__all__ = [
+    "CODECS",
+    "Channel",
+    "CommConfig",
+    "WithEF",
+    "available_codecs",
+    "exchange",
+    "join_ef",
+    "make_channel",
+    "split_ef",
+    "quant_decode",
+    "quant_encode",
+    "topk_decode",
+    "topk_encode",
+]

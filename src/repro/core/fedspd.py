@@ -68,7 +68,10 @@ class FedSPDState(NamedTuple):
     z: jnp.ndarray       # (N, M) per-point assignments ("full" regime)
     round: jnp.ndarray   # () int32
     key: jax.Array
-    comm_bytes: jnp.ndarray  # () float32 cumulative
+    comm_bytes: jnp.ndarray  # () float32 cumulative LOGICAL bytes
+    ef: Any = None       # (N, X) error-feedback residual (comm/codecs);
+    #                      None (an empty pytree subtree) unless the run
+    #                      uses a compressing codec with error_feedback
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,9 +210,22 @@ def make_round_step(
     pack_spec: Optional[PackSpec] = None,  # packed (S, N, X) engine
     model_bytes: Optional[int] = None,     # per-model wire bytes (hoisted)
     donate: bool = False,           # jit + donate the state in place
+    comm=None,                      # comm/codecs.CommConfig: wire codec
 ):
     """Returns step(state, data) -> (state, metrics). ``data`` leaves:
     (N, M, ...) in the "full" regime; (N, B, ...) fresh batch in "stream".
+
+    ``comm`` (comm/codecs.CommConfig) runs the exchange through a wire
+    codec: the transmitted (N, X) slab is encoded, receivers mix the
+    decoded values, and (with ``error_feedback=True``) the per-client
+    residual rides ``state.ef`` round over round. Requires the packed
+    plane for any codec other than the bit-exact ``fp32`` passthrough.
+    When ``mix_fn`` came from ``core/gossip.make_mix_fn(comm=...)`` it is
+    comm-aware (fused Pallas dequantize+mix, encoded ppermute payloads);
+    a plain ``mix_fn`` is wrapped with the reference decode∘mix∘encode.
+    ``state.comm_bytes`` keeps accounting LOGICAL bytes (original
+    dtypes); the physical wire bytes are the static per-message codec
+    ratio times that — reported by the experiment driver.
 
     With ``pack_spec`` (core/packing.py), ``state.centers`` must be the
     packed (S, N, X) plane (``packing.pack_state``) and the round runs the
@@ -231,6 +247,27 @@ def make_round_step(
         lr_schedule = lambda t: cfg.lr0 * (cfg.lr_decay ** t)  # noqa: E731
     if mix_fn is None:
         mix_fn = lambda c, sel: mix(gossip, c, sel)  # noqa: E731
+
+    channel = None
+    if comm is not None and comm.codec != "fp32":
+        from repro.comm.codecs import exchange, make_channel
+
+        if pack_spec is None:
+            raise ValueError(
+                f"comm codec {comm.codec!r} requires the packed parameter "
+                "plane (pass pack_spec; fp32 is the only pytree-safe codec)"
+            )
+        channel = make_channel(comm, pack_spec.size)
+        if not getattr(mix_fn, "comm_aware", False):
+            # a plain (custom) mix_fn gets the reference composition
+            base_mix = mix_fn
+
+            def _wrapped_comm_mix(c_sel, s, key, ef):
+                return exchange(channel, c_sel,
+                                lambda x: base_mix(x, s), key, ef)
+
+            _wrapped_comm_mix.comm_aware = True
+            mix_fn = _wrapped_comm_mix
 
     grad_fn = jax.grad(loss_fn)
     sigma = cfg.dp_clip * cfg.dp_noise_multiplier
@@ -285,26 +322,38 @@ def make_round_step(
                  if sigma > 0 else None)
         return scale, noise
 
-    def exchange_packed(plane, c_old, c_new, s, k_dp):
-        """Steps (2)+(3) on the flat plane: DP sanitize, Eq. (1) mix, and
-        the scatter back into (S, N, X) — all single-array ops. When the
-        mix backend exposes a fused clip·scale+W·C kernel (Pallas) and no
-        cosine filtering is on (the weight matrix must not depend on the
-        sanitized values), the DP round stays a single HBM pass."""
+    def _channel_mix(c_sel, s, k_comm, ef):
+        """The exchange proper: comm-aware (codec + error feedback)
+        threading when a compressing channel is on, the plain mix
+        otherwise (identical code path and key stream to before)."""
+        if channel is None:
+            return mix_fn(c_sel, s), ef
+        return mix_fn(c_sel, s, k_comm, ef)
+
+    def exchange_packed(plane, c_old, c_new, s, k_dp, k_comm, ef):
+        """Steps (2)+(3) on the flat plane: DP sanitize, wire codec,
+        Eq. (1) mix, and the scatter back into (S, N, X) — all
+        single-array ops. When the mix backend exposes a fused
+        clip·scale+W·C kernel (Pallas), no cosine filtering is on (the
+        weight matrix must not depend on the sanitized values), and no
+        codec sits between sanitize and mix, the DP round stays a single
+        HBM pass. Returns (plane, ef')."""
         if cfg.dp_clip > 0:
             scale, noise = dp_flat_parts(c_old, c_new, k_dp)
             fused = getattr(mix_fn, "fused_dp", None)
-            if fused is not None and gossip.cos_align_threshold <= -1.0:
+            if (channel is None and fused is not None
+                    and gossip.cos_align_threshold <= -1.0):
                 c_mixed = fused(c_old, c_new, scale, noise, sigma, s)
             else:
                 c_sel = c_old + scale * (c_new - c_old)
                 if noise is not None:
                     c_sel = c_sel + sigma * noise
-                c_mixed = mix_fn(c_sel, s)
+                c_mixed, ef = _channel_mix(c_sel, s, k_comm, ef)
         else:
-            c_mixed = mix_fn(c_new, s)
+            c_mixed, ef = _channel_mix(c_new, s, k_comm, ef)
         n = s.shape[0]
-        return plane.at[s, jnp.arange(n)].set(c_mixed.astype(plane.dtype))
+        plane = plane.at[s, jnp.arange(n)].set(c_mixed.astype(plane.dtype))
+        return plane, ef
 
     def local_updates(c_sel, data, z, s, key, lr):
         """τ SGD steps on the selected centers, cluster-conditional batches."""
@@ -435,10 +484,15 @@ def make_round_step(
             unpack(c_old, pack_spec), data, state.z, s, k_local, lr
         )
         c_new = pack(c_new_tree, pack_spec)
-        key, k_dp = jax.random.split(key)
+        if channel is None:
+            key, k_dp = jax.random.split(key)
+            k_comm = None
+        else:
+            key, k_dp, k_comm = jax.random.split(key, 3)
 
-        # (2)+(3) flat sanitize + mix + scatter
-        plane = exchange_packed(plane, c_old, c_new, s, k_dp)
+        # (2)+(3) flat sanitize + wire codec + mix + scatter
+        plane, ef = exchange_packed(plane, c_old, c_new, s, k_dp, k_comm,
+                                    state.ef)
 
         # (4) re-cluster: the forward pass needs model structure again
         batch_all = {"x": data["inputs"], "y": data["targets"]}
@@ -452,7 +506,7 @@ def make_round_step(
         )
         new_state = FedSPDState(
             centers=plane, u=u, z=z, round=state.round + 1, key=key,
-            comm_bytes=comm,
+            comm_bytes=comm, ef=ef,
         )
         metrics = {
             "lr": lr,
@@ -486,8 +540,13 @@ def make_round_step(
             None, s, k_local, lr,
         )
         c_new = pack(c_new_tree, pack_spec)
-        key, k_dp = jax.random.split(key)
-        plane = exchange_packed(plane, c_old, c_new, s, k_dp)
+        if channel is None:
+            key, k_dp = jax.random.split(key)
+            k_comm = None
+        else:
+            key, k_dp, k_comm = jax.random.split(key, 3)
+        plane, ef = exchange_packed(plane, c_old, c_new, s, k_dp, k_comm,
+                                    state.ef)
 
         u_batch = jax.vmap(
             lambda z_: mixture_coefficients(z_, cfg.n_clusters)
@@ -499,7 +558,7 @@ def make_round_step(
         )
         new_state = FedSPDState(
             centers=plane, u=u, z=state.z, round=state.round + 1, key=key,
-            comm_bytes=comm,
+            comm_bytes=comm, ef=ef,
         )
         metrics = {
             "lr": lr,

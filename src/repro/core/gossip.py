@@ -141,9 +141,27 @@ MIX_BACKENDS = ("reference", "pallas", "ppermute")
 
 
 def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
-                plane: bool = False, mesh=None):
+                plane: bool = False, mesh=None, comm=None):
     """Gossip backend selector: a ``mix_fn(c_sel, s)`` for FedSPD's round
     step (core/fedspd.make_round_step).
+
+    ``comm`` (comm/codecs.CommConfig) composes the compressed exchange
+    decode∘mix∘encode around every backend. ``codec="fp32"`` (or
+    ``comm=None``) keeps the uncompressed per-backend paths documented
+    below bit-exactly; any other codec requires the packed plane
+    (``plane=True``) and returns a COMM-AWARE mix — signature
+    ``mix_fn(c_sel, s, key, ef) -> (mixed, ef')`` with
+    ``mix_fn.comm_aware = True`` — so the round step can thread the rng
+    key and per-client error-feedback residual through the channel: the
+    reference backend then mixes the jnp-decoded values (the parity
+    oracle), the Pallas backend feeds the encoded payload to the fused
+    ``kernels/gossip_mix.gossip_mix_dequant`` kernel (dequantize + W·C in
+    ONE ``pallas_call`` whose HBM read side is the int8 plane; ``topk``
+    decodes outside and streams the dense mix, still one call), and the
+    ppermute backend ships the ENCODED payload over the collective edges
+    (launch/steps.py) with receivers dequantizing locally.
+
+    The uncompressed backends:
 
     - ``reference``: the pure-jnp paths above (dense einsum or edge-colored
       permute schedule, per ``spec.mode``). Polymorphic over pytree and
@@ -167,6 +185,17 @@ def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
       mesh is NOT valid, the shard_map specs divide the client axis by
       the row count). Parity with the reference path is asserted in tests.
     """
+    compressing = comm is not None and comm.codec != "fp32"
+    if compressing and not plane:
+        raise ValueError(
+            f"comm codec {comm.codec!r} operates on packed (N, X) plane "
+            "slices; build the mix with plane=True (run_method enables "
+            "param_plane automatically when comm is set)"
+        )
+    if compressing and backend != "ppermute":
+        # ppermute handles its own comm wiring below (the schedule ships
+        # the encoded payload); reference/pallas get dedicated comm mixes
+        return _make_comm_mix_fn(spec, backend, comm=comm)
     if backend in ("reference", None):
         return lambda c_sel, s: mix(spec, c_sel, s)
     if backend == "pallas":
@@ -225,8 +254,62 @@ def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
                 np.asarray(devices[:n]).reshape(n, 1), ("data", "model")
             )
         return make_ppermute_gossip_mix(
-            spec, mesh, replicate_model_dims=True
+            spec, mesh, replicate_model_dims=True, comm=comm
         )
+    raise ValueError(
+        f"unknown gossip backend {backend!r}; expected one of {MIX_BACKENDS}"
+    )
+
+
+def _make_comm_mix_fn(spec: GossipSpec, backend: str, *, comm):
+    """The compressed-exchange variants of the reference and Pallas
+    backends (see ``make_mix_fn``; ppermute wires its own comm inside
+    launch/steps.make_ppermute_gossip_mix). Returned fns carry
+    ``comm_aware = True`` and the ``(c_sel, s, key, ef) -> (mixed, ef')``
+    signature; the channel is bound lazily to the plane width at trace
+    time (same static metadata wherever it is built —
+    comm/codecs.Channel is pure)."""
+    from repro.comm.codecs import make_channel
+
+    needs_hat = spec.cos_align_threshold > -1.0
+
+    if backend in ("reference", None):
+        def mix_comm(c_sel, s, key, ef):
+            ch = make_channel(comm, c_sel.shape[-1])
+            x_hat, ef = ch.roundtrip(c_sel, key, ef)
+            return mix(spec, x_hat, s).astype(c_sel.dtype), ef
+
+        mix_comm.comm_aware = True
+        return mix_comm
+
+    if backend == "pallas":
+        from repro.kernels.gossip_mix import (
+            gossip_mix_encoded,
+            gossip_mix_flat,
+        )
+
+        interpret = jax.default_backend() != "tpu"
+
+        def mix_comm(c_sel, s, key, ef):
+            x = c_sel.shape[-1]
+            ch = make_channel(comm, x)
+            if ch.fused:
+                enc, x_hat, ef = ch.encode_stream(c_sel, key, ef,
+                                                  need_hat=needs_hat)
+                w = fedspd_weight_matrix(spec, s,
+                                         x_hat if needs_hat else None)
+                return gossip_mix_encoded(
+                    w, enc, qblock=comm.block, x_out=x,
+                    out_dtype=c_sel.dtype, interpret=interpret,
+                ), ef
+            x_hat, ef = ch.roundtrip(c_sel, key, ef)
+            w = fedspd_weight_matrix(spec, s, x_hat if needs_hat else None)
+            mixed = gossip_mix_flat(w, x_hat, interpret=interpret)
+            return mixed.astype(c_sel.dtype), ef
+
+        mix_comm.comm_aware = True
+        return mix_comm
+
     raise ValueError(
         f"unknown gossip backend {backend!r}; expected one of {MIX_BACKENDS}"
     )

@@ -1,6 +1,7 @@
 # Experiment layer: method registry + shared driver. Algorithms register a
 # Method adapter (registry.py); the driver (runner.py) owns the round loop,
 # eval cadence, curve/comm accounting, and multi-seed batching.
+from repro.comm.codecs import CommConfig  # noqa: F401  (run_method(comm=...))
 from repro.experiments.registry import (  # noqa: F401
     CommModel,
     ExperimentContext,

@@ -30,6 +30,13 @@ Per-run ``options`` honoured across methods:
                     shard_map edge-colored collective schedule, one device
                     per client). Baselines route their static-matrix
                     average through kernels/gossip_mix on "pallas".
+    comm            comm/codecs.CommConfig: the wire codec for every
+                    exchange ("fp32" passthrough | "int8"/"int4"
+                    stochastic per-block quantization | "topk"
+                    sparsification, plus error_feedback). Compressing
+                    codecs run on the packed plane (the driver enables
+                    param_plane automatically); RunResult reports both
+                    logical and physical wire bytes.
 FedSPD additionally honours:
     mode            gossip wiring: "dense" | "permute"
     dp_clip, dp_noise_multiplier, tau_final, cos_align_threshold
@@ -44,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.baselines import fedavg, fedem, fedsoft, ifca, local, pfedme
 from repro.baselines.common import mixing_matrix, per_client_eval
+from repro.comm.codecs import join_ef, make_channel
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.core import (
     FedSPDConfig,
@@ -187,6 +195,40 @@ class Method:
             ctx.options["_pack_spec"] = spec
         return spec
 
+    def _channel(self, ctx: ExperimentContext):
+        """The run's comm channel (comm/codecs) when a compressing codec
+        is configured, else None. ``codec="fp32"`` maps to None so the
+        uncompressed code paths stay bit-exact. Compression operates on
+        packed plane slices, so it requires ``param_plane=True`` (the
+        driver enables it automatically when ``comm`` is set)."""
+        cfg = ctx.opt("comm")
+        if cfg is None or cfg.codec == "fp32":
+            return None
+        ps = self._pack_spec(ctx)
+        if ps is None:
+            raise ValueError(
+                f"comm codec {cfg.codec!r} operates on the packed "
+                "parameter plane; run with param_plane=True (run_method "
+                "enables it automatically when comm is set)"
+            )
+        ch = ctx.options.get("_channel")
+        if ch is None:
+            ch = make_channel(cfg, ps.size)
+            ctx.options["_channel"] = ch
+        return ch
+
+    def _with_ef(self, ctx: ExperimentContext, state, prefix=None):
+        """Attach the error-feedback residual to a NamedTuple state's
+        ``ef`` field when the run's channel carries one (no-op otherwise).
+        ``prefix`` is the residual's batch shape — default one message per
+        client; FedEM passes (S, N) for its all-stacks exchange."""
+        ch = self._channel(ctx)
+        if ch is None or not ch.has_ef:
+            return state
+        return state._replace(
+            ef=ch.init_residual(prefix or (ctx.n_clients,))
+        )
+
     def init(self, ctx: ExperimentContext, key: jax.Array):
         raise NotImplementedError
 
@@ -281,18 +323,21 @@ class FedSPDMethod(Method):
         ps = self._pack_spec(ctx)
         # pytree -> packed plane at the API boundary (models re-enter
         # pytree form only for eval/checkpoint)
-        return pack_state(state, ps) if ps is not None else state
+        if ps is not None:
+            state = self._with_ef(ctx, pack_state(state, ps))
+        return state
 
     def make_step(self, ctx):
         spec = self._spec(ctx)
         ps = self._pack_spec(ctx)
+        comm = ctx.opt("comm")
         mix_fn = make_mix_fn(
             spec, backend=ctx.opt("gossip_backend", "reference"),
-            plane=ps is not None,
+            plane=ps is not None, comm=comm,
         )
         step = make_round_step(ctx.loss_fn, ctx.pel_fn, spec, self._fcfg(ctx),
                                mix_fn=mix_fn, pack_spec=ps,
-                               model_bytes=ctx.model_bytes)
+                               model_bytes=ctx.model_bytes, comm=comm)
 
         def wrapped(state, train, key, lr):
             # FedSPD's round step carries its own key and lr schedule in
@@ -336,19 +381,26 @@ class FedAvgMethod(Method):
             jax.random.split(key, ctx.n_clients)
         )
         ps = self._pack_spec(ctx)
-        return pack(params, ps) if ps is not None else params
+        if ps is None:
+            return params
+        ch = self._channel(ctx)
+        ef = (ch.init_residual((ctx.n_clients,))
+              if ch is not None and ch.has_ef else None)
+        return join_ef(pack(params, ps), ef, ch)
 
     def make_step(self, ctx):
         return fedavg.make_step(
             ctx.loss_fn, self.mixing(ctx), tau=ctx.exp.tau,
             batch=ctx.exp.batch, pack_spec=self._pack_spec(ctx),
             gossip_backend=ctx.opt("gossip_backend", "reference"),
+            channel=self._channel(ctx),
         )
 
     def personalize(self, ctx, state, key):
         del key
         return fedavg.personalized_params(state,
-                                          pack_spec=self._pack_spec(ctx))
+                                          pack_spec=self._pack_spec(ctx),
+                                          channel=self._channel(ctx))
 
     def comm_model(self, ctx):
         per_round = (star_bytes(ctx.n_clients, ctx.model_bytes)
@@ -394,9 +446,12 @@ class FedEMMethod(Method):
         self.centralized = centralized
 
     def init(self, ctx, key):
-        return fedem.init_state(key, ctx.model_init, ctx.n_clients,
-                                ctx.n_clusters,
-                                pack_spec=self._pack_spec(ctx))
+        state = fedem.init_state(key, ctx.model_init, ctx.n_clients,
+                                 ctx.n_clusters,
+                                 pack_spec=self._pack_spec(ctx))
+        # FedEM ships every one of the S stacks each round
+        return self._with_ef(ctx, state,
+                             prefix=(ctx.n_clusters, ctx.n_clients))
 
     def make_step(self, ctx):
         return fedem.make_step(
@@ -404,6 +459,7 @@ class FedEMMethod(Method):
             batch=ctx.exp.batch, s_clusters=ctx.n_clusters,
             pack_spec=self._pack_spec(ctx),
             gossip_backend=ctx.opt("gossip_backend", "reference"),
+            channel=self._channel(ctx),
         )
 
     def personalize(self, ctx, state, key):
@@ -446,16 +502,18 @@ class IFCAMethod(Method):
         self.centralized = centralized
 
     def init(self, ctx, key):
-        return ifca.init_state(key, ctx.model_init, ctx.n_clients,
-                               ctx.n_clusters,
-                               pack_spec=self._pack_spec(ctx))
+        state = ifca.init_state(key, ctx.model_init, ctx.n_clients,
+                                ctx.n_clusters,
+                                pack_spec=self._pack_spec(ctx))
+        return self._with_ef(ctx, state)
 
     def make_step(self, ctx):
         g_eff = ctx.graph if not self.centralized else complete(ctx.n_clients)
         spec = GossipSpec.from_graph(g_eff, mode="dense")
         return ifca.make_step(ctx.loss_fn, ctx.pel_fn, spec,
                               tau=ctx.exp.tau, batch=ctx.exp.batch,
-                              pack_spec=self._pack_spec(ctx))
+                              pack_spec=self._pack_spec(ctx),
+                              channel=self._channel(ctx))
 
     def personalize(self, ctx, state, key):
         del key
@@ -482,15 +540,17 @@ class FedSoftMethod(Method):
         self.centralized = centralized
 
     def init(self, ctx, key):
-        return fedsoft.init_state(key, ctx.model_init, ctx.n_clients,
-                                  ctx.n_clusters,
-                                  pack_spec=self._pack_spec(ctx))
+        state = fedsoft.init_state(key, ctx.model_init, ctx.n_clients,
+                                   ctx.n_clusters,
+                                   pack_spec=self._pack_spec(ctx))
+        return self._with_ef(ctx, state)
 
     def make_step(self, ctx):
         return fedsoft.make_step(
             ctx.loss_fn, ctx.pel_fn, self.mixing(ctx), tau=ctx.exp.tau,
             batch=ctx.exp.batch, s_clusters=ctx.n_clusters,
             pack_spec=self._pack_spec(ctx),
+            channel=self._channel(ctx),
         )
 
     def personalize(self, ctx, state, key):
@@ -518,15 +578,17 @@ class PFedMeMethod(Method):
         self.centralized = centralized
 
     def init(self, ctx, key):
-        return pfedme.init_state(key, n_clients=ctx.n_clients,
-                                 model_init=ctx.model_init,
-                                 pack_spec=self._pack_spec(ctx))
+        state = pfedme.init_state(key, n_clients=ctx.n_clients,
+                                  model_init=ctx.model_init,
+                                  pack_spec=self._pack_spec(ctx))
+        return self._with_ef(ctx, state)
 
     def make_step(self, ctx):
         return pfedme.make_step(
             ctx.loss_fn, self.mixing(ctx), tau=ctx.exp.tau,
             batch=ctx.exp.batch, pack_spec=self._pack_spec(ctx),
             gossip_backend=ctx.opt("gossip_backend", "reference"),
+            channel=self._channel(ctx),
         )
 
     def personalize(self, ctx, state, key):

@@ -40,7 +40,10 @@ class RunResult:
     acc_per_client: np.ndarray  # (N,)
     mean_acc: float
     std_acc: float
-    comm_bytes: float
+    comm_bytes: float   # LOGICAL bytes: what the uncompressed exchange
+    #                     would have moved (original dtypes)
+    wire_bytes: float   # PHYSICAL bytes under the run's comm codec —
+    #                     equals comm_bytes when no compression is on
     curve: list  # [(round, mean train acc)]
     wall_s: float
     extras: dict
@@ -61,6 +64,39 @@ def _check_param_plane(m: Method, options: dict) -> None:
             "parameter plane (core/packing.py); drop param_plane or port "
             "the adapter and set supports_param_plane"
         )
+
+
+def _normalize_comm(options: dict) -> None:
+    """A compressing codec operates on packed plane slices, so ``comm``
+    implies ``param_plane=True`` — enabled here unless the caller
+    explicitly pinned the pytree engine (then fail loudly: silently
+    flipping the representation would misattribute benchmark results)."""
+    comm = options.get("comm")
+    if comm is None or comm.codec == "fp32":
+        return
+    if options.get("param_plane") is False:
+        raise ValueError(
+            f"comm codec {comm.codec!r} requires the packed parameter "
+            "plane, but param_plane=False was requested — drop one of the "
+            "two (fp32 is the only pytree-safe codec)"
+        )
+    options.setdefault("param_plane", True)
+
+
+def _wire_bytes(ctx: ExperimentContext, logical: float) -> float:
+    """Physical bytes for this run's codec: the per-message compression
+    ratio is static (comm/codecs.Channel.wire_model_bytes over the
+    logical model bytes), so scaling the logical count is EXACT — every
+    transmitted message is one model-sized plane slice."""
+    cfg = ctx.opt("comm")
+    if cfg is None or cfg.codec == "fp32":
+        return logical
+    ch = ctx.options.get("_channel")
+    if ch is None:
+        from repro.comm.codecs import make_channel
+
+        ch = make_channel(cfg, ctx.options["_pack_spec"].size)
+    return logical * ch.wire_ratio(ctx.model_bytes)
 
 
 def _donate_argnums(options: dict) -> tuple:
@@ -89,6 +125,7 @@ def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
         mean_acc=float(acc.mean()),
         std_acc=float(acc.std()),
         comm_bytes=comm,
+        wire_bytes=_wire_bytes(ctx, comm),
         curve=curve,
         wall_s=time.time() - t0,
         extras=extras,
@@ -105,17 +142,21 @@ def run_method(
     gossip_mode: str | None = None,
     gossip_backend: str | None = None,
     param_plane: bool | None = None,
+    comm=None,
     options: dict | None = None,
 ) -> RunResult:
     """Run one method for ``exp.rounds`` rounds; returns RunResult.
 
-    ``gossip_mode`` (FedSPD) / ``gossip_backend`` / ``param_plane`` are
-    conveniences forwarded into ``options`` ("dense"/"permute" wiring;
-    "reference"/"pallas"/"ppermute" execution; packed (S, N, X) plane vs
-    pytree state — valid for EVERY method id, ValueError for adapters that
-    have not opted in).  Arbitrary per-method knobs go through ``options``;
-    ``options={"donate": False}`` disables the default in-place state
-    donation of the jitted round step.
+    ``gossip_mode`` (FedSPD) / ``gossip_backend`` / ``param_plane`` /
+    ``comm`` are conveniences forwarded into ``options``
+    ("dense"/"permute" wiring; "reference"/"pallas"/"ppermute" execution;
+    packed (S, N, X) plane vs pytree state — valid for EVERY method id,
+    ValueError for adapters that have not opted in; comm/codecs.CommConfig
+    wire codec — valid for every method id, implies ``param_plane=True``
+    for compressing codecs, and reported as ``RunResult.wire_bytes``
+    alongside the logical ``comm_bytes``).  Arbitrary per-method knobs go
+    through ``options``; ``options={"donate": False}`` disables the
+    default in-place state donation of the jitted round step.
     """
     t0 = time.time()
     m = get_method(method)
@@ -126,6 +167,9 @@ def run_method(
         options.setdefault("gossip_backend", gossip_backend)
     if param_plane is not None:
         options.setdefault("param_plane", param_plane)
+    if comm is not None:
+        options.setdefault("comm", comm)
+    _normalize_comm(options)
     _check_param_plane(m, options)
     ctx = build_context(data, exp, graph=graph, seed=seed, options=options)
 
@@ -170,6 +214,7 @@ def run_method_batch(
     t0 = time.time()
     m = get_method(method)
     options = dict(options or {})
+    _normalize_comm(options)
     _check_param_plane(m, options)
     ctx = build_context(data, exp, graph=graph, seed=int(seeds[0]),
                         options=options)

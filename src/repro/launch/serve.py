@@ -27,21 +27,33 @@ from repro.models.registry import build_model
 def generate(bundle, params, prompt_tokens, *, gen_len: int, max_len: int,
              frames=None, temperature: float = 0.0, key=None):
     """Prefill + greedy/temperature decode. Returns (B, gen_len) tokens."""
+    # the audio family's prefill does NOT consume the prompt
+    # (encdec_prefill_cross only fills cross-attention K/V, pos stays 0):
+    # fail loudly before paying the prefill compile instead of decoding
+    # against an empty self-attention cache (the old dynamic pos check
+    # made this path die later with an undefined `logits`)
+    if frames is not None:
+        raise NotImplementedError(
+            "audio serving needs a decoder prefill over the prompt tokens "
+            "(encdec_prefill_cross only fills the cross-attention cache); "
+            "use launch/dryrun.py's serve shapes for audio"
+        )
     cfg = bundle.cfg
     b, lp = prompt_tokens.shape
     cache = bundle.init_cache(b, max_len)
-    batch = {"tokens": prompt_tokens}
-    if frames is not None:
-        batch["frames"] = frames
-    cache = jax.jit(bundle.prefill)(params, batch, cache)
+    cache = jax.jit(bundle.prefill)(params, {"tokens": prompt_tokens}, cache)
 
-    # first generated token comes from the last prompt logits: run one
-    # decode step on the final prompt token if the prefill didn't emit logits
+    # first generated token comes from the last prompt logits: the LM
+    # bundles' prefill consumes the full prompt WITHOUT emitting logits
+    # (pos lands at lp by construction — a static property of the model
+    # bundles, not runtime data), so the first token always comes from
+    # re-scoring the last prompt token. Reading the device value back with
+    # `int(cache["pos"])` here blocked the host on the entire prefill
+    # before the first decode step could even be enqueued — a per-request
+    # sync in the generate setup; set the decode position statically.
     step = jax.jit(bundle.decode_step)
-    if int(cache["pos"]) == lp:
-        # re-score last prompt token to get next-token logits
-        cache["pos"] = jnp.asarray(lp - 1, jnp.int32)
-        logits, cache = step(params, cache, prompt_tokens[:, -1:])
+    cache["pos"] = jnp.asarray(lp - 1, jnp.int32)
+    logits, cache = step(params, cache, prompt_tokens[:, -1:])
     out = []
     tok = None
     if key is None:

@@ -123,7 +123,9 @@ def plane_state_pspecs(state, mesh: Mesh):
     ppermute gossip schedule — and the flat X axis stays replicated
     (sharding it over "model" would cut across the PackSpec's static leaf
     offsets; tensor-parallel model dims live INSIDE the per-client forward,
-    not on the plane). u and z shard their client axis."""
+    not on the plane). u and z shard their client axis, and so does the
+    (N, X) error-feedback residual when a compressing codec carries one
+    (``state.ef`` is None otherwise — an empty subtree with no spec)."""
     dp = dp_axes(mesh)
     return type(state)(
         centers=P(None, dp, None),
@@ -132,6 +134,7 @@ def plane_state_pspecs(state, mesh: Mesh):
         round=P(),
         key=P(),
         comm_bytes=P(),
+        ef=None if state.ef is None else P(dp, None),
     )
 
 

@@ -46,6 +46,7 @@ def make_fedspd_train_step(
     pack_spec=None,
     mesh=None,
     donate: bool = False,
+    comm=None,
 ):
     """One FedSPD round over (N_clients, per_client_batch, ...) batches.
 
@@ -60,7 +61,9 @@ def make_fedspd_train_step(
     state with ``sharding.shard_plane_state`` and GSPMD keeps it there.
     ``donate=True`` jits the step with the state donated, so the plane is
     updated in place round over round (no per-round copy of the largest
-    buffer in the program)."""
+    buffer in the program). ``comm`` (comm/codecs.CommConfig) runs the
+    exchange through a wire codec — on the mesh path the ppermute
+    schedule ships the ENCODED payload over the collective edges."""
     model_bytes = None
     if getattr(bundle, "init", None) is not None:
         from repro.utils.pytree import tree_bytes
@@ -75,11 +78,12 @@ def make_fedspd_train_step(
             )
         if mix_fn is None:
             mix_fn = make_ppermute_gossip_mix(
-                gossip, mesh, replicate_model_dims=True
+                gossip, mesh, replicate_model_dims=True, comm=comm
             )
     step = make_round_step(
         bundle.loss, bundle.per_example_loss, gossip, fcfg, mix_fn=mix_fn,
         pack_spec=pack_spec, model_bytes=model_bytes, donate=donate,
+        comm=comm,
     )
 
     def train_step(state, batch):
@@ -143,7 +147,8 @@ def supports_shape(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
 
 
 def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
-                             replicate_model_dims: bool = False):
+                             replicate_model_dims: bool = False,
+                             comm=None):
     """FedSPD's Eq. (1) as an explicit edge-colored ``lax.ppermute`` schedule
     under shard_map (§Perf H1 iter 2 found that ``jnp.take`` along the
     client axis does NOT lower to collective_permute under GSPMD — this is
@@ -157,6 +162,16 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
     are derived at trace time from the actual ``c_sel`` argument, which
     also makes the schedule polymorphic over pytree and packed-plane
     inputs.
+
+    ``comm`` (comm/codecs.CommConfig, any codec other than fp32) switches
+    the schedule to ENCODED payloads: the sender's packed (N, X) slab is
+    encoded once outside the shard_map, the per-color ``lax.ppermute``
+    moves the encoded leaves (int8 quanta + per-block scales, or top-k
+    value/index pairs — the compressed bytes are what crosses the
+    interconnect), and each receiver dequantizes locally. The receiver's
+    OWN contribution also goes through the codec, so the result equals
+    the dense comm path's W·decode(encode(C)) exactly (parity-tested).
+    The returned fn is comm-aware: ``(c_sel, s, key, ef) -> (mixed, ef')``.
     """
     import numpy as np
 
@@ -196,6 +211,44 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
 
     c_specs = build_specs(state_example) if state_example is not None else None
     axis = dp if len(dp) > 1 else dp[0]
+
+    if comm is not None and comm.codec != "fp32":
+        from repro.comm.codecs import make_channel
+
+        def mix_fn_comm(c_sel, s, key, ef):
+            ch = make_channel(comm, c_sel.shape[-1])
+            enc, _x_hat, ef = ch.encode_stream(c_sel, key, ef)
+            enc_specs = build_specs(enc)
+
+            def body(enc_loc, s_loc):
+                idx = jax.lax.axis_index(dp[-1])
+                if len(dp) > 1:
+                    idx = idx + jax.lax.axis_index(dp[0]) * mesh.shape[dp[-1]]
+                # own contribution decodes the own ENCODED message so the
+                # result matches the dense path's W·decode(encode(C))
+                acc = ch.decode(enc_loc)          # (1, X) fp32
+                cnt = jnp.ones((1,), jnp.float32)
+                for pairs, matched in colors:
+                    recv_s = jax.lax.ppermute(s_loc, axis, pairs)
+                    recv_enc = jax.tree.map(
+                        lambda l: jax.lax.ppermute(l, axis, pairs), enc_loc
+                    )
+                    m = (recv_s == s_loc) & matched[idx]
+                    mf = m.astype(jnp.float32)
+                    acc = acc + mf[:, None] * ch.decode(recv_enc)
+                    cnt = cnt + mf
+                return acc / cnt[:, None]
+
+            fn = shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(enc_specs, P(dp)),
+                out_specs=P(dp, None),
+            )
+            return fn(enc, s).astype(c_sel.dtype), ef
+
+        mix_fn_comm.comm_aware = True
+        return mix_fn_comm
 
     def mix_fn(c_sel, s):
         specs = c_specs if c_specs is not None else build_specs(c_sel)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
+from repro.comm import CommConfig, make_channel
 from repro.configs.base import ARCH_ALIASES, get_config, get_smoke_config
 from repro.core.fedspd import FedSPDConfig, init_state, personalize
 from repro.core.gossip import GossipSpec, make_mix_fn
@@ -77,6 +78,14 @@ def main(argv=None):
                     help="shard the plane's client axis over the production "
                          "mesh rows (requires the packed plane and one "
                          "client per mesh row)")
+    ap.add_argument("--codec", default="fp32",
+                    choices=["fp32", "int8", "int4", "topk"],
+                    help="wire codec for the exchange (comm/codecs); "
+                         "compressing codecs require the packed plane")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry per-client error-feedback residuals")
+    ap.add_argument("--codec-block", type=int, default=256,
+                    help="quantization-scale block width along X")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
@@ -106,6 +115,21 @@ def main(argv=None):
         )
         state = pack_state(state, pack_spec)
 
+    # wire codec: the exchange ships encoded payloads; wire_ratio scales
+    # the logical comm counter to physical bytes (static per model)
+    comm = CommConfig(codec=args.codec, block=args.codec_block,
+                      error_feedback=args.error_feedback)
+    wire_ratio = 1.0
+    channel = None
+    if args.codec != "fp32":
+        if pack_spec is None:
+            raise SystemExit("--codec requires the packed plane "
+                             "(drop --pytree)")
+        channel = make_channel(comm, pack_spec.size)
+        wire_ratio = channel.wire_ratio(pack_spec.model_bytes)
+        if channel.has_ef:
+            state = state._replace(ef=channel.init_residual((n,)))
+
     mesh = None
     mix_fn = None
     if args.mesh != "none":
@@ -123,13 +147,13 @@ def main(argv=None):
         state = shard_plane_state(state, mesh)
     else:
         mix_fn = make_mix_fn(gossip, args.gossip_backend,
-                             plane=pack_spec is not None)
+                             plane=pack_spec is not None, comm=comm)
 
     from repro.launch.steps import make_fedspd_train_step
 
     step = make_fedspd_train_step(
         bundle, gossip, fcfg, mix_fn=mix_fn, pack_spec=pack_spec,
-        mesh=mesh, donate=args.donate,
+        mesh=mesh, donate=args.donate, comm=comm,
     )
     if not args.donate:
         step = jax.jit(step)
@@ -160,8 +184,10 @@ def main(argv=None):
         state, metrics = step(state, batch)
         if r % args.eval_every == 0 or r == args.rounds - 1:
             cons = np.asarray(metrics["consensus"])
+            logical = float(metrics["comm_bytes"])
             print(f"round {r:4d}  lr={float(metrics['lr']):.4f}  "
-                  f"consensus={cons}  comm={float(metrics['comm_bytes']):.3e}B  "
+                  f"consensus={cons}  comm={logical:.3e}B  "
+                  f"wire={logical * wire_ratio:.3e}B  "
                   f"({time.time()-t0:.1f}s)")
 
     personalized = personalize(state, pack_spec)  # pytree re-entry boundary

@@ -1,4 +1,5 @@
 """Hypothesis property-based tests on system invariants."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -111,6 +112,51 @@ def test_mixture_coefficients_simplex(m, s, seed):
     u = np.asarray(mixture_coefficients(z, s))
     np.testing.assert_allclose(u.sum(), 1.0, atol=1e-5)
     assert (u > 0).all()  # floored
+
+
+@given(seed=st.integers(0, 99), x_width=st.integers(3, 300),
+       block=st.integers(1, 64), bits=st.sampled_from(["int8", "int4"]))
+@SET
+def test_quant_roundtrip_bounded_by_block_scale(seed, x_width, block, bits):
+    """decode(encode(x)) moves every coordinate by strictly less than one
+    quantization step (the block's scale), for arbitrary widths, block
+    sizes (including non-dividing, padded tails) and both bit depths."""
+    from repro.comm import CommConfig, make_channel
+
+    qmax = {"int8": 127.0, "int4": 7.0}[bits]
+    ch = make_channel(CommConfig(codec=bits, block=block), x_width)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, x_width)), jnp.float32)
+    x_hat, _ = ch.roundtrip(x, jax.random.PRNGKey(seed), None)
+    nq = -(-x_width // block)
+    xp = np.pad(np.asarray(x), [(0, 0), (0, nq * block - x_width)])
+    scale = np.abs(xp).reshape(2, nq, block).max(-1) / qmax
+    bound = np.repeat(scale, block, axis=1)[:, :x_width]
+    assert (np.abs(np.asarray(x_hat) - np.asarray(x)) <= bound + 1e-6).all()
+
+
+@given(seed=st.integers(0, 99), x_width=st.integers(4, 64),
+       k=st.integers(1, 8))
+@SET
+def test_error_feedback_residual_identity(seed, x_width, k):
+    """EF invariant for the biased top-k codec: after every channel use,
+    residual + transmitted == message (nothing is ever lost, only
+    delayed) — the property that keeps compressed gossip unbiased over
+    rounds."""
+    from repro.comm import CommConfig, make_channel
+
+    ch = make_channel(
+        CommConfig(codec="topk", k=min(k, x_width), error_feedback=True),
+        x_width,
+    )
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, x_width)), jnp.float32)
+    ef = ch.init_residual((3,))
+    for t in range(3):
+        ef_prev = ef
+        x_hat, ef = ch.roundtrip(x, jax.random.PRNGKey(t), ef)
+        np.testing.assert_allclose(np.asarray(ef + x_hat),
+                                   np.asarray(x + ef_prev), atol=1e-5)
 
 
 @given(seed=st.integers(0, 99), n=st.integers(3, 12))
