@@ -6,7 +6,9 @@ the previous run's ``bench-roundstep`` artifact as the baseline (falling
 back to the committed ``BENCH_roundstep.json`` when no artifact exists —
 first run, expired retention, forked PRs). Per-lane medians are compared;
 any lane whose median round time regresses by more than ``--threshold``
-(default 25%) fails the job. A markdown delta table — per-lane timings,
+(default 25%) fails the job. A lane present only in the NEW run (a freshly
+added benchmark, e.g. ``fedspd/dynamic_graph``) never fails the gate: its
+first timing seeds the baseline for subsequent runs. A markdown delta table — per-lane timings,
 the packed-vs-pytree speedup matrix, and the wire-byte table for the
 compressed-communication lanes (fedspd/comm_*) — is appended to
 ``$GITHUB_STEP_SUMMARY`` when set, and always printed to stdout.
@@ -52,7 +54,10 @@ def compare(base: dict, new: dict, threshold: float) -> tuple[list, list]:
     for lane in sorted(set(old_l) | set(new_l)):
         o, n = old_l.get(lane), new_l.get(lane)
         if o is None:
-            rows.append((lane, None, n, None, "new lane"))
+            # a lane missing from the baseline is NOT a failure: the first
+            # run that produces it (e.g. fedspd/dynamic_graph) seeds the
+            # trend — the uploaded artifact becomes the next run's baseline
+            rows.append((lane, None, n, None, "new lane (seeds baseline)"))
             continue
         if n is None:
             rows.append((lane, o, None, None, "removed"))

@@ -13,6 +13,9 @@ production train loop) across:
                                                exchange (comm/codecs),
                                                stable fedspd/comm_* lanes
                                                + wire-byte accounting
+  topology        static closure adjacency   vs traced per-round rewire
+                                               schedule (scenario engine,
+                                               lane fedspd/dynamic_graph)
 
 All steps are jitted with the state donated (the production loop's
 configuration). Every result row carries a stable ``lane`` id; the output
@@ -141,6 +144,58 @@ def bench_pair(model: str, regime: str, backend: str,
 
 BASELINE_METHODS = ("dfl_fedavg", "dfl_fedem")
 COMM_CODECS = ("int8", "topk")
+
+
+def bench_dynamic_graph(*, n: int, m: int, dim: int, tau: int, reps: int,
+                        seed: int = 0) -> dict:
+    """The scenario engine's traced-adjacency round step vs the static
+    closure-constant step — packed FedSPD, reference backend, strictly
+    interleaved like ``bench_pair``. The dynamic step receives a fresh
+    (N, N) slice of a rewire schedule every rep (the realistic access
+    pattern: one traced matrix per round, ONE compile for the whole
+    schedule); the paired overhead proves the traced-weight refactor does
+    not tax the hot path. Stable lane id ``fedspd/dynamic_graph`` for the
+    compare_bench trend gate (a baseline without the lane seeds it)."""
+    from repro.graphs.topology import rewire_schedule
+
+    built = {p: _build("mlp", "full", "reference", True,
+                       n=n, m=m, dim=dim, tau=tau, seed=seed)
+             for p in ("static", "dynamic")}
+    sched = rewire_schedule("er", n, 4.0, rounds=8, p_rewire=0.3, seed=seed)
+    adjs = [jnp.asarray(a) for a in sched.adjs]
+    compile_s, times, states = {}, {"static": [], "dynamic": []}, {}
+    for p, (step, state, payload, _) in built.items():
+        t0 = time.perf_counter()
+        if p == "dynamic":
+            state, _aux = step(state, payload, adjs[0])
+        else:
+            state, _aux = step(state, payload)
+        _block(state)
+        compile_s[p] = time.perf_counter() - t0
+        states[p] = state
+    for rep in range(reps):
+        for p, (step, _, payload, _) in built.items():
+            t0 = time.perf_counter()
+            if p == "dynamic":
+                states[p], _aux = step(states[p], payload,
+                                       adjs[rep % len(adjs)])
+            else:
+                states[p], _aux = step(states[p], payload)
+            _block(states[p])
+            times[p].append(time.perf_counter() - t0)
+    paired = statistics.median(
+        b / a for a, b in zip(times["static"], times["dynamic"])
+    )
+    return {
+        "lane": "fedspd/dynamic_graph",
+        "n_clients": n, "schedule_rounds": len(adjs),
+        "compile_s": round(compile_s["dynamic"], 4),
+        "round_ms": round(min(times["dynamic"]) * 1e3, 4),
+        "round_ms_median": round(
+            statistics.median(times["dynamic"]) * 1e3, 4),
+        "static_round_ms": round(min(times["static"]) * 1e3, 4),
+        "paired_overhead_vs_static": round(paired, 3),
+    }
 
 
 def bench_comm_pair(codec: str, *, n: int, m: int, dim: int, tau: int,
@@ -274,6 +329,12 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
               f"(fp32 {row['fp32_round_ms']:8.2f} ms)  wire "
               f"{row['wire_model_bytes']}/{row['logical_model_bytes']} B "
               f"= x{row['wire_ratio']}")
+    # scenario-engine lane: traced per-round adjacency vs static closure
+    dyn = bench_dynamic_graph(n=n, m=m, dim=dim, tau=tau, reps=reps)
+    results.append(dyn)
+    print(f"{dyn['lane']:>24s}  round {dyn['round_ms']:9.2f} ms   "
+          f"(static {dyn['static_round_ms']:8.2f} ms)  overhead "
+          f"x{dyn['paired_overhead_vs_static']}")
     comparisons = []
     for model in ("mlp", "conv"):
         for regime in ("full", "stream"):

@@ -1,12 +1,11 @@
 """Paper Tables 2 & 3: FedSPD vs CFL/DFL baselines — mean test accuracy.
 
 Every method resolves through the experiment registry, and repeated trials
-run through the multi-seed batched driver: one jit compile shared across
-all seeds.  NOTE — protocol change vs the pre-registry version: the dataset
-and graph are now FIXED and only the algorithm seed varies (init/batch
-variance), whereas the old loop drew a fresh dataset per seed
-(across-dataset variance).  Batching over per-seed datasets is a ROADMAP
-open item.
+run through the multi-seed batched driver with the STACKED-DATA variant:
+each seed draws its own dataset (the paper's across-dataset repeated-trials
+protocol, restored from the pre-registry version), and all per-seed runs
+still share ONE jit compile — the (k, N, M, ...) data stack is vmapped over
+the seed axis alongside the states (the ROADMAP stacked-data item, closed).
 
 Also produces the Figure 3 analogue (per-client accuracy spread) since the
 per-client vectors come for free from the same runs.
@@ -25,7 +24,8 @@ CFL = ["cfl_fedem", "cfl_ifca", "cfl_fedavg", "cfl_fedsoft", "cfl_pfedme"]
 
 def run(fast: bool = True, seeds=(0,)) -> dict:
     exp = exp_config(fast)
-    data = mixture_data(exp, seed=3)
+    # per-seed datasets: k seeds × k datasets in one compile
+    data = [mixture_data(exp, seed=3 + int(s)) for s in seeds]
     rows = []
     for method in DFL + CFL:
         results = run_method_batch(method, data, exp, seeds=seeds,

@@ -1,9 +1,11 @@
 """The paper's headline claim (Figure 4): FedSPD keeps its accuracy in
 LOW-connectivity networks where other DFL methods degrade — extended with
-the BANDWIDTH axis the compressed-communication subsystem opens: the same
+the BANDWIDTH axis the compressed-communication subsystem opens (the same
 sweep per wire codec, so each (topology, degree) cell reads as an
-accuracy-vs-wire-bytes frontier (fp32 vs int8+EF at ~25% of the bytes vs
-top-k at ~12%).
+accuracy-vs-wire-bytes frontier) and the DYNAMIC-TOPOLOGY axis the
+scenario engine opens (Appendix B.2.4: per-round rewired graphs, plus
+Bernoulli link dropout — each scheduled round's adjacency is a traced
+input, so the whole dynamic sweep still compiles once per cell).
 
 All runs use the packed parameter plane (the compressing codecs operate on
 flat (N, X) slices; ``run_method`` enables it for them automatically, and
@@ -13,8 +15,8 @@ flat (N, X) slices; ``run_method`` enables it for them automatically, and
 """
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments import CommConfig, run_method
-from repro.graphs.topology import make_graph
+from repro.experiments import CommConfig, Scenario, run_method
+from repro.graphs.topology import make_graph, rewire_schedule
 
 exp = PaperExpConfig(n_clients=12, rounds=60, tau=5, batch=16,
                      n_per_client=128, model="mlp", dim=16, n_classes=4)
@@ -47,3 +49,19 @@ for kind in ("er", "ba", "rgg"):
                 row += f" {r.mean_acc:12.3f}@{r.wire_bytes / 1e6:7.1f}"
             print(row)
         print()
+
+# dynamic-topology axis (scenario engine): the same low-connectivity sweep
+# under per-round rewiring and 20% link dropout — FedSPD's accuracy under
+# graphs that never sit still, at the wire bytes the surviving links cost
+print("dynamic topologies (rewired every round, 20% link dropout) — "
+      "fedspd acc@MB")
+for kind in ("er", "ba", "rgg"):
+    for deg in (2.5, 4.0):
+        sched = rewire_schedule(kind, exp.n_clients, deg, rounds=exp.rounds,
+                                p_rewire=0.3, seed=2)
+        sc = Scenario(graph_schedule=sched, dropout=0.2, seed=2)
+        r = run_method("fedspd", data, exp, seed=0, eval_every=10**9,
+                       param_plane=True, scenario=sc)
+        print(f"{kind:9s} {deg:5.1f} {'dynamic':>8s} "
+              f"{r.mean_acc:12.3f}@{r.wire_bytes / 1e6:7.1f}  "
+              f"(compiles: {r.extras['n_compiles']})")

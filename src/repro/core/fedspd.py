@@ -212,8 +212,22 @@ def make_round_step(
     donate: bool = False,           # jit + donate the state in place
     comm=None,                      # comm/codecs.CommConfig: wire codec
 ):
-    """Returns step(state, data) -> (state, metrics). ``data`` leaves:
-    (N, M, ...) in the "full" regime; (N, B, ...) fresh batch in "stream".
+    """Returns step(state, data, adj=None) -> (state, metrics). ``data``
+    leaves: (N, M, ...) in the "full" regime; (N, B, ...) fresh batch in
+    "stream".
+
+    ``adj`` is the scenario engine's dynamic-topology hook: THIS ROUND's
+    (N, N) adjacency as a TRACED input (time-varying rewire schedules,
+    Bernoulli link dropout, per-seed graphs under vmap) instead of the
+    gossip spec's closure constant. The weight matrix is rebuilt from it
+    each round with row renormalization over the surviving links, and the
+    comm accounting charges only active links — a dropped edge costs zero
+    wire bytes. Because the adjacency is traced, a whole (rounds, N, N)
+    schedule runs through ONE jit compile of the step. ``adj=None`` (the
+    default, and every pre-existing call site) keeps the static-graph
+    program unchanged. A plain custom ``mix_fn`` only needs to accept
+    ``adj=`` when dynamic graphs are actually used; the built-in backends
+    (core/gossip.make_mix_fn) all do.
 
     ``comm`` (comm/codecs.CommConfig) runs the exchange through a wire
     codec: the transmitted (N, X) slab is encoded, receivers mix the
@@ -246,7 +260,7 @@ def make_round_step(
     if lr_schedule is None:
         lr_schedule = lambda t: cfg.lr0 * (cfg.lr_decay ** t)  # noqa: E731
     if mix_fn is None:
-        mix_fn = lambda c, sel: mix(gossip, c, sel)  # noqa: E731
+        mix_fn = lambda c, sel, adj=None: mix(gossip, c, sel, adj=adj)  # noqa: E731
 
     channel = None
     if comm is not None and comm.codec != "fp32":
@@ -262,9 +276,10 @@ def make_round_step(
             # a plain (custom) mix_fn gets the reference composition
             base_mix = mix_fn
 
-            def _wrapped_comm_mix(c_sel, s, key, ef):
-                return exchange(channel, c_sel,
-                                lambda x: base_mix(x, s), key, ef)
+            def _wrapped_comm_mix(c_sel, s, key, ef, adj=None):
+                inner = ((lambda x: base_mix(x, s)) if adj is None
+                         else (lambda x: base_mix(x, s, adj=adj)))
+                return exchange(channel, c_sel, inner, key, ef)
 
             _wrapped_comm_mix.comm_aware = True
             mix_fn = _wrapped_comm_mix
@@ -322,15 +337,23 @@ def make_round_step(
                  if sigma > 0 else None)
         return scale, noise
 
-    def _channel_mix(c_sel, s, k_comm, ef):
+    def _plain_mix(c_sel, s, adj):
+        """Static calls keep the exact pre-scenario call shape (and so the
+        exact program); a traced adjacency is only threaded when given —
+        custom two-arg mix_fns stay valid for static graphs."""
+        return mix_fn(c_sel, s) if adj is None else mix_fn(c_sel, s, adj=adj)
+
+    def _channel_mix(c_sel, s, k_comm, ef, adj):
         """The exchange proper: comm-aware (codec + error feedback)
         threading when a compressing channel is on, the plain mix
         otherwise (identical code path and key stream to before)."""
         if channel is None:
-            return mix_fn(c_sel, s), ef
-        return mix_fn(c_sel, s, k_comm, ef)
+            return _plain_mix(c_sel, s, adj), ef
+        if adj is None:
+            return mix_fn(c_sel, s, k_comm, ef)
+        return mix_fn(c_sel, s, k_comm, ef, adj=adj)
 
-    def exchange_packed(plane, c_old, c_new, s, k_dp, k_comm, ef):
+    def exchange_packed(plane, c_old, c_new, s, k_dp, k_comm, ef, adj):
         """Steps (2)+(3) on the flat plane: DP sanitize, wire codec,
         Eq. (1) mix, and the scatter back into (S, N, X) — all
         single-array ops. When the mix backend exposes a fused
@@ -343,14 +366,17 @@ def make_round_step(
             fused = getattr(mix_fn, "fused_dp", None)
             if (channel is None and fused is not None
                     and gossip.cos_align_threshold <= -1.0):
-                c_mixed = fused(c_old, c_new, scale, noise, sigma, s)
+                c_mixed = (fused(c_old, c_new, scale, noise, sigma, s)
+                           if adj is None else
+                           fused(c_old, c_new, scale, noise, sigma, s,
+                                 adj=adj))
             else:
                 c_sel = c_old + scale * (c_new - c_old)
                 if noise is not None:
                     c_sel = c_sel + sigma * noise
-                c_mixed, ef = _channel_mix(c_sel, s, k_comm, ef)
+                c_mixed, ef = _channel_mix(c_sel, s, k_comm, ef, adj)
         else:
-            c_mixed, ef = _channel_mix(c_new, s, k_comm, ef)
+            c_mixed, ef = _channel_mix(c_new, s, k_comm, ef, adj)
         n = s.shape[0]
         plane = plane.at[s, jnp.arange(n)].set(c_mixed.astype(plane.dtype))
         return plane, ef
@@ -386,7 +412,7 @@ def make_round_step(
         (c_sel, _), _ = jax.lax.scan(one_step, (c_sel, opt_state), keys)
         return c_sel
 
-    def step_full(state: FedSPDState, data: dict):
+    def step_full(state: FedSPDState, data: dict, adj=None):
         key, k_sel, k_local = jax.random.split(state.key, 3)
         lr = lr_schedule(state.round)
 
@@ -398,7 +424,7 @@ def make_round_step(
         c_sel = dp_sanitize(c_sel, c_new, k_dp)
 
         # (2)+(3) exchange & cluster-matched averaging
-        c_mixed = mix_fn(c_sel, s)
+        c_mixed = _plain_mix(c_sel, s, adj)
         centers = _scatter_selected(state.centers, s, c_mixed)
 
         # (4) re-cluster all local data and refresh u
@@ -409,7 +435,8 @@ def make_round_step(
         )
 
         comm = state.comm_bytes + round_comm_bytes(
-            gossip, s, model_b_of(c_sel), point_to_point=cfg.point_to_point
+            gossip, s, model_b_of(c_sel), point_to_point=cfg.point_to_point,
+            adj=adj,
         )
         new_state = FedSPDState(
             centers=centers, u=u, z=z, round=state.round + 1, key=key,
@@ -423,7 +450,7 @@ def make_round_step(
         }
         return new_state, metrics
 
-    def step_stream(state: FedSPDState, batch: dict):
+    def step_stream(state: FedSPDState, batch: dict, adj=None):
         """batch leaves (N, B, ...): this round's fresh per-client data."""
         key, k_sel, k_local = jax.random.split(state.key, 3)
         lr = lr_schedule(state.round)
@@ -445,7 +472,7 @@ def make_round_step(
         )
         key, k_dp = jax.random.split(key)
         c_sel = dp_sanitize(c_sel, c_new, k_dp)
-        c_mixed = mix_fn(c_sel, s)
+        c_mixed = _plain_mix(c_sel, s, adj)
         centers = _scatter_selected(state.centers, s, c_mixed)
 
         u_batch = jax.vmap(
@@ -454,7 +481,8 @@ def make_round_step(
         u = (1 - cfg.u_ema) * state.u + cfg.u_ema * u_batch
 
         comm = state.comm_bytes + round_comm_bytes(
-            gossip, s, model_b_of(c_sel), point_to_point=cfg.point_to_point
+            gossip, s, model_b_of(c_sel), point_to_point=cfg.point_to_point,
+            adj=adj,
         )
         new_state = FedSPDState(
             centers=centers, u=u, z=state.z, round=state.round + 1, key=key,
@@ -470,7 +498,7 @@ def make_round_step(
 
     # ---------------- packed (S, N, X) parameter-plane engine -------------
 
-    def step_full_packed(state: FedSPDState, data: dict):
+    def step_full_packed(state: FedSPDState, data: dict, adj=None):
         plane = state.centers                       # (S, N, X)
         key, k_sel, k_local = jax.random.split(state.key, 3)
         lr = lr_schedule(state.round)
@@ -492,7 +520,7 @@ def make_round_step(
 
         # (2)+(3) flat sanitize + wire codec + mix + scatter
         plane, ef = exchange_packed(plane, c_old, c_new, s, k_dp, k_comm,
-                                    state.ef)
+                                    state.ef, adj)
 
         # (4) re-cluster: the forward pass needs model structure again
         batch_all = {"x": data["inputs"], "y": data["targets"]}
@@ -502,7 +530,8 @@ def make_round_step(
         )
 
         comm = state.comm_bytes + round_comm_bytes(
-            gossip, s, model_b_of(None), point_to_point=cfg.point_to_point
+            gossip, s, model_b_of(None), point_to_point=cfg.point_to_point,
+            adj=adj,
         )
         new_state = FedSPDState(
             centers=plane, u=u, z=z, round=state.round + 1, key=key,
@@ -516,7 +545,7 @@ def make_round_step(
         }
         return new_state, metrics
 
-    def step_stream_packed(state: FedSPDState, batch: dict):
+    def step_stream_packed(state: FedSPDState, batch: dict, adj=None):
         plane = state.centers                       # (S, N, X)
         key, k_sel, k_local = jax.random.split(state.key, 3)
         lr = lr_schedule(state.round)
@@ -546,7 +575,7 @@ def make_round_step(
         else:
             key, k_dp, k_comm = jax.random.split(key, 3)
         plane, ef = exchange_packed(plane, c_old, c_new, s, k_dp, k_comm,
-                                    state.ef)
+                                    state.ef, adj)
 
         u_batch = jax.vmap(
             lambda z_: mixture_coefficients(z_, cfg.n_clusters)
@@ -554,7 +583,8 @@ def make_round_step(
         u = (1 - cfg.u_ema) * state.u + cfg.u_ema * u_batch
 
         comm = state.comm_bytes + round_comm_bytes(
-            gossip, s, model_b_of(None), point_to_point=cfg.point_to_point
+            gossip, s, model_b_of(None), point_to_point=cfg.point_to_point,
+            adj=adj,
         )
         new_state = FedSPDState(
             centers=plane, u=u, z=state.z, round=state.round + 1, key=key,

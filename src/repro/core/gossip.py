@@ -62,15 +62,22 @@ def _pairwise_cos(c_sel: PyTree) -> jnp.ndarray:
 
 
 def fedspd_weight_matrix(
-    spec: GossipSpec, s: jnp.ndarray, c_sel: Optional[PyTree] = None
+    spec: GossipSpec, s: jnp.ndarray, c_sel: Optional[PyTree] = None,
+    adj: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Row-stochastic W^t rows for the *selected* clusters.
 
     W[i, j] > 0 iff j in N[i] (closed) and s_j == s_i (and, if alignment is
     on, cos(c_j, c_i) ≥ threshold). Diagonal always included (Eq. (1) is a
     closed-neighborhood average).
+
+    ``adj`` overrides the spec's static adjacency with THIS ROUND's traced
+    (N, N) matrix (dynamic rewiring / Bernoulli link dropout — the scenario
+    engine). Rows are renormalized over the surviving links, so a dropped
+    edge simply vanishes from the average; ``adj=None`` reproduces the
+    static-graph program bit for bit.
     """
-    adj = jnp.asarray(spec.adj)
+    adj = jnp.asarray(spec.adj) if adj is None else adj.astype(jnp.float32)
     match = (s[None, :] == s[:, None]).astype(jnp.float32)
     w = adj * match
     if spec.cos_align_threshold > -1.0 and c_sel is not None:
@@ -80,9 +87,10 @@ def fedspd_weight_matrix(
     return w / jnp.sum(w, axis=1, keepdims=True)
 
 
-def mix_dense(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray) -> PyTree:
+def mix_dense(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray,
+              adj: Optional[jnp.ndarray] = None) -> PyTree:
     """Paper-faithful C <- W C over the client axis."""
-    w = fedspd_weight_matrix(spec, s, c_sel)
+    w = fedspd_weight_matrix(spec, s, c_sel, adj=adj)
 
     def mix_leaf(leaf):
         return jnp.einsum(
@@ -92,11 +100,17 @@ def mix_dense(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray) -> PyTree:
     return jax.tree.map(mix_leaf, c_sel)
 
 
-def mix_permute(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray) -> PyTree:
+def mix_permute(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray,
+                adj: Optional[jnp.ndarray] = None) -> PyTree:
     """Edge-colored accumulate: one partner swap per color class.
 
     Single-host simulation uses take(); the launch layer swaps takes for
     jax.lax.ppermute when the client axis is mesh-sharded (same math).
+
+    ``adj`` (traced per-round adjacency) must be a SUBGRAPH of the spec's
+    static adjacency — the color schedule is built host-side from the
+    union graph, and each round's traced matrix only masks edges off
+    (dropout / the inactive edges of a rewire schedule).
     """
     n = s.shape[0]
     cos = None
@@ -110,6 +124,8 @@ def mix_permute(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray) -> PyTree:
         p = jnp.asarray(perm)
         partner_s = jnp.take(s, p)
         match = (partner_s == s) & (p != idx)
+        if adj is not None:
+            match &= adj[idx, p] > 0
         if cos is not None:
             match &= cos[idx, p] >= spec.cos_align_threshold
         mf = match.astype(jnp.float32)
@@ -129,11 +145,12 @@ def mix_permute(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray) -> PyTree:
     return jax.tree.map(norm, acc, c_sel)
 
 
-def mix(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray) -> PyTree:
+def mix(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray,
+        adj: Optional[jnp.ndarray] = None) -> PyTree:
     if spec.mode == "dense":
-        return mix_dense(spec, c_sel, s)
+        return mix_dense(spec, c_sel, s, adj=adj)
     if spec.mode == "permute":
-        return mix_permute(spec, c_sel, s)
+        return mix_permute(spec, c_sel, s, adj=adj)
     raise ValueError(f"unknown gossip mode {spec.mode!r}")
 
 
@@ -144,6 +161,14 @@ def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
                 plane: bool = False, mesh=None, comm=None):
     """Gossip backend selector: a ``mix_fn(c_sel, s)`` for FedSPD's round
     step (core/fedspd.make_round_step).
+
+    Every returned mix (all three backends, comm-aware or not) additionally
+    accepts ``adj=``: THIS ROUND's traced (N, N) adjacency, overriding the
+    spec's static matrix — the scenario engine's dynamic-topology hook
+    (experiments/scenarios.py). Dense/Pallas backends accept arbitrary
+    adjacencies; permute/ppermute wiring requires a subgraph of the static
+    union (the edge-color schedule is host-side), with the traced matrix
+    masking inactive edges.
 
     ``comm`` (comm/codecs.CommConfig) composes the compressed exchange
     decode∘mix∘encode around every backend. ``codec="fp32"`` (or
@@ -197,7 +222,7 @@ def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
         # the encoded payload); reference/pallas get dedicated comm mixes
         return _make_comm_mix_fn(spec, backend, comm=comm)
     if backend in ("reference", None):
-        return lambda c_sel, s: mix(spec, c_sel, s)
+        return lambda c_sel, s, adj=None: mix(spec, c_sel, s, adj=adj)
     if backend == "pallas":
         from repro.kernels.gossip_mix import (
             gossip_mix_flat,
@@ -208,16 +233,16 @@ def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
         interpret = jax.default_backend() != "tpu"
 
         if plane:
-            def mix_pallas(c_sel, s):
-                w = fedspd_weight_matrix(spec, s, c_sel)
+            def mix_pallas(c_sel, s, adj=None):
+                w = fedspd_weight_matrix(spec, s, c_sel, adj=adj)
                 return gossip_mix_flat(
                     w, c_sel, interpret=interpret
                 ).astype(c_sel.dtype)
 
-            def fused_dp(c_old, c_new, scale, noise, sigma, s):
+            def fused_dp(c_old, c_new, scale, noise, sigma, s, adj=None):
                 # weight matrix from selections only — cos alignment would
                 # need the sanitized values this kernel is about to build
-                w = fedspd_weight_matrix(spec, s, None)
+                w = fedspd_weight_matrix(spec, s, None, adj=adj)
                 return gossip_mix_fused_dp(
                     w, c_old, c_new, scale, noise, sigma,
                     interpret=interpret,
@@ -227,8 +252,8 @@ def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
                 mix_pallas.fused_dp = fused_dp
             return mix_pallas
 
-        def mix_pallas(c_sel, s):
-            w = fedspd_weight_matrix(spec, s, c_sel)
+        def mix_pallas(c_sel, s, adj=None):
+            w = fedspd_weight_matrix(spec, s, c_sel, adj=adj)
             return gossip_mix_tree(w, c_sel, interpret=interpret)
 
         return mix_pallas
@@ -274,10 +299,10 @@ def _make_comm_mix_fn(spec: GossipSpec, backend: str, *, comm):
     needs_hat = spec.cos_align_threshold > -1.0
 
     if backend in ("reference", None):
-        def mix_comm(c_sel, s, key, ef):
+        def mix_comm(c_sel, s, key, ef, adj=None):
             ch = make_channel(comm, c_sel.shape[-1])
             x_hat, ef = ch.roundtrip(c_sel, key, ef)
-            return mix(spec, x_hat, s).astype(c_sel.dtype), ef
+            return mix(spec, x_hat, s, adj=adj).astype(c_sel.dtype), ef
 
         mix_comm.comm_aware = True
         return mix_comm
@@ -290,20 +315,22 @@ def _make_comm_mix_fn(spec: GossipSpec, backend: str, *, comm):
 
         interpret = jax.default_backend() != "tpu"
 
-        def mix_comm(c_sel, s, key, ef):
+        def mix_comm(c_sel, s, key, ef, adj=None):
             x = c_sel.shape[-1]
             ch = make_channel(comm, x)
             if ch.fused:
                 enc, x_hat, ef = ch.encode_stream(c_sel, key, ef,
                                                   need_hat=needs_hat)
                 w = fedspd_weight_matrix(spec, s,
-                                         x_hat if needs_hat else None)
+                                         x_hat if needs_hat else None,
+                                         adj=adj)
                 return gossip_mix_encoded(
                     w, enc, qblock=comm.block, x_out=x,
                     out_dtype=c_sel.dtype, interpret=interpret,
                 ), ef
             x_hat, ef = ch.roundtrip(c_sel, key, ef)
-            w = fedspd_weight_matrix(spec, s, x_hat if needs_hat else None)
+            w = fedspd_weight_matrix(spec, s, x_hat if needs_hat else None,
+                                     adj=adj)
             mixed = gossip_mix_flat(w, x_hat, interpret=interpret)
             return mixed.astype(c_sel.dtype), ef
 
@@ -323,6 +350,7 @@ def _make_comm_mix_fn(spec: GossipSpec, backend: str, *, comm):
 def round_comm_bytes(
     spec: GossipSpec, s: jnp.ndarray, model_bytes: int, *,
     point_to_point: bool = True, models_per_client: int = 1,
+    adj: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Bytes transmitted this round across all clients.
 
@@ -330,8 +358,13 @@ def round_comm_bytes(
     neighbor-link regardless of match (FedAvg/FedSoft semantics; FedEM has
     models_per_client=S). point_to_point FedSPD: a client sends its model
     only to neighbors that selected the same cluster (paper §6.3).
+
+    ``adj`` (traced per-round adjacency — the scenario engine) replaces the
+    static topology in the link count, so a dropped or rewired-away edge
+    costs exactly zero wire bytes this round.
     """
-    adj = jnp.asarray(spec.adj) - jnp.eye(spec.adj.shape[0])
+    adj = (jnp.asarray(spec.adj) if adj is None
+           else adj.astype(jnp.float32)) - jnp.eye(spec.adj.shape[0])
     if point_to_point:
         match = (s[None, :] == s[:, None]).astype(jnp.float32)
         links = jnp.sum(adj * match)

@@ -1,6 +1,8 @@
-# Experiment layer: method registry + shared driver. Algorithms register a
-# Method adapter (registry.py); the driver (runner.py) owns the round loop,
-# eval cadence, curve/comm accounting, and multi-seed batching.
+# Experiment layer: method registry + shared driver + scenario engine.
+# Algorithms register a Method adapter (registry.py); the driver (runner.py)
+# owns the round loop, eval cadence, curve/comm accounting, and multi-seed
+# batching; scenarios.py declares dynamic topologies / link dropout /
+# stacked per-seed data.
 from repro.comm.codecs import CommConfig  # noqa: F401  (run_method(comm=...))
 from repro.experiments.registry import (  # noqa: F401
     CommModel,
@@ -17,3 +19,4 @@ from repro.experiments.runner import (  # noqa: F401
     run_method,
     run_method_batch,
 )
+from repro.experiments.scenarios import Scenario  # noqa: F401

@@ -9,13 +9,19 @@ curve collection, communication accounting, and multi-seed batching.
 The ``Method`` protocol (all functions pure & traceable so the driver can
 ``jax.jit`` the step once and ``jax.vmap`` it over a seed axis):
 
-    init(ctx, key)        -> state            per-seed state (params/pytrees)
-    make_step(ctx)        -> step(state, train, key, lr) -> (state, aux)
-    personalize(ctx, state, key) -> params    leaves (N, ...) per-client model
+    init(ctx, key, train=None) -> state       per-seed state (params/pytrees)
+    make_step(ctx)        -> step(state, train, key, lr[, adj]) -> (state, aux)
+                                              (adj: traced per-round (N, N)
+                                              adjacency — methods with
+                                              supports_dynamic_graph)
+    personalize(ctx, state, key, train=None) -> params   leaves (N, ...)
     comm_model(ctx)       -> CommModel        static per-round bytes or
                                               "tracked" (read from state)
-    evaluate(ctx, state, key, on) -> (N,)     per-client accuracy (defaults
-                                              to personalize + acc_fn)
+    evaluate(ctx, state, key, on, train=None) -> (N,)    per-client accuracy
+                                              (defaults to personalize +
+                                              acc_fn; train overrides
+                                              ctx.train for the stacked-
+                                              data seed axis)
     extras(ctx, state, aux) -> dict           host-side diagnostics
 
 Per-run ``options`` honoured across methods:
@@ -40,6 +46,9 @@ Per-run ``options`` honoured across methods:
 FedSPD additionally honours:
     mode            gossip wiring: "dense" | "permute"
     dp_clip, dp_noise_multiplier, tau_final, cos_align_threshold
+
+Dynamic topologies (experiments/scenarios.py) ride the step's optional
+``adj`` argument — see ``Method.supports_dynamic_graph`` below.
 """
 from __future__ import annotations
 
@@ -169,11 +178,30 @@ class Method:
     to end — init packs, the step runs flat, personalize/evaluate unpack at
     the API boundary. The driver hard-errors on ``param_plane=True`` for
     adapters that have not opted in (a silent pytree fallback would
-    misreport the benchmark matrix). Every built-in method supports it."""
+    misreport the benchmark matrix). Every built-in method supports it.
+
+    ``supports_dynamic_graph`` declares that the adapter's step accepts a
+    TRACED per-round (N, N) adjacency as a fifth argument —
+    ``step(state, train, key, lr, adj)`` — the scenario engine's
+    time-varying topologies / link dropout / per-seed graphs
+    (experiments/scenarios.py). The driver hard-errors when a dynamic
+    scenario targets an adapter that has not opted in.
+
+    ``init``/``personalize``/``evaluate`` accept ``train=`` overriding
+    ``ctx.train`` — the stacked-data driver path (``run_method_batch`` with
+    per-seed datasets) maps a (k, N, M, ...) data stack over these, so
+    adapters that consume training data outside the step (FedSPD's seeded
+    init and final phase, pFedMe's personalization epochs) see seed i's
+    own dataset. ``train=None`` (every static call site) means ctx.train."""
 
     name: str = ""
     centralized: bool = False
     supports_param_plane: bool = False
+    supports_dynamic_graph: bool = False
+
+    @staticmethod
+    def _train(ctx: ExperimentContext, train):
+        return ctx.train if train is None else train
 
     def _pack_spec(self, ctx: ExperimentContext):
         """The per-run PackSpec when ``param_plane`` is on, else None.
@@ -229,22 +257,23 @@ class Method:
             ef=ch.init_residual(prefix or (ctx.n_clients,))
         )
 
-    def init(self, ctx: ExperimentContext, key: jax.Array):
+    def init(self, ctx: ExperimentContext, key: jax.Array, train=None):
         raise NotImplementedError
 
     def make_step(self, ctx: ExperimentContext) -> Callable:
         raise NotImplementedError
 
-    def personalize(self, ctx: ExperimentContext, state, key: jax.Array):
+    def personalize(self, ctx: ExperimentContext, state, key: jax.Array,
+                    train=None):
         raise NotImplementedError
 
     def comm_model(self, ctx: ExperimentContext) -> CommModel:
         raise NotImplementedError
 
     def evaluate(self, ctx: ExperimentContext, state, key: jax.Array,
-                 on: dict) -> jnp.ndarray:
+                 on: dict, train=None) -> jnp.ndarray:
         """Per-client accuracy of the personalized models on ``on``."""
-        params = self.personalize(ctx, state, key)
+        params = self.personalize(ctx, state, key, train=train)
         return per_client_eval(ctx.acc_fn, params, on)
 
     def extras(self, ctx: ExperimentContext, state, aux: dict) -> dict:
@@ -296,6 +325,7 @@ class FedSPDMethod(Method):
     (S, N, X) parameter plane (core/packing.py)."""
 
     supports_param_plane = True
+    supports_dynamic_graph = True
 
     def __init__(self, name: str, mode: str = "dense"):
         self.name = name
@@ -317,9 +347,9 @@ class FedSPDMethod(Method):
             cos_align_threshold=ctx.opt("cos_align_threshold", -1.0),
         )
 
-    def init(self, ctx, key):
+    def init(self, ctx, key, train=None):
         state = seeded_init(key, ctx.model_init, self._fcfg(ctx), ctx.loss_fn,
-                            ctx.train)
+                            self._train(ctx, train))
         ps = self._pack_spec(ctx)
         # pytree -> packed plane at the API boundary (models re-enter
         # pytree form only for eval/checkpoint)
@@ -339,18 +369,19 @@ class FedSPDMethod(Method):
                                mix_fn=mix_fn, pack_spec=ps,
                                model_bytes=ctx.model_bytes, comm=comm)
 
-        def wrapped(state, train, key, lr):
+        def wrapped(state, train, key, lr, adj=None):
             # FedSPD's round step carries its own key and lr schedule in
             # state; driver-provided key/lr are for the uniform signature.
+            # ``adj`` is the scenario engine's traced per-round adjacency.
             del key, lr
-            return step(state, train)
+            return step(state, train, adj)
 
         return wrapped
 
-    def personalize(self, ctx, state, key):
+    def personalize(self, ctx, state, key, train=None):
         del key
-        return final_phase(state, ctx.loss_fn, ctx.train, self._fcfg(ctx),
-                           pack_spec=self._pack_spec(ctx))
+        return final_phase(state, ctx.loss_fn, self._train(ctx, train),
+                           self._fcfg(ctx), pack_spec=self._pack_spec(ctx))
 
     def comm_model(self, ctx):
         return CommModel(kind="tracked")
@@ -376,7 +407,8 @@ class FedAvgMethod(Method):
         self.name = name
         self.centralized = centralized
 
-    def init(self, ctx, key):
+    def init(self, ctx, key, train=None):
+        del train  # random init only
         params = jax.vmap(ctx.model_init)(
             jax.random.split(key, ctx.n_clients)
         )
@@ -396,8 +428,8 @@ class FedAvgMethod(Method):
             channel=self._channel(ctx),
         )
 
-    def personalize(self, ctx, state, key):
-        del key
+    def personalize(self, ctx, state, key, train=None):
+        del key, train
         return fedavg.personalized_params(state,
                                           pack_spec=self._pack_spec(ctx),
                                           channel=self._channel(ctx))
@@ -413,7 +445,8 @@ class LocalMethod(Method):
     name = "local"
     supports_param_plane = True
 
-    def init(self, ctx, key):
+    def init(self, ctx, key, train=None):
+        del train  # random init only
         params = jax.vmap(ctx.model_init)(
             jax.random.split(key, ctx.n_clients)
         )
@@ -425,8 +458,8 @@ class LocalMethod(Method):
                                batch=ctx.exp.batch,
                                pack_spec=self._pack_spec(ctx))
 
-    def personalize(self, ctx, state, key):
-        del key
+    def personalize(self, ctx, state, key, train=None):
+        del key, train
         return local.personalized_params(state,
                                          pack_spec=self._pack_spec(ctx))
 
@@ -445,7 +478,8 @@ class FedEMMethod(Method):
         self.name = name
         self.centralized = centralized
 
-    def init(self, ctx, key):
+    def init(self, ctx, key, train=None):
+        del train  # random init only
         state = fedem.init_state(key, ctx.model_init, ctx.n_clients,
                                  ctx.n_clusters,
                                  pack_spec=self._pack_spec(ctx))
@@ -462,10 +496,10 @@ class FedEMMethod(Method):
             channel=self._channel(ctx),
         )
 
-    def personalize(self, ctx, state, key):
+    def personalize(self, ctx, state, key, train=None):
         """Eq.-(2)-style projection (u-weighted parameter average) — used
         for serve-style export; accuracy uses the probability mixture."""
-        del key
+        del key, train
         ps = self._pack_spec(ctx)
         if ps is not None:
             plane = state.centers  # (S, N, X)
@@ -476,8 +510,8 @@ class FedEMMethod(Method):
                                   state.centers)
         return jax.vmap(tree_weighted_sum)(centers_nc, state.u)
 
-    def evaluate(self, ctx, state, key, on):
-        del key
+    def evaluate(self, ctx, state, key, on, train=None):
+        del key, train
         return fedem.personalized_accuracy(ctx.apply_fn, state, on,
                                            pack_spec=self._pack_spec(ctx))
 
@@ -501,7 +535,8 @@ class IFCAMethod(Method):
         self.name = name
         self.centralized = centralized
 
-    def init(self, ctx, key):
+    def init(self, ctx, key, train=None):
+        del train  # random init only
         state = ifca.init_state(key, ctx.model_init, ctx.n_clients,
                                 ctx.n_clusters,
                                 pack_spec=self._pack_spec(ctx))
@@ -515,8 +550,8 @@ class IFCAMethod(Method):
                               pack_spec=self._pack_spec(ctx),
                               channel=self._channel(ctx))
 
-    def personalize(self, ctx, state, key):
-        del key
+    def personalize(self, ctx, state, key, train=None):
+        del key, train
         return ifca.personalized_params(state,
                                         pack_spec=self._pack_spec(ctx))
 
@@ -539,7 +574,8 @@ class FedSoftMethod(Method):
         self.name = name
         self.centralized = centralized
 
-    def init(self, ctx, key):
+    def init(self, ctx, key, train=None):
+        del train  # random init only
         state = fedsoft.init_state(key, ctx.model_init, ctx.n_clients,
                                    ctx.n_clusters,
                                    pack_spec=self._pack_spec(ctx))
@@ -553,8 +589,8 @@ class FedSoftMethod(Method):
             channel=self._channel(ctx),
         )
 
-    def personalize(self, ctx, state, key):
-        del key
+    def personalize(self, ctx, state, key, train=None):
+        del key, train
         return fedsoft.personalized_params(state,
                                            pack_spec=self._pack_spec(ctx))
 
@@ -577,7 +613,8 @@ class PFedMeMethod(Method):
         self.name = name
         self.centralized = centralized
 
-    def init(self, ctx, key):
+    def init(self, ctx, key, train=None):
+        del train  # random init only
         state = pfedme.init_state(key, n_clients=ctx.n_clients,
                                   model_init=ctx.model_init,
                                   pack_spec=self._pack_spec(ctx))
@@ -591,8 +628,9 @@ class PFedMeMethod(Method):
             channel=self._channel(ctx),
         )
 
-    def personalize(self, ctx, state, key):
-        return pfedme.personalized_params(state, ctx.loss_fn, ctx.train, key,
+    def personalize(self, ctx, state, key, train=None):
+        return pfedme.personalized_params(state, ctx.loss_fn,
+                                          self._train(ctx, train), key,
                                           batch=ctx.exp.batch,
                                           pack_spec=self._pack_spec(ctx))
 

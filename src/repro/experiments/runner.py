@@ -9,7 +9,16 @@ registry entry — the driver never changes.
 ``run_method_batch`` is the multi-seed fast path: states for all seeds are
 initialized with vmap, the round step is vmapped over the seed axis and
 jitted ONCE, so a k-seed sweep costs one compilation plus k× the per-round
-arithmetic (which XLA batches through the same fused program).
+arithmetic (which XLA batches through the same fused program).  Passing a
+SEQUENCE of datasets (one per seed) switches on the stacked-data variant —
+the paper's Tables 2–3 repeated-trials protocol (k seeds × k datasets ×
+k graphs) in the same single compile, with the data (and, for methods that
+support dynamic graphs, a per-seed graph stack) mapped over the seed axis.
+
+Both drivers accept a ``scenario`` (experiments/scenarios.py): time-varying
+graph schedules and Bernoulli link dropout resolve to a per-round TRACED
+(rounds, N, N) adjacency stack fed to the step, so a whole dynamic-topology
+sweep still compiles exactly once.
 """
 from __future__ import annotations
 
@@ -29,7 +38,8 @@ from repro.experiments.registry import (
     build_context,
     get_method,
 )
-from repro.graphs.topology import Graph
+from repro.experiments.scenarios import Scenario
+from repro.graphs.topology import Graph, union_graph
 
 METHODS = available_methods()
 
@@ -81,6 +91,61 @@ def _normalize_comm(options: dict) -> None:
             "two (fp32 is the only pytree-safe codec)"
         )
     options.setdefault("param_plane", True)
+
+
+def _merge_options(options: dict | None, gossip_mode, gossip_backend,
+                   param_plane, comm) -> dict:
+    """The convenience kwargs both drivers share, folded into ``options``
+    (explicit options win — the kwargs are shorthand, not overrides)."""
+    options = dict(options or {})
+    if gossip_mode is not None:
+        options.setdefault("mode", gossip_mode)
+    if gossip_backend is not None:
+        options.setdefault("gossip_backend", gossip_backend)
+    if param_plane is not None:
+        options.setdefault("param_plane", param_plane)
+    if comm is not None:
+        options.setdefault("comm", comm)
+    _normalize_comm(options)
+    return options
+
+
+def _require_dynamic_graph(m: Method, what: str) -> None:
+    if not m.supports_dynamic_graph:
+        raise ValueError(
+            f"method {m.name!r} does not support {what} — its step does "
+            "not accept the traced per-round adjacency (set "
+            "supports_dynamic_graph after threading adj through the step; "
+            "see experiments/scenarios.py)"
+        )
+
+
+def _resolve_scenario(m: Method, scenario: Scenario | None, graph,
+                      exp: PaperExpConfig, data, seed: int):
+    """(adj_rounds (rounds, N, N) jnp array | None, ctx graph). A dynamic
+    scenario replaces the context graph with the UNION graph over the
+    schedule, so static per-edge machinery (permute/ppermute colorings)
+    covers every edge the traced adjacencies can activate."""
+    if scenario is None or not scenario.dynamic:
+        return None, graph
+    _require_dynamic_graph(m, "dynamic-topology scenarios")
+    base = graph
+    if base is None and scenario.graph_schedule is None:
+        from repro.graphs.topology import make_graph
+
+        base = make_graph(exp.graph_kind, data.n_clients, exp.avg_degree,
+                          seed=seed)
+    stack, union = scenario.resolve(base, exp.rounds)
+    return jnp.asarray(stack), union
+
+
+def _n_compiles(step) -> int:
+    """Jit cache size — diagnostic only: _cache_size is a private jax API,
+    so don't let its absence on other jax versions fail a finished run."""
+    try:
+        return int(getattr(step, "_cache_size", lambda: -1)())
+    except Exception:
+        return -1
 
 
 def _wire_bytes(ctx: ExperimentContext, logical: float) -> float:
@@ -143,6 +208,7 @@ def run_method(
     gossip_backend: str | None = None,
     param_plane: bool | None = None,
     comm=None,
+    scenario: Scenario | None = None,
     options: dict | None = None,
 ) -> RunResult:
     """Run one method for ``exp.rounds`` rounds; returns RunResult.
@@ -157,20 +223,20 @@ def run_method(
     alongside the logical ``comm_bytes``).  Arbitrary per-method knobs go
     through ``options``; ``options={"donate": False}`` disables the
     default in-place state donation of the jitted round step.
+
+    ``scenario`` (experiments/scenarios.py) activates the dynamic-topology
+    engine: the resolved (rounds, N, N) adjacency stack is fed to the step
+    one TRACED (N, N) slice per round — time-varying rewire schedules and
+    Bernoulli link dropout run through ONE jit compile
+    (``extras["n_compiles"]`` records the cache size), and dropped links
+    cost zero wire bytes in the comm accounting.
     """
     t0 = time.time()
     m = get_method(method)
-    options = dict(options or {})
-    if gossip_mode is not None:
-        options.setdefault("mode", gossip_mode)
-    if gossip_backend is not None:
-        options.setdefault("gossip_backend", gossip_backend)
-    if param_plane is not None:
-        options.setdefault("param_plane", param_plane)
-    if comm is not None:
-        options.setdefault("comm", comm)
-    _normalize_comm(options)
+    options = _merge_options(options, gossip_mode, gossip_backend,
+                             param_plane, comm)
     _check_param_plane(m, options)
+    adj_rounds, graph = _resolve_scenario(m, scenario, graph, exp, data, seed)
     ctx = build_context(data, exp, graph=graph, seed=seed, options=options)
 
     key = jax.random.PRNGKey(seed)
@@ -183,59 +249,165 @@ def run_method(
     aux = None
     for r in range(exp.rounds):
         k_run, k = jax.random.split(k_run)
-        state, aux = step(state, ctx.train, k, lr_at(r))
+        if adj_rounds is None:
+            state, aux = step(state, ctx.train, k, lr_at(r))
+        else:
+            state, aux = step(state, ctx.train, k, lr_at(r), adj_rounds[r])
         if r % eval_every == 0 or r == exp.rounds - 1:
             train_acc = m.evaluate(ctx, state, k_eval, ctx.train)
             curve.append((r, float(jnp.mean(train_acc))))
 
     acc = m.evaluate(ctx, state, k_eval, ctx.test)
-    return _result(m, ctx, state, aux, acc, curve, t0)
+    return _result(m, ctx, state, aux, acc, curve, t0,
+                   n_compiles=_n_compiles(step))
+
+
+def _stack_graphs(m: Method, graph, seeds):
+    """Per-seed graphs (a sequence in ``graph``): stacked into a (k, N, N)
+    traced adjacency vmapped over the seed axis; the context gets the
+    union graph (static machinery must cover every seed's edges)."""
+    if graph is None or isinstance(graph, Graph):
+        return None, graph
+    graphs = list(graph)
+    if len(graphs) != len(seeds):
+        raise ValueError(
+            f"per-seed graphs: got {len(graphs)} graphs for "
+            f"{len(seeds)} seeds"
+        )
+    _require_dynamic_graph(m, "per-seed graphs")
+    adj = np.stack([g.adj for g in graphs]).astype(np.float32)
+    return jnp.asarray(adj), union_graph(adj)
+
+
+def _stack_data(data, seeds):
+    """The stacked-data variant: ``data`` as a per-seed sequence of
+    ClientDatasets becomes (k, N, M, ...) train/test stacks mapped over
+    the seed axis (the paper's per-seed-dataset repeated-trials
+    protocol). A single ClientDataset keeps the shared-data behaviour."""
+    if isinstance(data, ClientDataset):
+        return data, None, None
+    datasets = list(data)
+    if len(datasets) != len(seeds):
+        raise ValueError(
+            f"stacked data: got {len(datasets)} datasets for "
+            f"{len(seeds)} seeds"
+        )
+    for d in datasets[1:]:
+        if (d.x.shape != datasets[0].x.shape
+                or d.n_classes != datasets[0].n_classes
+                or d.n_clusters != datasets[0].n_clusters):
+            raise ValueError(
+                "stacked datasets must share shapes/classes/clusters "
+                "(one fused XLA program runs every seed)"
+            )
+    train = {
+        "inputs": jnp.asarray(np.stack([d.x for d in datasets])),
+        "targets": jnp.asarray(np.stack([d.y for d in datasets])),
+    }
+    test = {
+        "inputs": jnp.asarray(np.stack([d.x_test for d in datasets])),
+        "targets": jnp.asarray(np.stack([d.y_test for d in datasets])),
+    }
+    return datasets[0], train, test
 
 
 def run_method_batch(
     method: str,
-    data: ClientDataset,
+    data,
     exp: PaperExpConfig,
     seeds=(0, 1, 2),
     graph: Graph | None = None,
     eval_every: int = 10,
+    gossip_mode: str | None = None,
+    gossip_backend: str | None = None,
+    param_plane: bool | None = None,
+    comm=None,
+    scenario: Scenario | None = None,
     options: dict | None = None,
 ) -> list[RunResult]:
     """Multi-seed batched execution: ONE jit compile shared by all seeds.
 
     The per-seed state pytrees are stacked on a leading seed axis; the
     method's step runs under ``jax.vmap`` inside a single ``jax.jit``, so
-    round r of every seed executes as one fused XLA program.  The data,
-    graph, and method config are shared across seeds (only the random state
-    — model init, batch sampling, cluster selection — differs), which is the
-    paper's repeated-trials protocol.  Returns one RunResult per seed;
-    ``extras["n_compiles"]`` records the jit cache size (1 = shared).
+    round r of every seed executes as one fused XLA program.  Returns one
+    RunResult per seed; ``extras["n_compiles"]`` records the jit cache
+    size (1 = shared).
+
+    Accepts the same convenience kwargs as ``run_method`` (``gossip_mode``,
+    ``gossip_backend``, ``param_plane``, ``comm``) — the two entry points
+    take identical configuration.
+
+    Three batching axes compose:
+
+    - shared data + shared graph (the default): only the random state —
+      model init, batch sampling, cluster selection — differs per seed;
+    - stacked data: ``data`` as a SEQUENCE of per-seed ClientDatasets
+      (or ``scenario.data_stack``) maps a (k, N, M, ...) data stack over
+      the seed axis — the paper's Tables 2–3 per-seed-dataset protocol;
+    - per-seed graphs: ``graph`` as a sequence stacks a (k, N, N) traced
+      adjacency over the seed axis (methods with
+      ``supports_dynamic_graph``; the context wiring uses the union
+      graph). A dynamic ``scenario`` instead feeds one (N, N) slice of
+      its (rounds, N, N) schedule per round, shared by every seed.
     """
     t0 = time.time()
     m = get_method(method)
-    options = dict(options or {})
-    _normalize_comm(options)
+    options = _merge_options(options, gossip_mode, gossip_backend,
+                             param_plane, comm)
     _check_param_plane(m, options)
-    ctx = build_context(data, exp, graph=graph, seed=int(seeds[0]),
+    if scenario is not None and scenario.data_stack \
+            and isinstance(data, ClientDataset):
+        raise ValueError(
+            "scenario.data_stack=True needs a per-seed sequence of "
+            "datasets in `data`"
+        )
+    base_data, train_stack, test_stack = _stack_data(data, seeds)
+    adj_seeds, graph = _stack_graphs(m, graph, seeds)
+    adj_rounds = None
+    if scenario is not None and scenario.dynamic:
+        if adj_seeds is not None:
+            raise ValueError(
+                "per-seed graphs and a dynamic scenario schedule are "
+                "mutually exclusive (one traced adjacency per step)"
+            )
+        adj_rounds, graph = _resolve_scenario(
+            m, scenario, graph, exp, base_data, int(seeds[0])
+        )
+    ctx = build_context(base_data, exp, graph=graph, seed=int(seeds[0]),
                         options=options)
     lr_at = _lr_schedule(exp)
+
+    data_ax = None if train_stack is None else 0
+    train_arg = ctx.train if train_stack is None else train_stack
+    test_arg = ctx.test if test_stack is None else test_stack
 
     seed_keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
     split3 = jax.vmap(lambda k: jax.random.split(k, 3))(seed_keys)  # (k, 3, 2)
     k_init, k_run, k_eval = split3[:, 0], split3[:, 1], split3[:, 2]
 
-    states = jax.vmap(lambda k: m.init(ctx, k))(k_init)
+    states = jax.vmap(
+        lambda k, tr: m.init(ctx, k, train=tr), in_axes=(0, data_ax)
+    )(k_init, train_arg)
     # canonicalize weak types: an init-only weak-typed leaf (e.g. a
     # jnp.full without dtype) would force a second jit compile at round 2
     states = jax.tree.map(lambda l: l.astype(l.dtype), states)
-    step = jax.jit(
-        jax.vmap(m.make_step(ctx), in_axes=(0, None, 0, None)),
-        donate_argnums=_donate_argnums(options),
-    )
+    base_step = m.make_step(ctx)
+    if adj_seeds is None and adj_rounds is None:
+        step = jax.jit(
+            jax.vmap(base_step, in_axes=(0, data_ax, 0, None)),
+            donate_argnums=_donate_argnums(options),
+        )
+    else:
+        adj_ax = 0 if adj_seeds is not None else None
+        step = jax.jit(
+            jax.vmap(base_step, in_axes=(0, data_ax, 0, None, adj_ax)),
+            donate_argnums=_donate_argnums(options),
+        )
     evaluate = jax.jit(
         jax.vmap(
-            lambda state, key, on: m.evaluate(ctx, state, key, on),
-            in_axes=(0, 0, None),
+            lambda state, key, on, tr: m.evaluate(ctx, state, key, on,
+                                                  train=tr),
+            in_axes=(0, 0, data_ax, data_ax),
         )
     )
 
@@ -244,20 +416,19 @@ def run_method_batch(
     for r in range(exp.rounds):
         ks = jax.vmap(jax.random.split)(k_run)
         k_run, k = ks[:, 0], ks[:, 1]
-        states, aux = step(states, ctx.train, k, lr_at(r))
+        if adj_seeds is not None:
+            states, aux = step(states, train_arg, k, lr_at(r), adj_seeds)
+        elif adj_rounds is not None:
+            states, aux = step(states, train_arg, k, lr_at(r), adj_rounds[r])
+        else:
+            states, aux = step(states, train_arg, k, lr_at(r))
         if r % eval_every == 0 or r == exp.rounds - 1:
-            train_acc = evaluate(states, k_eval, ctx.train)  # (k, N)
+            train_acc = evaluate(states, k_eval, train_arg, train_arg)
             for i in range(len(seeds)):
                 curves[i].append((r, float(jnp.mean(train_acc[i]))))
 
-    accs = np.asarray(evaluate(states, k_eval, ctx.test))  # (k, N)
-    # diagnostic only: _cache_size is a private jax API, so don't let its
-    # absence on other jax versions fail a finished sweep
-    cache_size = getattr(step, "_cache_size", lambda: -1)
-    try:
-        n_compiles = int(cache_size())
-    except Exception:
-        n_compiles = -1
+    accs = np.asarray(evaluate(states, k_eval, test_arg, train_arg))  # (k, N)
+    n_compiles = _n_compiles(step)
     results = []
     for i, _ in enumerate(seeds):
         state_i = jax.tree.map(lambda l: l[i], states)

@@ -1,0 +1,108 @@
+"""Scenario engine: the paper's full experimental protocol as driver input.
+
+The paper's headline claim is accuracy under LOW-connectivity networks, and
+its Appendix B.2.4 stresses dynamically rewired ER/BA/RGG topologies; DisPFL
+(Dai et al., 2022) uses time-varying random graphs as the standard
+decentralized-PFL stress test, and DeceFL (Yuan et al., 2021) motivates
+robustness to per-round link failures. A ``Scenario`` bundles those axes —
+plus the per-seed-dataset repeated-trials protocol of the paper's
+Tables 2–3 — into one declarative object the experiment driver
+(experiments/runner.py) resolves into traced inputs:
+
+- ``graph_schedule``: a per-round topology sequence
+  (graphs/topology.GraphSchedule, e.g. ``rewire_schedule(...)``), or a raw
+  (rounds, N, N) adjacency stack. The round step receives each round's
+  (N, N) matrix as a TRACED argument (core/fedspd.make_round_step), so the
+  whole schedule — and a 10-round rewire sweep — costs ONE jit compile.
+- ``dropout``: per-round Bernoulli link failures on top of whatever the
+  schedule (or the static graph) provides. Masked rows are renormalized
+  inside the step and the comm accounting charges only surviving links —
+  a dropped edge costs zero wire bytes.
+- ``data_stack``: marks a ``run_method_batch`` call whose ``data`` is a
+  per-seed sequence of datasets (the old table23 protocol: k seeds ×
+  k datasets × k graphs in one compile). Passing a list of datasets
+  implies it; the flag exists so a Scenario fully describes a protocol.
+
+Static per-edge machinery (the permute/ppermute edge coloring, the
+shard_map collective schedule) is built once from the UNION graph over the
+whole schedule; each round's traced adjacency masks the inactive edges.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.graphs.topology import (
+    Graph,
+    GraphSchedule,
+    drop_edges,
+    union_graph,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Declarative experiment scenario; see the module docstring.
+
+    ``seed`` drives the dropout mask stream (the graph schedule carries its
+    own seed). ``resolve`` turns the scenario into the driver's traced
+    inputs: a (rounds, N, N) per-round adjacency stack plus the union graph
+    the static machinery is built from.
+    """
+
+    graph_schedule: Any = None   # GraphSchedule | (rounds, N, N) ndarray
+    dropout: float = 0.0         # per-round Bernoulli edge-drop probability
+    data_stack: bool = False     # run_method_batch data is per-seed stacked
+    seed: int = 0                # dropout mask stream
+
+    @property
+    def dynamic(self) -> bool:
+        """Whether the scenario varies the topology (and therefore needs
+        the traced-adjacency round step)."""
+        return self.graph_schedule is not None or self.dropout > 0.0
+
+    def _schedule_stack(self, rounds: int) -> Optional[np.ndarray]:
+        if self.graph_schedule is None:
+            return None
+        adjs = (self.graph_schedule.adjs
+                if isinstance(self.graph_schedule, GraphSchedule)
+                else np.asarray(self.graph_schedule, dtype=np.float32))
+        if adjs.ndim != 3 or adjs.shape[1] != adjs.shape[2]:
+            raise ValueError(
+                f"graph_schedule must stack (rounds, N, N) adjacencies; "
+                f"got shape {adjs.shape}"
+            )
+        # shorter schedules cycle (a schedule is a topology PROCESS, not a
+        # fixed-length tape); longer ones are cropped to the run
+        reps = -(-rounds // adjs.shape[0])
+        return np.tile(adjs, (reps, 1, 1))[:rounds]
+
+    def resolve(self, graph: Optional[Graph],
+                rounds: int) -> tuple[np.ndarray, Graph]:
+        """(rounds, N, N) traced adjacency stack + the union graph.
+
+        ``graph`` is the static base topology, required when the scenario
+        has no ``graph_schedule`` (dropout-only scenarios mask it).
+        The union is taken over the PRE-dropout schedule: dropout models
+        transient link failures, so the wiring (edge colorings, collective
+        schedules) must cover every link that can come back.
+        """
+        if not self.dynamic:
+            raise ValueError("static scenario: nothing to resolve")
+        stack = self._schedule_stack(rounds)
+        if stack is None:
+            if graph is None:
+                raise ValueError(
+                    "a dropout-only scenario needs the base graph"
+                )
+            stack = np.broadcast_to(
+                graph.adj, (rounds,) + graph.adj.shape
+            ).astype(np.float32)
+        union = union_graph(stack)
+        if self.dropout > 0.0:
+            rng = np.random.default_rng(self.seed)
+            stack = np.stack([drop_edges(a, self.dropout, rng)
+                              for a in stack])
+        return np.ascontiguousarray(stack, dtype=np.float32), union

@@ -201,6 +201,86 @@ def rewire(graph: Graph, p_remove: float, seed: int = 0) -> Graph:
     return Graph(_augment(adj))
 
 
+def union_graph(adjs: np.ndarray) -> Graph:
+    """The union over a stack of adjacencies (leading axis: rounds or
+    seeds). Static per-edge machinery — permute/ppermute edge colorings,
+    the shard_map collective schedule — is built from the union so it
+    covers every edge any stacked matrix can activate."""
+    return Graph(_augment(np.asarray(adjs).max(axis=0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSchedule:
+    """A per-round sequence of client graphs (Appendix B.2.4's dynamic
+    topologies). ``adjs`` stacks the augmented adjacencies (rounds, N, N);
+    the round step consumes one (N, N) slice per round as a TRACED input
+    (core/fedspd.make_round_step), so the whole schedule runs inside one
+    jit compile."""
+
+    adjs: np.ndarray  # (rounds, N, N) float32, each symmetric, diag == 1
+
+    @property
+    def rounds(self) -> int:
+        return self.adjs.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.adjs.shape[1]
+
+    def graph(self, t: int) -> Graph:
+        return Graph(self.adjs[t % self.rounds])
+
+    def union(self) -> Graph:
+        """The union graph over every scheduled round; each round's traced
+        adjacency then masks the inactive edges (see ``union_graph``)."""
+        return union_graph(self.adjs)
+
+
+def rewire_schedule(
+    kind: str, n: int, avg_degree: float, rounds: int,
+    p_rewire: float = 0.3, seed: int = 0,
+) -> GraphSchedule:
+    """Dynamically rewired ER/BA/RGG topologies (Appendix B.2.4): round 0 is
+    ``make_graph(kind, ...)``; every following round rewires the previous
+    graph (each edge removed with prob ``p_rewire``, replaced by random
+    non-edges, connectivity repaired) — a Markov chain of connected graphs
+    with roughly constant average degree."""
+    g = make_graph(kind, n, avg_degree, seed=seed)
+    adjs = [g.adj]
+    for t in range(1, rounds):
+        g = rewire(g, p_rewire, seed=seed + 1000003 * t)
+        adjs.append(g.adj)
+    return GraphSchedule(np.stack(adjs).astype(np.float32))
+
+
+def drop_edges(adj: np.ndarray, p_drop: float,
+               rng: np.random.Generator) -> np.ndarray:
+    """One round of Bernoulli link failures: each undirected off-diagonal
+    edge drops with prob ``p_drop`` (sampled once per edge — failures are
+    symmetric), diagonal kept (a client always keeps its own model). No
+    connectivity repair: dropout models per-round failures, not topology
+    design (DeceFL-style robustness stress)."""
+    adj = _augment(adj.copy())
+    iu, ju = np.triu_indices(adj.shape[0], k=1)
+    mask = (adj[iu, ju] > 0) & (rng.random(iu.shape[0]) < p_drop)
+    adj[iu[mask], ju[mask]] = 0.0
+    adj[ju[mask], iu[mask]] = 0.0
+    return adj
+
+
+def dropout_schedule(
+    graph: Graph, rounds: int, p_drop: float, seed: int = 0,
+) -> GraphSchedule:
+    """Per-round Bernoulli edge-dropout masks over a static base graph.
+    Dropped links carry no traffic: the round step row-renormalizes the
+    masked adjacency into the mixing matrix and the comm accounting
+    charges only surviving links (zero wire bytes for a dropped edge)."""
+    rng = np.random.default_rng(seed)
+    adjs = np.stack([drop_edges(graph.adj, p_drop, rng)
+                     for _ in range(rounds)])
+    return GraphSchedule(adjs.astype(np.float32))
+
+
 def make_graph(kind: str, n: int, avg_degree: float, seed: int = 0) -> Graph:
     """Uniform factory used by configs/benchmarks: target an average degree."""
     if kind == "er":

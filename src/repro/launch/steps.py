@@ -172,6 +172,13 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
     OWN contribution also goes through the codec, so the result equals
     the dense comm path's W·decode(encode(C)) exactly (parity-tested).
     The returned fn is comm-aware: ``(c_sel, s, key, ef) -> (mixed, ef')``.
+
+    Both variants accept ``adj=``: this round's TRACED (N, N) adjacency
+    (the scenario engine's dynamic topologies). The collective schedule
+    stays static — built from the spec's (union-graph) edge coloring — and
+    the traced matrix masks inactive edges inside the shard_map body, so a
+    dropped/rewired-away link contributes nothing to the average. The
+    traced adjacency must therefore be a subgraph of ``gossip.adj``.
     """
     import numpy as np
 
@@ -184,7 +191,9 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
     dp = dp_axes(mesh)
     n = gossip.adj.shape[0]
 
-    # static per-color (src -> dst) pairs and matched masks
+    # static per-color (src -> dst) pairs, matched masks, and the partner
+    # index vector (the latter resolves a traced per-round adjacency's
+    # edge-activity bit inside the shard_map body)
     colors = []
     for perm in gossip.perms:
         perm = np.asarray(perm)
@@ -192,7 +201,8 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
             (int(i), int(perm[i])) for i in range(n) if perm[i] != i
         )
         if pairs:
-            colors.append((pairs, jnp.asarray(perm != np.arange(n))))
+            colors.append((pairs, jnp.asarray(perm != np.arange(n)),
+                           jnp.asarray(perm)))
 
     def leaf_spec(path, leaf):
         # MUST match the layout's center sharding exactly — a mismatched
@@ -212,15 +222,21 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
     c_specs = build_specs(state_example) if state_example is not None else None
     axis = dp if len(dp) > 1 else dp[0]
 
+    def _adj_operand(adj):
+        """The optional traced-adjacency operand: row-sharded over the
+        client axis when dynamic, absent (not a replicated dummy —
+        identical static program) otherwise."""
+        return ((), ()) if adj is None else ((P(dp, None),), (adj,))
+
     if comm is not None and comm.codec != "fp32":
         from repro.comm.codecs import make_channel
 
-        def mix_fn_comm(c_sel, s, key, ef):
+        def mix_fn_comm(c_sel, s, key, ef, adj=None):
             ch = make_channel(comm, c_sel.shape[-1])
             enc, _x_hat, ef = ch.encode_stream(c_sel, key, ef)
             enc_specs = build_specs(enc)
 
-            def body(enc_loc, s_loc):
+            def body(enc_loc, s_loc, a_loc=None):
                 idx = jax.lax.axis_index(dp[-1])
                 if len(dp) > 1:
                     idx = idx + jax.lax.axis_index(dp[0]) * mesh.shape[dp[-1]]
@@ -228,43 +244,52 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
                 # result matches the dense path's W·decode(encode(C))
                 acc = ch.decode(enc_loc)          # (1, X) fp32
                 cnt = jnp.ones((1,), jnp.float32)
-                for pairs, matched in colors:
+                for pairs, matched, perm in colors:
                     recv_s = jax.lax.ppermute(s_loc, axis, pairs)
                     recv_enc = jax.tree.map(
                         lambda l: jax.lax.ppermute(l, axis, pairs), enc_loc
                     )
                     m = (recv_s == s_loc) & matched[idx]
+                    if a_loc is not None:
+                        # this round's traced adjacency row: the permute
+                        # still runs (static schedule) but a dropped edge
+                        # contributes nothing to the average
+                        m &= a_loc[0, perm[idx]] > 0
                     mf = m.astype(jnp.float32)
                     acc = acc + mf[:, None] * ch.decode(recv_enc)
                     cnt = cnt + mf
                 return acc / cnt[:, None]
 
+            adj_specs, adj_args = _adj_operand(adj)
             fn = shard_map(
                 body,
                 mesh=mesh,
-                in_specs=(enc_specs, P(dp)),
+                in_specs=(enc_specs, P(dp)) + adj_specs,
                 out_specs=P(dp, None),
             )
-            return fn(enc, s).astype(c_sel.dtype), ef
+            return fn(enc, s, *adj_args).astype(c_sel.dtype), ef
 
         mix_fn_comm.comm_aware = True
         return mix_fn_comm
 
-    def mix_fn(c_sel, s):
+    def mix_fn(c_sel, s, adj=None):
         specs = c_specs if c_specs is not None else build_specs(c_sel)
-        def body(c_loc, s_loc):
-            # c_loc leaves (1, X_shard...); s_loc (1,)
+        def body(c_loc, s_loc, a_loc=None):
+            # c_loc leaves (1, X_shard...); s_loc (1,); a_loc (1, N) — the
+            # client's row of this round's traced adjacency (when dynamic)
             idx = jax.lax.axis_index(dp[-1])
             if len(dp) > 1:
                 idx = idx + jax.lax.axis_index(dp[0]) * mesh.shape[dp[-1]]
             acc = jax.tree.map(lambda l: l.astype(jnp.float32), c_loc)
             cnt = jnp.ones((1,), jnp.float32)
-            for pairs, matched in colors:
+            for pairs, matched, perm in colors:
                 recv_s = jax.lax.ppermute(s_loc, axis, pairs)
                 recv_c = jax.tree.map(
                     lambda l: jax.lax.ppermute(l, axis, pairs), c_loc
                 )
                 m = (recv_s == s_loc) & matched[idx]
+                if a_loc is not None:
+                    m &= a_loc[0, perm[idx]] > 0
                 mf = m.astype(jnp.float32)
                 acc = jax.tree.map(
                     lambda a, r: a + mf.reshape((-1,) + (1,) * (r.ndim - 1))
@@ -278,12 +303,13 @@ def make_ppermute_gossip_mix(gossip: GossipSpec, mesh, state_example=None,
                 acc, c_loc,
             ), None
 
+        adj_specs, adj_args = _adj_operand(adj)
         fn = shard_map(
-            lambda c, sv: body(c, sv)[0],
+            lambda c, sv, *a: body(c, sv, *a)[0],
             mesh=mesh,
-            in_specs=(specs, P(dp)),
+            in_specs=(specs, P(dp)) + adj_specs,
             out_specs=specs,
         )
-        return fn(c_sel, s)
+        return fn(c_sel, s, *adj_args)
 
     return mix_fn

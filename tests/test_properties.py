@@ -20,7 +20,12 @@ from repro.core.gossip import (
 )
 from repro.graphs.coloring import greedy_edge_coloring, permute_schedule
 from repro.graphs.mixing import metropolis_weights, spectral_gap
-from repro.graphs.topology import make_graph
+from repro.graphs.topology import (
+    Graph,
+    dropout_schedule,
+    make_graph,
+    rewire_schedule,
+)
 
 SET = settings(max_examples=25, deadline=None)
 
@@ -157,6 +162,52 @@ def test_error_feedback_residual_identity(seed, x_width, k):
         x_hat, ef = ch.roundtrip(x, jax.random.PRNGKey(t), ef)
         np.testing.assert_allclose(np.asarray(ef + x_hat),
                                    np.asarray(x + ef_prev), atol=1e-5)
+
+
+@given(kind=st.sampled_from(["er", "ba", "rgg"]), seed=st.integers(0, 50),
+       n=st.integers(4, 16), rounds=st.integers(1, 6),
+       p_rewire=st.floats(0.0, 0.7))
+@SET
+def test_rewire_schedule_graphs_always_valid(kind, seed, n, rounds, p_rewire):
+    """Every graph a rewire schedule samples — any kind, any rewiring rate —
+    is a valid client topology: symmetric, diag == 1, CONNECTED (the
+    paper's Assumption 5.7 needs connectivity every round), and the union
+    graph covers every scheduled edge (the static permute/ppermute
+    machinery is built from it)."""
+    sched = rewire_schedule(kind, n, 3.0, rounds, p_rewire=p_rewire,
+                            seed=seed)
+    assert sched.adjs.shape == (rounds, n, n)
+    for t in range(rounds):
+        adj = sched.adjs[t]
+        np.testing.assert_array_equal(adj, adj.T)
+        np.testing.assert_array_equal(np.diag(adj), 1.0)
+        assert set(np.unique(adj)) <= {0.0, 1.0}
+        assert Graph(adj).is_connected()
+        assert (adj <= sched.union().adj).all()
+
+
+@given(kind=st.sampled_from(["er", "ba", "rgg"]), seed=st.integers(0, 50),
+       n=st.integers(4, 16), rounds=st.integers(1, 6),
+       p_drop=st.floats(0.0, 1.0))
+@SET
+def test_dropout_schedule_rows_renormalize(kind, seed, n, rounds, p_drop):
+    """Bernoulli link-failure masks always renormalize into a valid mixing
+    matrix — exactly what fedspd_weight_matrix does with the traced
+    adjacency: rows sum to 1 (the diagonal survives any dropout), entries
+    stay nonnegative, and connected draws keep a positive spectral gap
+    (self-loops make the chain aperiodic)."""
+    g = make_graph(kind, n, 3.0, seed=seed)
+    sched = dropout_schedule(g, rounds, p_drop, seed=seed + 1)
+    for t in range(rounds):
+        adj = sched.adjs[t]
+        np.testing.assert_array_equal(adj, adj.T)
+        np.testing.assert_array_equal(np.diag(adj), 1.0)
+        assert (adj <= g.adj).all()  # masks only remove edges
+        w = adj / adj.sum(axis=1, keepdims=True)
+        np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-6)
+        assert (w >= 0).all()
+        if Graph(adj).is_connected():
+            assert spectral_gap(w) > 0.0
 
 
 @given(seed=st.integers(0, 99), n=st.integers(3, 12))
