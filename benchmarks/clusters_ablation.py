@@ -7,7 +7,7 @@ import dataclasses
 
 from benchmarks.common import exp_config, fmt_table, save_result
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments import run_method
+from repro.experiments import RunConfig, run_method
 
 
 def run(fast: bool = True) -> dict:
@@ -19,7 +19,8 @@ def run(fast: bool = True) -> dict:
     rows = []
     for s in ([2, 4] if fast else [2, 3, 4, 6]):
         d = dataclasses.replace(data, n_clusters=s)
-        r = run_method("fedspd", d, exp, seed=0, eval_every=10**9)
+        r = run_method("fedspd", d, exp, seed=0,
+                       cfg=RunConfig(eval_every=10**9))
         rows.append({"S": s, "acc": round(r.mean_acc, 4),
                      "comm_GB": round(r.comm_bytes / 1e9, 3)})
         print(rows[-1])

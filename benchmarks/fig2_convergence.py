@@ -3,7 +3,7 @@ FedSPD converges fastest."""
 from __future__ import annotations
 
 from benchmarks.common import exp_config, mixture_data, save_result
-from repro.experiments import run_method
+from repro.experiments import RunConfig, run_method
 
 METHODS = ["fedspd", "dfl_fedem", "dfl_ifca", "dfl_fedavg", "dfl_fedsoft"]
 
@@ -13,7 +13,8 @@ def run(fast: bool = True) -> dict:
     data = mixture_data(exp)
     curves = {}
     for m in METHODS:
-        r = run_method(m, data, exp, seed=0, eval_every=max(2, exp.rounds // 10))
+        r = run_method(m, data, exp, seed=0,
+                       cfg=RunConfig(eval_every=max(2, exp.rounds // 10)))
         curves[m] = r.curve
         print(f"{m:14s}: " + " ".join(f"{a:.2f}" for _, a in r.curve))
     out = {"curves": curves, "exp": exp.__dict__}

@@ -4,7 +4,7 @@ other DFL methods degrade at low connectivity."""
 from __future__ import annotations
 
 from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
-from repro.experiments import run_method
+from repro.experiments import RunConfig, run_method
 from repro.graphs.topology import make_graph
 
 
@@ -23,7 +23,7 @@ def run(fast: bool = True) -> dict:
                    "actual_degree": round(g.avg_degree, 2)}
             for m in methods:
                 r = run_method(m, data, exp, graph=g, seed=0,
-                               eval_every=10**9)
+                               cfg=RunConfig(eval_every=10**9))
                 row[m] = round(r.mean_acc, 4)
             rows.append(row)
             print(row)

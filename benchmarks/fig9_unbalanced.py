@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from benchmarks.common import exp_config, fmt_table, save_result
 from repro.data.synthetic import make_mixture_classification, make_unbalanced_quantity
-from repro.experiments import run_method
+from repro.experiments import RunConfig, run_method
 
 
 def run(fast: bool = True) -> dict:
@@ -18,8 +18,9 @@ def run(fast: bool = True) -> dict:
         )
         if ratio > 1:
             data = make_unbalanced_quantity(data, ratio=ratio, seed=1)
-        fed = run_method("fedspd", data, exp, seed=0, eval_every=10**9)
-        loc = run_method("local", data, exp, seed=0, eval_every=10**9)
+        quiet = RunConfig(eval_every=10**9)
+        fed = run_method("fedspd", data, exp, seed=0, cfg=quiet)
+        loc = run_method("local", data, exp, seed=0, cfg=quiet)
         rows.append({
             "ratio": ratio,
             "fedspd": round(fed.mean_acc, 4),

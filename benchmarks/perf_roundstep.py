@@ -16,6 +16,14 @@ production train loop) across:
   topology        static closure adjacency   vs traced per-round rewire
                                                schedule (scenario engine,
                                                lane fedspd/dynamic_graph)
+  round engine    per-round dispatch loop    vs the lax.scan-rolled
+                                               whole-experiment program
+                                               (lane fedspd/scan_rounds:
+                                               ONE compile + ONE dispatch,
+                                               asserted) and per-round
+                                               cohort subsampling at
+                                               N=1024 clients (lane
+                                               fedspd/cohort_n1024)
 
 All steps are jitted with the state donated (the production loop's
 configuration). Every result row carries a stable ``lane`` id; the output
@@ -244,6 +252,53 @@ def bench_comm_pair(codec: str, *, n: int, m: int, dim: int, tau: int,
     }
 
 
+def bench_scan_rounds(*, n: int, m: int, dim: int, tau: int, rounds: int,
+                      repeats: int, seed: int = 0,
+                      cohort: int | None = None) -> dict:
+    """Whole-experiment lanes through the driver's lax.scan engine.
+
+    ``fedspd/scan_rounds``: all R rounds as ONE compiled program — the row
+    asserts extras report exactly one compile and one host dispatch (the
+    count is independent of ``rounds`` by construction), and the amortized
+    per-round time (compile included) is the trend-gated metric.
+
+    ``fedspd/cohort_n1024`` (``cohort=K``): the same scan program at
+    N=1024 clients with a K-client per-round cohort — proves the compact
+    active-plane gather keeps the big-N configuration CI-runnable (no
+    OOM, still one compile)."""
+    from repro.configs.paper_cnn import PaperExpConfig
+    from repro.experiments import RunConfig, run_method
+
+    exp = PaperExpConfig(
+        n_clients=n, n_per_client=m, rounds=rounds, tau=tau,
+        batch=min(16, m), avg_degree=4.0, model="mlp", dim=dim, n_classes=4,
+    )
+    data = make_mixture_classification(
+        n_clients=n, n_clusters=2, n_per_client=m, dim=dim, n_classes=4,
+        seed=seed,
+    )
+    cfg = RunConfig(eval_every=10**9, param_plane=True, scan_rounds=True,
+                    cohort_size=cohort)
+    walls, r = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = run_method("fedspd", data, exp, seed=seed, cfg=cfg)
+        walls.append(time.perf_counter() - t0)
+    assert r.extras["n_compiles"] == 1, r.extras
+    assert r.extras["n_dispatches"] == 1, r.extras
+    per_round = [w * 1e3 / rounds for w in walls]
+    return {
+        "lane": "fedspd/cohort_n1024" if cohort else "fedspd/scan_rounds",
+        "n_clients": n, "rounds": rounds, "cohort_size": cohort,
+        "n_compiles": r.extras["n_compiles"],
+        "n_dispatches": r.extras["n_dispatches"],
+        "run_s": round(min(walls), 4),
+        "round_ms": round(min(per_round), 4),
+        "round_ms_median": round(statistics.median(per_round), 4),
+        "mean_acc": round(float(r.mean_acc), 4),
+    }
+
+
 def bench_method_pair(method: str, *, n: int, m: int, dim: int, tau: int,
                       reps: int, seed: int = 0) -> list[dict]:
     """Registry baseline steps, pytree vs packed (N, X)/(S, N, X) plane —
@@ -335,6 +390,20 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
     print(f"{dyn['lane']:>24s}  round {dyn['round_ms']:9.2f} ms   "
           f"(static {dyn['static_round_ms']:8.2f} ms)  overhead "
           f"x{dyn['paired_overhead_vs_static']}")
+    # scan-rolled whole-experiment lanes (RunConfig.scan_rounds): one
+    # compile + one dispatch, asserted inside bench_scan_rounds
+    scan = bench_scan_rounds(n=n, m=m, dim=dim, tau=tau,
+                             rounds=32 if fast else 64, repeats=2)
+    results.append(scan)
+    print(f"{scan['lane']:>24s}  round {scan['round_ms']:9.2f} ms   "
+          f"({scan['rounds']} rounds in {scan['run_s']:.2f} s, "
+          f"{scan['n_dispatches']} dispatch)")
+    coh = bench_scan_rounds(n=1024, m=16, dim=dim, tau=1,
+                            rounds=4 if fast else 8, repeats=1, cohort=32)
+    results.append(coh)
+    print(f"{coh['lane']:>24s}  round {coh['round_ms']:9.2f} ms   "
+          f"(N={coh['n_clients']}, K={coh['cohort_size']}, "
+          f"{coh['n_dispatches']} dispatch)")
     comparisons = []
     for model in ("mlp", "conv"):
         for regime in ("full", "stream"):

@@ -15,7 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
-from repro.experiments import run_method_batch
+from repro.experiments import RunConfig, run_method_batch
 
 DFL = ["fedspd", "dfl_fedem", "dfl_ifca", "dfl_fedavg", "dfl_fedsoft",
        "dfl_pfedme", "local"]
@@ -29,7 +29,7 @@ def run(fast: bool = True, seeds=(0,)) -> dict:
     rows = []
     for method in DFL + CFL:
         results = run_method_batch(method, data, exp, seeds=seeds,
-                                   eval_every=10**9)
+                                   cfg=RunConfig(eval_every=10**9))
         rows.append({
             "method": method,
             "acc": float(np.mean([r.mean_acc for r in results])),

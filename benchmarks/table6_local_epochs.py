@@ -5,7 +5,7 @@ from __future__ import annotations
 import dataclasses
 
 from benchmarks.common import exp_config, fmt_table, mixture_data, save_result
-from repro.experiments import run_method
+from repro.experiments import RunConfig, run_method
 
 
 def run(fast: bool = True) -> dict:
@@ -15,7 +15,8 @@ def run(fast: bool = True) -> dict:
     rows = []
     for tau in taus:
         e = dataclasses.replace(exp, tau=tau)
-        r = run_method("fedspd", data, e, seed=0, eval_every=10**9)
+        r = run_method("fedspd", data, e, seed=0,
+                       cfg=RunConfig(eval_every=10**9))
         rows.append({"tau": tau, "acc": round(r.mean_acc, 4)})
         print(rows[-1])
     out = {"rows": rows}

@@ -9,13 +9,15 @@ input, so the whole dynamic sweep still compiles once per cell).
 
 All runs use the packed parameter plane (the compressing codecs operate on
 flat (N, X) slices; ``run_method`` enables it for them automatically, and
-``param_plane=True`` keeps the fp32 baseline on the identical engine).
+``RunConfig(param_plane=True)`` keeps the fp32 baseline on the identical
+engine). The dynamic sweep additionally sets ``scan_rounds=True``: the
+whole 60-round experiment is one lax.scan-rolled compiled program.
 
     PYTHONPATH=src python examples/connectivity_sweep.py
 """
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments import CommConfig, Scenario, run_method
+from repro.experiments import CommConfig, RunConfig, Scenario, run_method
 from repro.graphs.topology import make_graph, rewire_schedule
 
 exp = PaperExpConfig(n_clients=12, rounds=60, tau=5, batch=16,
@@ -44,8 +46,8 @@ for kind in ("er", "ba", "rgg"):
             row = f"{kind:9s} {g.avg_degree:5.1f} {name:>8s}"
             for m in ("fedspd", "dfl_fedem", "dfl_fedavg"):
                 r = run_method(m, data, exp, graph=g, seed=0,
-                               eval_every=10**9, param_plane=True,
-                               comm=comm)
+                               cfg=RunConfig(eval_every=10**9,
+                                             param_plane=True, comm=comm))
                 row += f" {r.mean_acc:12.3f}@{r.wire_bytes / 1e6:7.1f}"
             print(row)
         print()
@@ -60,8 +62,9 @@ for kind in ("er", "ba", "rgg"):
         sched = rewire_schedule(kind, exp.n_clients, deg, rounds=exp.rounds,
                                 p_rewire=0.3, seed=2)
         sc = Scenario(graph_schedule=sched, dropout=0.2, seed=2)
-        r = run_method("fedspd", data, exp, seed=0, eval_every=10**9,
-                       param_plane=True, scenario=sc)
+        r = run_method("fedspd", data, exp, seed=0,
+                       cfg=RunConfig(eval_every=10**9, param_plane=True,
+                                     scenario=sc, scan_rounds=True))
         print(f"{kind:9s} {deg:5.1f} {'dynamic':>8s} "
               f"{r.mean_acc:12.3f}@{r.wire_bytes / 1e6:7.1f}  "
               f"(compiles: {r.extras['n_compiles']})")

@@ -7,15 +7,17 @@ distributions (rotated vs unrotated prototypes — the paper's rotated-MNIST
 analogue).  ``run_method`` resolves any of the 13 registered algorithms
 (``repro.experiments.METHODS``) through one shared driver: FedSPD learns one
 model per cluster by gossiping cluster centers with matching neighbors, then
-personalizes per client (Eq. 2 + local epochs).  Swap the method id — or
-pass ``gossip_backend="pallas"`` to stream the mixing through the Pallas
-kernel — without touching the loop.
+personalizes per client (Eq. 2 + local epochs).  Execution knobs live in
+one ``RunConfig``: swap the method id, pass
+``RunConfig(gossip_backend="pallas")`` to stream the mixing through the
+Pallas kernel, or — as below — ``scan_rounds=True`` to roll all 50 rounds
+into ONE compiled lax.scan program (one dispatch total).
 """
 import numpy as np
 
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments import METHODS, run_method
+from repro.experiments import METHODS, RunConfig, run_method
 
 N_CLIENTS, N_CLUSTERS = 8, 2
 
@@ -30,7 +32,8 @@ data = make_mixture_classification(
 )
 
 print(f"registered methods: {', '.join(METHODS)}\n")
-result = run_method("fedspd", data, exp, seed=0, eval_every=10)
+result = run_method("fedspd", data, exp, seed=0,
+                    cfg=RunConfig(eval_every=10, scan_rounds=True))
 
 for r, acc in result.curve:
     print(f"round {r:3d}  mean train acc {acc:.3f}")

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import make_mixture_classification
-from repro.experiments import run_method_batch
+from repro.experiments import RunConfig, run_method_batch
 
 
 def main(argv=None):
@@ -53,8 +53,11 @@ def main(argv=None):
     for method in args.methods:
         t0 = time.time()
         rs = run_method_batch(
-            method, data, exp, seeds=args.seeds, eval_every=25,
-            options=options if method.startswith("fedspd") else {},
+            method, data, exp, seeds=args.seeds,
+            cfg=RunConfig(
+                eval_every=25,
+                options=options if method.startswith("fedspd") else {},
+            ),
         )
         accs = np.array([r.mean_acc for r in rs])
         print(f"{method:14s} {accs.mean():7.3f} {accs.std():7.3f} "

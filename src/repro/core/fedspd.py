@@ -35,6 +35,14 @@ Two parameter representations (``make_round_step(pack_spec=...)``):
   local-SGD inner loop and the clustering forward) and at the API
   boundary (init, eval, checkpoint). Parity with the pytree path is
   asserted in tests/test_packing.py.
+
+The round step is pure in (state, train, key, lr) with static shapes, so
+the experiment drivers can either dispatch it once per round (the Python
+loop engine) or trace it as the body of a whole-experiment ``lax.scan``
+(``RunConfig(scan_rounds=True)``: all R rounds in one compiled program,
+adjacency schedule as scan xs, metric curve as scan ys) — both engines
+produce bit-identical states because the step draws nothing from host
+state (tests/test_scan_rounds.py).
 """
 from __future__ import annotations
 

@@ -363,8 +363,11 @@ def round_comm_bytes(
     static topology in the link count, so a dropped or rewired-away edge
     costs exactly zero wire bytes this round.
     """
+    # the eye is sized from the EFFECTIVE adjacency, not the spec: cohort
+    # subsampling passes the (K, K) minor of the round's graph
     adj = (jnp.asarray(spec.adj) if adj is None
-           else adj.astype(jnp.float32)) - jnp.eye(spec.adj.shape[0])
+           else adj.astype(jnp.float32))
+    adj = adj - jnp.eye(adj.shape[0])
     if point_to_point:
         match = (s[None, :] == s[:, None]).astype(jnp.float32)
         links = jnp.sum(adj * match)

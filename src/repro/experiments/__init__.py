@@ -3,7 +3,8 @@
 # owns the round loop, eval cadence, curve/comm accounting, and multi-seed
 # batching; scenarios.py declares dynamic topologies / link dropout /
 # stacked per-seed data.
-from repro.comm.codecs import CommConfig  # noqa: F401  (run_method(comm=...))
+from repro.comm.codecs import CommConfig  # noqa: F401  (RunConfig(comm=...))
+from repro.experiments.config import RunConfig  # noqa: F401
 from repro.experiments.registry import (  # noqa: F401
     CommModel,
     ExperimentContext,

@@ -1,0 +1,97 @@
+"""RunConfig: the one configuration object both experiment entry points take.
+
+Before this module, ``run_method`` and ``run_method_batch`` each carried
+seven parallel convenience kwargs (gossip_mode / gossip_backend /
+param_plane / comm / scenario / eval_every / options) whose merge logic was
+duplicated across the two drivers.  ``RunConfig`` replaces all of them:
+
+    run_method("fedspd", data, exp, cfg=RunConfig(param_plane=True,
+                                                  comm=CommConfig("int8"),
+                                                  scan_rounds=True))
+
+The old loose kwargs survive as shims that emit ``DeprecationWarning``
+(experiments/runner.py); new callers inside this repo must use ``cfg=``
+(enforced by tests/test_run_config.py's call-site guard).
+
+``resolve_options`` folds the typed fields into the per-run ``options``
+dict the method registry consumes — explicit ``options`` entries win, the
+typed fields are shorthand, exactly like the old ``_merge_options``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+def _normalize_comm(options: dict) -> None:
+    """A compressing codec operates on packed plane slices, so ``comm``
+    implies ``param_plane=True`` — enabled here unless the caller
+    explicitly pinned the pytree engine (then fail loudly: silently
+    flipping the representation would misattribute benchmark results)."""
+    comm = options.get("comm")
+    if comm is None or comm.codec == "fp32":
+        return
+    if options.get("param_plane") is False:
+        raise ValueError(
+            f"comm codec {comm.codec!r} requires the packed parameter "
+            "plane, but param_plane=False was requested — drop one of the "
+            "two (fp32 is the only pytree-safe codec)"
+        )
+    options.setdefault("param_plane", True)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Everything about HOW a run executes (the what — method, data, exp,
+    graph, seeds — stays positional on the entry points).
+
+    gossip_mode     FedSPD wiring: "dense" | "permute"
+    gossip_backend  exchange execution: "reference" | "pallas" | "ppermute"
+    param_plane     packed (S, N, X) parameter plane vs per-leaf pytrees
+    comm            comm/codecs.CommConfig wire codec (implies param_plane
+                    for compressing codecs)
+    scenario        experiments/scenarios.Scenario: dynamic topologies,
+                    in-step link dropout, stacked per-seed data
+    eval_every      train-curve cadence (the final round always evaluates)
+    donate          donate the state into the jitted round program (the
+                    plane is aliased in place; disable when holding on to
+                    intermediate states)
+    scan_rounds     fold ALL ``exp.rounds`` rounds into one lax.scan-rolled
+                    jitted program: one compile, one dispatch, the curve
+                    comes back as masked scan ys (see README
+                    "Scan-rolled rounds")
+    cohort_size     per-round client subsampling: K <= N active clients are
+                    gathered into a compact plane each round; inactive
+                    clients' rows are carried untouched and cost zero wire
+                    bytes (FedSPD on the packed plane, dense wiring)
+    options         escape hatch for per-method knobs (explicit entries win
+                    over the typed shorthands above)
+    """
+
+    gossip_mode: Optional[str] = None
+    gossip_backend: Optional[str] = None
+    param_plane: Optional[bool] = None
+    comm: Any = None                  # comm/codecs.CommConfig
+    scenario: Any = None              # experiments/scenarios.Scenario
+    eval_every: int = 10
+    donate: bool = True
+    scan_rounds: bool = False
+    cohort_size: Optional[int] = None
+    options: dict = dataclasses.field(default_factory=dict)
+
+    def resolve_options(self) -> dict:
+        """Fold the typed fields into a fresh per-run options dict
+        (explicit ``options`` entries win — the fields are shorthand)."""
+        options = dict(self.options or {})
+        if self.gossip_mode is not None:
+            options.setdefault("mode", self.gossip_mode)
+        if self.gossip_backend is not None:
+            options.setdefault("gossip_backend", self.gossip_backend)
+        if self.param_plane is not None:
+            options.setdefault("param_plane", self.param_plane)
+        if self.comm is not None:
+            options.setdefault("comm", self.comm)
+        if not self.donate:
+            options.setdefault("donate", False)
+        _normalize_comm(options)
+        return options

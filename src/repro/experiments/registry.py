@@ -257,6 +257,21 @@ class Method:
             ef=ch.init_residual(prefix or (ctx.n_clients,))
         )
 
+    def cohort_axes(self, ctx: ExperimentContext, state):
+        """Per-field client-axis map for cohort subsampling
+        (``RunConfig.cohort_size``): a state-shaped container giving, for
+        each field, the axis that indexes clients (None = a global field
+        — round counter, key, comm counter — threaded through whole).
+        The driver gathers the K active rows along these axes, runs the
+        UNCHANGED step on the compact cohort, and scatters back, so
+        inactive clients' rows are carried bit-untouched. Methods opt in
+        by overriding."""
+        raise ValueError(
+            f"method {self.name!r} does not support cohort subsampling "
+            "(RunConfig.cohort_size) — its adapter defines no per-field "
+            "client-axis map; override Method.cohort_axes"
+        )
+
     def init(self, ctx: ExperimentContext, key: jax.Array, train=None):
         raise NotImplementedError
 
@@ -377,6 +392,35 @@ class FedSPDMethod(Method):
             return step(state, train, adj)
 
         return wrapped
+
+    def cohort_axes(self, ctx, state):
+        """FedSPD's packed state on the plane: centers (S, N, X) → axis 1;
+        u (N, S) / z (N, M) / ef (N, X) → axis 0; round/key/comm_bytes are
+        global. Cohort subsampling needs the dense wiring (the permute
+        edge coloring and the ppermute device placement are sized to the
+        full client axis) and the packed plane (the compact gather is a
+        plane-row gather)."""
+        from repro.core.fedspd import FedSPDState
+
+        if self._pack_spec(ctx) is None:
+            raise ValueError(
+                "cohort subsampling runs on the packed (S, N, X) "
+                "parameter plane; set RunConfig(param_plane=True)"
+            )
+        if ctx.opt("mode", self.mode) != "dense":
+            raise ValueError(
+                "cohort subsampling needs the dense gossip wiring — the "
+                "permute edge coloring is sized to the full client axis"
+            )
+        if ctx.opt("gossip_backend", "reference") == "ppermute":
+            raise ValueError(
+                "cohort subsampling is not available on the ppermute "
+                "backend (one device per client row)"
+            )
+        return FedSPDState(
+            centers=1, u=0, z=0, round=None, key=None, comm_bytes=None,
+            ef=None if state.ef is None else 0,
+        )
 
     def personalize(self, ctx, state, key, train=None):
         del key

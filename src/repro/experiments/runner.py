@@ -1,29 +1,42 @@
-"""Experiment driver: one shared round loop for every registered method.
+"""Experiment driver: ONE shared round engine behind both entry points.
 
-``run_method`` resolves an algorithm through the method registry
-(experiments/registry.py) and owns everything the old per-method if/elif
-branches used to hand-roll: the jitted round loop, eval cadence, curve
-collection, and communication accounting.  Adding an algorithm is now a
-registry entry — the driver never changes.
+``run_method`` (single seed) and ``run_method_batch`` (multi-seed, vmapped)
+are thin shims over the same internal driver (``_drive``): configuration
+arrives as one frozen ``RunConfig`` (experiments/config.py), the method
+resolves through the registry (experiments/registry.py), and the driver
+owns the round engine, eval cadence, curve collection, communication
+accounting, and seed batching.  The old seven loose kwargs are kept as
+shims that emit ``DeprecationWarning``.
 
-``run_method_batch`` is the multi-seed fast path: states for all seeds are
-initialized with vmap, the round step is vmapped over the seed axis and
-jitted ONCE, so a k-seed sweep costs one compilation plus k× the per-round
-arithmetic (which XLA batches through the same fused program).  Passing a
-SEQUENCE of datasets (one per seed) switches on the stacked-data variant —
-the paper's Tables 2–3 repeated-trials protocol (k seeds × k datasets ×
-k graphs) in the same single compile, with the data (and, for methods that
-support dynamic graphs, a per-seed graph stack) mapped over the seed axis.
+Two round engines share every closure:
 
-Both drivers accept a ``scenario`` (experiments/scenarios.py): time-varying
-graph schedules and Bernoulli link dropout resolve to a per-round TRACED
-(rounds, N, N) adjacency stack fed to the step, so a whole dynamic-topology
-sweep still compiles exactly once.
+- the Python loop (default): one jitted round-step dispatch per round —
+  the historical engine, bit-stable against the committed seed fixtures;
+- ``RunConfig(scan_rounds=True)``: the WHOLE experiment is one
+  ``lax.scan``-rolled jitted program.  The round index / lr schedule / the
+  (rounds, N, N) adjacency schedule ride the scan xs, the donated state
+  (packed (S, N, X) plane, EF residuals, key) rides the carry, and the
+  train-accuracy curve comes back as masked scan ys (``lax.cond`` at the
+  static ``eval_every`` cadence).  One compile, one host dispatch,
+  independent of ``rounds``.
+
+Scenario link dropout (``Scenario.dropout``) is a key-derived IN-STEP
+Bernoulli draw: the round index is folded into the scenario's PRNG key
+inside the program, so both engines see the identical mask stream and a
+dropout sweep never materializes a host-side (rounds, N, N) stack.
+
+``RunConfig(cohort_size=K)`` adds per-round client subsampling on top of
+either engine: K of N clients are gathered into a compact active plane
+(state rows, data rows, the adjacency minor), the unchanged step runs at
+size K, and results scatter back — inactive clients' rows are carried
+bit-untouched and dropped links cost zero wire bytes (the comm accounting
+reads the (K, K) sub-adjacency).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +44,7 @@ import numpy as np
 
 from repro.configs.paper_cnn import PaperExpConfig
 from repro.data.synthetic import ClientDataset
+from repro.experiments.config import RunConfig
 from repro.experiments.registry import (
     ExperimentContext,
     Method,
@@ -38,10 +52,12 @@ from repro.experiments.registry import (
     build_context,
     get_method,
 )
-from repro.experiments.scenarios import Scenario
+from repro.experiments.scenarios import Scenario, bernoulli_drop
 from repro.graphs.topology import Graph, union_graph
 
 METHODS = available_methods()
+
+_UNSET = object()   # distinguishes "not passed" from an explicit None
 
 
 @dataclasses.dataclass
@@ -76,40 +92,6 @@ def _check_param_plane(m: Method, options: dict) -> None:
         )
 
 
-def _normalize_comm(options: dict) -> None:
-    """A compressing codec operates on packed plane slices, so ``comm``
-    implies ``param_plane=True`` — enabled here unless the caller
-    explicitly pinned the pytree engine (then fail loudly: silently
-    flipping the representation would misattribute benchmark results)."""
-    comm = options.get("comm")
-    if comm is None or comm.codec == "fp32":
-        return
-    if options.get("param_plane") is False:
-        raise ValueError(
-            f"comm codec {comm.codec!r} requires the packed parameter "
-            "plane, but param_plane=False was requested — drop one of the "
-            "two (fp32 is the only pytree-safe codec)"
-        )
-    options.setdefault("param_plane", True)
-
-
-def _merge_options(options: dict | None, gossip_mode, gossip_backend,
-                   param_plane, comm) -> dict:
-    """The convenience kwargs both drivers share, folded into ``options``
-    (explicit options win — the kwargs are shorthand, not overrides)."""
-    options = dict(options or {})
-    if gossip_mode is not None:
-        options.setdefault("mode", gossip_mode)
-    if gossip_backend is not None:
-        options.setdefault("gossip_backend", gossip_backend)
-    if param_plane is not None:
-        options.setdefault("param_plane", param_plane)
-    if comm is not None:
-        options.setdefault("comm", comm)
-    _normalize_comm(options)
-    return options
-
-
 def _require_dynamic_graph(m: Method, what: str) -> None:
     if not m.supports_dynamic_graph:
         raise ValueError(
@@ -120,30 +102,66 @@ def _require_dynamic_graph(m: Method, what: str) -> None:
         )
 
 
+def _coerce_cfg(cfg: RunConfig | None, legacy: dict, entry: str) -> RunConfig:
+    """Fold the deprecated loose kwargs into a RunConfig (shim path)."""
+    passed = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if not passed:
+        return cfg if cfg is not None else RunConfig()
+    if cfg is not None:
+        raise ValueError(
+            f"{entry}: pass configuration either as cfg=RunConfig(...) or "
+            f"as the legacy loose kwargs, not both (got {sorted(passed)})"
+        )
+    warnings.warn(
+        f"{entry}: the loose kwargs {sorted(passed)} are deprecated; pass "
+        "cfg=RunConfig(...) instead (README 'Running experiments' has the "
+        "migration table)",
+        DeprecationWarning, stacklevel=3,
+    )
+    return RunConfig(**passed)
+
+
 def _resolve_scenario(m: Method, scenario: Scenario | None, graph,
-                      exp: PaperExpConfig, data, seed: int):
-    """(adj_rounds (rounds, N, N) jnp array | None, ctx graph). A dynamic
-    scenario replaces the context graph with the UNION graph over the
-    schedule, so static per-edge machinery (permute/ppermute colorings)
-    covers every edge the traced adjacencies can activate."""
+                      exp: PaperExpConfig, data, seed: int, adj_seeds=None):
+    """(adj_rounds, adj_const, drop_p, drop_key, ctx graph).
+
+    A schedule resolves to a PRE-dropout (rounds, N, N) stack (scan xs /
+    host-indexed per round) and replaces the context graph with the UNION
+    graph, so static per-edge machinery (permute/ppermute colorings)
+    covers every edge the traced adjacencies can activate.  A dropout-only
+    scenario keeps the base adjacency as a per-round CONSTANT — the
+    Bernoulli mask is drawn in-step from ``fold_in(drop_key, round)``, so
+    no per-round stack is ever materialized host-side.
+    """
     if scenario is None or not scenario.dynamic:
-        return None, graph
+        return None, None, 0.0, None, graph
+    if adj_seeds is not None:
+        raise ValueError(
+            "per-seed graphs and a dynamic scenario schedule are "
+            "mutually exclusive (one traced adjacency per step)"
+        )
     _require_dynamic_graph(m, "dynamic-topology scenarios")
-    base = graph
-    if base is None and scenario.graph_schedule is None:
-        from repro.graphs.topology import make_graph
+    drop_p = float(scenario.dropout)
+    drop_key = (jax.random.PRNGKey(int(scenario.seed))
+                if drop_p > 0.0 else None)
+    if scenario.graph_schedule is None:
+        base = graph
+        if base is None:
+            from repro.graphs.topology import make_graph
 
-        base = make_graph(exp.graph_kind, data.n_clients, exp.avg_degree,
-                          seed=seed)
-    stack, union = scenario.resolve(base, exp.rounds)
-    return jnp.asarray(stack), union
+            base = make_graph(exp.graph_kind, data.n_clients,
+                              exp.avg_degree, seed=seed)
+        return None, jnp.asarray(base.adj, jnp.float32), drop_p, drop_key, \
+            base
+    stack = scenario.schedule_stack(exp.rounds)
+    return jnp.asarray(stack), None, drop_p, drop_key, union_graph(stack)
 
 
-def _n_compiles(step) -> int:
+def _n_compiles(fn) -> int:
     """Jit cache size — diagnostic only: _cache_size is a private jax API,
     so don't let its absence on other jax versions fail a finished run."""
     try:
-        return int(getattr(step, "_cache_size", lambda: -1)())
+        return int(getattr(fn, "_cache_size", lambda: -1)())
     except Exception:
         return -1
 
@@ -165,16 +183,16 @@ def _wire_bytes(ctx: ExperimentContext, logical: float) -> float:
 
 
 def _donate_argnums(options: dict) -> tuple:
-    """The round step is jitted with the state argument donated by default:
-    the (S, N, X) plane (or pytree state) is aliased input→output, so the
-    round updates it in place instead of allocating a second copy each
-    call. ``options={"donate": False}`` opts out (e.g. when a caller holds
-    onto intermediate states)."""
+    """The round program is jitted with the state argument donated by
+    default: the (S, N, X) plane (or pytree state) is aliased
+    input→output, so each round (or the whole scan carry) updates it in
+    place instead of allocating a second copy. ``RunConfig(donate=False)``
+    opts out (e.g. when a caller holds onto intermediate states)."""
     return (0,) if options.get("donate", True) else ()
 
 
 def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
-            curve, t0, n_compiles=None) -> RunResult:
+            curve, t0, n_compiles=None, n_dispatches=None) -> RunResult:
     comm_model = method.comm_model(ctx)
     if comm_model.kind == "tracked":
         comm = float(state.comm_bytes)
@@ -183,6 +201,8 @@ def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
     extras = method.extras(ctx, state, aux)
     if n_compiles is not None:
         extras["n_compiles"] = n_compiles
+    if n_dispatches is not None:
+        extras["n_dispatches"] = n_dispatches
     acc = np.asarray(acc)
     return RunResult(
         method=method.name,
@@ -197,72 +217,315 @@ def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
     )
 
 
+# --------------------------------------------------------------------------
+# Cohort subsampling (RunConfig.cohort_size)
+# --------------------------------------------------------------------------
+
+
+def _cohort_indices(key, n: int, k: int) -> jnp.ndarray:
+    """This round's active cohort: K of N clients, SORTED so gather and
+    scatter are order-stable and inactive rows come back bit-untouched."""
+    return jnp.sort(jax.random.permutation(key, n)[:k])
+
+
+def _cohort_step(step, axes):
+    """Run a dynamic-graph step on a compact K-client cohort.
+
+    ``axes`` maps each state field to its client axis (None = global
+    field, threaded through whole — round counter, key, comm counter).
+    The wrapper gathers the active rows of the state, the training data,
+    and the adjacency minor, runs the UNCHANGED step at size K, and
+    scatters the results back; comm accounting inside the step sees the
+    (K, K) sub-adjacency, so inactive clients cost zero wire bytes."""
+
+    def take(v, ax, idx):
+        return v if v is None or ax is None else jnp.take(v, idx, axis=ax)
+
+    def put(full, sub, ax, idx):
+        if full is None or ax is None:
+            return sub
+        if ax == 0:
+            return full.at[idx].set(sub)
+        return full.at[(slice(None),) * ax + (idx,)].set(sub)
+
+    def stepc(state, train, key, lr, adj, active):
+        sub = type(state)(*(take(v, a, active)
+                            for v, a in zip(state, axes)))
+        sub_train = jax.tree.map(lambda l: jnp.take(l, active, axis=0),
+                                 train)
+        sub_adj = jnp.take(jnp.take(adj, active, axis=0), active, axis=1)
+        sub, aux = step(sub, sub_train, key, lr, sub_adj)
+        new = type(state)(*(put(v, s, a, active)
+                            for v, s, a in zip(state, sub, axes)))
+        return new, aux
+
+    return stepc
+
+
+# --------------------------------------------------------------------------
+# The shared driver
+# --------------------------------------------------------------------------
+
+
+def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
+           seeds, cfg: RunConfig):
+    t0 = time.time()
+    batched = entry == "run_method_batch"
+    m = get_method(method)
+    options = cfg.resolve_options()
+    _check_param_plane(m, options)
+    scenario = cfg.scenario
+    rounds, eval_every = exp.rounds, cfg.eval_every
+
+    # ---- data / graph / scenario resolution --------------------------------
+    adj_seeds = None
+    if batched:
+        seeds = tuple(int(s) for s in seeds)
+        if scenario is not None and scenario.data_stack \
+                and isinstance(data, ClientDataset):
+            raise ValueError(
+                f"{entry}: scenario.data_stack=True needs a per-seed "
+                "sequence of datasets in `data`"
+            )
+        base_data, train_stack, test_stack = _stack_data(data, seeds, entry)
+        adj_seeds, graph = _stack_graphs(m, graph, seeds, entry)
+    else:
+        seeds = (int(seeds),)
+        base_data, train_stack, test_stack = data, None, None
+
+    adj_rounds, adj_const, drop_p, drop_key, graph = _resolve_scenario(
+        m, scenario, graph, exp, base_data, seeds[0], adj_seeds=adj_seeds
+    )
+    ctx = build_context(base_data, exp, graph=graph, seed=seeds[0],
+                        options=options)
+    lr_at = _lr_schedule(exp)
+    # lr precomputed host-side as an f32 tape: the loop indexes it, the
+    # scan consumes it as xs — both engines see bit-identical rates
+    lrs = np.asarray([lr_at(r) for r in range(rounds)], np.float32)
+
+    # ---- keys & per-seed state init ----------------------------------------
+    data_ax = None if train_stack is None else 0
+    train_arg = ctx.train if train_stack is None else train_stack
+    test_arg = ctx.test if test_stack is None else test_stack
+    if batched:
+        seed_keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+        split3 = jax.vmap(lambda k: jax.random.split(k, 3))(seed_keys)
+        k_init, k_run, k_eval = split3[:, 0], split3[:, 1], split3[:, 2]
+        states = jax.vmap(
+            lambda k, tr: m.init(ctx, k, train=tr), in_axes=(0, data_ax)
+        )(k_init, train_arg)
+        # canonicalize weak types: an init-only weak-typed leaf (e.g. a
+        # jnp.full without dtype) would force a second jit compile at
+        # round 2 (and break the scan carry's aval match)
+        states = jax.tree.map(lambda l: l.astype(l.dtype), states)
+    else:
+        key = jax.random.PRNGKey(seeds[0])
+        k_init, k_run, k_eval = jax.random.split(key, 3)
+        states = m.init(ctx, k_init)
+
+    # ---- cohort subsampling ------------------------------------------------
+    cohort = cfg.cohort_size
+    cohort_key = None
+    base_step = m.make_step(ctx)
+    if cohort is not None:
+        cohort = int(cohort)
+        axes = m.cohort_axes(ctx, states)
+        if not 0 < cohort <= ctx.n_clients:
+            raise ValueError(
+                f"{entry}: cohort_size={cohort} must be in 1..N="
+                f"{ctx.n_clients}"
+            )
+        _require_dynamic_graph(m, "cohort subsampling")
+        # cohort stream: deterministic per (seed, round) — fold_in(r) in
+        # the program keeps loop and scan on the identical cohorts
+        cohort_key = jax.random.fold_in(jax.random.PRNGKey(seeds[0]),
+                                        0x5EED)
+        base_step = _cohort_step(base_step, axes)
+        if adj_seeds is None and adj_rounds is None and adj_const is None:
+            adj_const = jnp.asarray(ctx.graph.adj, jnp.float32)
+
+    # ---- normalized closures shared by both engines ------------------------
+    has_adj = (adj_seeds is not None or adj_rounds is not None
+               or adj_const is not None)
+    extra_axes = ()
+    if has_adj:
+        extra_axes += (0 if adj_seeds is not None else None,)
+    if cohort is not None:
+        extra_axes += (None,)
+    if batched:
+        step0 = jax.vmap(base_step,
+                         in_axes=(0, data_ax, 0, None) + extra_axes)
+    else:
+        step0 = base_step
+
+    def round_call(states, train, k, lr, extra):
+        return step0(states, train, k, lr, *extra)
+
+    def round_extra(adj, r):
+        """This round's traced extras: in-step Bernoulli link dropout
+        (key ⊕ round) and the active-cohort gather indices."""
+        ex = ()
+        if has_adj:
+            if drop_p > 0.0:
+                adj = bernoulli_drop(
+                    adj, jax.random.fold_in(drop_key, r), drop_p
+                )
+            ex += (adj,)
+        if cohort is not None:
+            ex += (_cohort_indices(
+                jax.random.fold_in(cohort_key, r), ctx.n_clients, cohort
+            ),)
+        return ex
+
+    adj_static = adj_seeds if adj_seeds is not None else adj_const
+
+    def split_run(kr):
+        if batched:
+            ks = jax.vmap(jax.random.split)(kr)
+            return ks[:, 0], ks[:, 1]
+        kr, k = jax.random.split(kr)
+        return kr, k
+
+    if batched:
+        eval_vm = jax.vmap(
+            lambda state, ke, on, tr: m.evaluate(ctx, state, ke, on,
+                                                 train=tr),
+            in_axes=(0, 0, data_ax, data_ax),
+        )
+        evaluate = jax.jit(eval_vm)
+
+    curves = [[] for _ in seeds]
+    aux = None
+
+    # ---- engine A: lax.scan-rolled whole experiment ------------------------
+    if cfg.scan_rounds:
+        xs = {"r": jnp.arange(rounds, dtype=jnp.int32),
+              "lr": jnp.asarray(lrs)}
+        if adj_rounds is not None:
+            xs["adj"] = adj_rounds
+        nan_acc = (jnp.full((len(seeds),), jnp.nan, jnp.float32) if batched
+                   else jnp.asarray(jnp.nan, jnp.float32))
+
+        def eval_mean(op):
+            # the cond sits OUTSIDE the vmapped region (do_eval depends
+            # only on the round index, shared by every seed), so skipped
+            # rounds genuinely skip the eval computation
+            sts, train = op
+            if batched:
+                return jnp.mean(eval_vm(sts, k_eval, train, train),
+                                axis=-1)
+            return jnp.mean(m.evaluate(ctx, sts, k_eval, train))
+
+        def program(states, train, kr, xs):
+            def body(carry, x):
+                sts, kr = carry
+                kr, k = split_run(kr)
+                a = x["adj"] if adj_rounds is not None else adj_static
+                sts, _ = round_call(sts, train, k, x["lr"],
+                                    round_extra(a, x["r"]))
+                do = jnp.logical_or(x["r"] % eval_every == 0,
+                                    x["r"] == rounds - 1)
+                acc = jax.lax.cond(do, eval_mean, lambda op: nan_acc,
+                                   (sts, train))
+                return (sts, kr), acc
+
+            (states, kr), accs = jax.lax.scan(body, (states, kr), xs)
+            return states, accs
+
+        runner = jax.jit(program, donate_argnums=_donate_argnums(options))
+        if not batched:
+            states = jax.tree.map(lambda l: l.astype(l.dtype), states)
+        states, accs_tape = runner(states, train_arg, k_run, xs)
+        accs_tape = np.asarray(accs_tape)   # (rounds,) or (rounds, k)
+        for r in range(rounds):
+            if r % eval_every == 0 or r == rounds - 1:
+                for i in range(len(seeds)):
+                    v = accs_tape[r, i] if batched else accs_tape[r]
+                    curves[i].append((r, float(v)))
+        n_compiles, n_disp = _n_compiles(runner), 1
+
+    # ---- engine B: the historical Python loop ------------------------------
+    else:
+        step_jit = jax.jit(round_call,
+                           donate_argnums=_donate_argnums(options))
+        n_disp = 0
+        for r in range(rounds):
+            k_run, k = split_run(k_run)
+            a = adj_rounds[r] if adj_rounds is not None else adj_static
+            states, aux = step_jit(states, train_arg, k, lrs[r],
+                                   round_extra(a, r))
+            n_disp += 1
+            if r % eval_every == 0 or r == rounds - 1:
+                if batched:
+                    train_acc = evaluate(states, k_eval, train_arg,
+                                         train_arg)
+                    for i in range(len(seeds)):
+                        curves[i].append((r, float(jnp.mean(train_acc[i]))))
+                else:
+                    train_acc = m.evaluate(ctx, states, k_eval, ctx.train)
+                    curves[0].append((r, float(jnp.mean(train_acc))))
+        n_compiles = _n_compiles(step_jit)
+
+    # ---- final test eval + per-seed results --------------------------------
+    if batched:
+        accs = np.asarray(evaluate(states, k_eval, test_arg, train_arg))
+    else:
+        accs = np.asarray(m.evaluate(ctx, states, k_eval, ctx.test))[None]
+    results = []
+    for i in range(len(seeds)):
+        if batched:
+            state_i = jax.tree.map(lambda l: l[i], states)
+            aux_i = jax.tree.map(lambda l: l[i], aux) if aux else aux
+        else:
+            state_i, aux_i = states, aux
+        results.append(
+            _result(m, ctx, state_i, aux_i, accs[i], curves[i], t0,
+                    n_compiles=n_compiles, n_dispatches=n_disp)
+        )
+    return results if batched else results[0]
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+
 def run_method(
     method: str,
     data: ClientDataset,
     exp: PaperExpConfig,
     graph: Graph | None = None,
     seed: int = 0,
-    eval_every: int = 10,
-    gossip_mode: str | None = None,
-    gossip_backend: str | None = None,
-    param_plane: bool | None = None,
-    comm=None,
-    scenario: Scenario | None = None,
-    options: dict | None = None,
+    cfg: RunConfig | None = None,
+    *,
+    eval_every=_UNSET,
+    gossip_mode=_UNSET,
+    gossip_backend=_UNSET,
+    param_plane=_UNSET,
+    comm=_UNSET,
+    scenario=_UNSET,
+    options=_UNSET,
 ) -> RunResult:
     """Run one method for ``exp.rounds`` rounds; returns RunResult.
 
-    ``gossip_mode`` (FedSPD) / ``gossip_backend`` / ``param_plane`` /
-    ``comm`` are conveniences forwarded into ``options``
-    ("dense"/"permute" wiring; "reference"/"pallas"/"ppermute" execution;
-    packed (S, N, X) plane vs pytree state — valid for EVERY method id,
-    ValueError for adapters that have not opted in; comm/codecs.CommConfig
-    wire codec — valid for every method id, implies ``param_plane=True``
-    for compressing codecs, and reported as ``RunResult.wire_bytes``
-    alongside the logical ``comm_bytes``).  Arbitrary per-method knobs go
-    through ``options``; ``options={"donate": False}`` disables the
-    default in-place state donation of the jitted round step.
-
-    ``scenario`` (experiments/scenarios.py) activates the dynamic-topology
-    engine: the resolved (rounds, N, N) adjacency stack is fed to the step
-    one TRACED (N, N) slice per round — time-varying rewire schedules and
-    Bernoulli link dropout run through ONE jit compile
-    (``extras["n_compiles"]`` records the cache size), and dropped links
-    cost zero wire bytes in the comm accounting.
+    All execution configuration lives in ``cfg`` (experiments/config.py's
+    ``RunConfig``): gossip wiring and backend, the packed (S, N, X)
+    parameter plane, the wire codec, dynamic-topology scenarios, eval
+    cadence, state donation, the lax.scan-rolled round engine
+    (``scan_rounds=True`` — one compile and one dispatch for the whole
+    experiment), and per-round client subsampling (``cohort_size``).  The
+    keyword-only loose kwargs are the PRE-RunConfig API, kept as
+    DeprecationWarning shims.
     """
-    t0 = time.time()
-    m = get_method(method)
-    options = _merge_options(options, gossip_mode, gossip_backend,
-                             param_plane, comm)
-    _check_param_plane(m, options)
-    adj_rounds, graph = _resolve_scenario(m, scenario, graph, exp, data, seed)
-    ctx = build_context(data, exp, graph=graph, seed=seed, options=options)
-
-    key = jax.random.PRNGKey(seed)
-    k_init, k_run, k_eval = jax.random.split(key, 3)
-    state = m.init(ctx, k_init)
-    step = jax.jit(m.make_step(ctx), donate_argnums=_donate_argnums(options))
-    lr_at = _lr_schedule(exp)
-
-    curve = []
-    aux = None
-    for r in range(exp.rounds):
-        k_run, k = jax.random.split(k_run)
-        if adj_rounds is None:
-            state, aux = step(state, ctx.train, k, lr_at(r))
-        else:
-            state, aux = step(state, ctx.train, k, lr_at(r), adj_rounds[r])
-        if r % eval_every == 0 or r == exp.rounds - 1:
-            train_acc = m.evaluate(ctx, state, k_eval, ctx.train)
-            curve.append((r, float(jnp.mean(train_acc))))
-
-    acc = m.evaluate(ctx, state, k_eval, ctx.test)
-    return _result(m, ctx, state, aux, acc, curve, t0,
-                   n_compiles=_n_compiles(step))
+    cfg = _coerce_cfg(cfg, dict(
+        eval_every=eval_every, gossip_mode=gossip_mode,
+        gossip_backend=gossip_backend, param_plane=param_plane, comm=comm,
+        scenario=scenario, options=options,
+    ), "run_method")
+    return _drive("run_method", method, data, exp, graph, seed, cfg)
 
 
-def _stack_graphs(m: Method, graph, seeds):
+def _stack_graphs(m: Method, graph, seeds, entry: str):
     """Per-seed graphs (a sequence in ``graph``): stacked into a (k, N, N)
     traced adjacency vmapped over the seed axis; the context gets the
     union graph (static machinery must cover every seed's edges)."""
@@ -271,15 +534,15 @@ def _stack_graphs(m: Method, graph, seeds):
     graphs = list(graph)
     if len(graphs) != len(seeds):
         raise ValueError(
-            f"per-seed graphs: got {len(graphs)} graphs for "
-            f"{len(seeds)} seeds"
+            f"{entry}: per-seed graphs: got {len(graphs)} graphs for "
+            f"{len(seeds)} seeds {tuple(seeds)}"
         )
     _require_dynamic_graph(m, "per-seed graphs")
     adj = np.stack([g.adj for g in graphs]).astype(np.float32)
     return jnp.asarray(adj), union_graph(adj)
 
 
-def _stack_data(data, seeds):
+def _stack_data(data, seeds, entry: str):
     """The stacked-data variant: ``data`` as a per-seed sequence of
     ClientDatasets becomes (k, N, M, ...) train/test stacks mapped over
     the seed axis (the paper's per-seed-dataset repeated-trials
@@ -289,16 +552,18 @@ def _stack_data(data, seeds):
     datasets = list(data)
     if len(datasets) != len(seeds):
         raise ValueError(
-            f"stacked data: got {len(datasets)} datasets for "
-            f"{len(seeds)} seeds"
+            f"{entry}: stacked data: got {len(datasets)} datasets for "
+            f"{len(seeds)} seeds {tuple(seeds)}"
         )
-    for d in datasets[1:]:
+    for i, d in enumerate(datasets[1:], start=1):
         if (d.x.shape != datasets[0].x.shape
                 or d.n_classes != datasets[0].n_classes
                 or d.n_clusters != datasets[0].n_clusters):
             raise ValueError(
-                "stacked datasets must share shapes/classes/clusters "
-                "(one fused XLA program runs every seed)"
+                f"{entry}: stacked datasets must share shapes/classes/"
+                f"clusters (one fused XLA program runs every seed) — the "
+                f"dataset at seed index {i} (seed {seeds[i]}) differs "
+                f"from seed index 0"
             )
     train = {
         "inputs": jnp.asarray(np.stack([d.x for d in datasets])),
@@ -317,25 +582,26 @@ def run_method_batch(
     exp: PaperExpConfig,
     seeds=(0, 1, 2),
     graph: Graph | None = None,
-    eval_every: int = 10,
-    gossip_mode: str | None = None,
-    gossip_backend: str | None = None,
-    param_plane: bool | None = None,
-    comm=None,
-    scenario: Scenario | None = None,
-    options: dict | None = None,
+    cfg: RunConfig | None = None,
+    *,
+    eval_every=_UNSET,
+    gossip_mode=_UNSET,
+    gossip_backend=_UNSET,
+    param_plane=_UNSET,
+    comm=_UNSET,
+    scenario=_UNSET,
+    options=_UNSET,
 ) -> list[RunResult]:
     """Multi-seed batched execution: ONE jit compile shared by all seeds.
 
     The per-seed state pytrees are stacked on a leading seed axis; the
     method's step runs under ``jax.vmap`` inside a single ``jax.jit``, so
     round r of every seed executes as one fused XLA program.  Returns one
-    RunResult per seed; ``extras["n_compiles"]`` records the jit cache
-    size (1 = shared).
-
-    Accepts the same convenience kwargs as ``run_method`` (``gossip_mode``,
-    ``gossip_backend``, ``param_plane``, ``comm``) — the two entry points
-    take identical configuration.
+    RunResult per seed.  Takes the IDENTICAL ``RunConfig`` as
+    ``run_method`` — including ``scan_rounds=True`` (the vmapped round
+    body rolls into the same lax.scan) — and reports
+    ``extras["n_compiles"]`` identically (a single-seed batch matches
+    ``run_method`` exactly).
 
     Three batching axes compose:
 
@@ -350,91 +616,9 @@ def run_method_batch(
       graph). A dynamic ``scenario`` instead feeds one (N, N) slice of
       its (rounds, N, N) schedule per round, shared by every seed.
     """
-    t0 = time.time()
-    m = get_method(method)
-    options = _merge_options(options, gossip_mode, gossip_backend,
-                             param_plane, comm)
-    _check_param_plane(m, options)
-    if scenario is not None and scenario.data_stack \
-            and isinstance(data, ClientDataset):
-        raise ValueError(
-            "scenario.data_stack=True needs a per-seed sequence of "
-            "datasets in `data`"
-        )
-    base_data, train_stack, test_stack = _stack_data(data, seeds)
-    adj_seeds, graph = _stack_graphs(m, graph, seeds)
-    adj_rounds = None
-    if scenario is not None and scenario.dynamic:
-        if adj_seeds is not None:
-            raise ValueError(
-                "per-seed graphs and a dynamic scenario schedule are "
-                "mutually exclusive (one traced adjacency per step)"
-            )
-        adj_rounds, graph = _resolve_scenario(
-            m, scenario, graph, exp, base_data, int(seeds[0])
-        )
-    ctx = build_context(base_data, exp, graph=graph, seed=int(seeds[0]),
-                        options=options)
-    lr_at = _lr_schedule(exp)
-
-    data_ax = None if train_stack is None else 0
-    train_arg = ctx.train if train_stack is None else train_stack
-    test_arg = ctx.test if test_stack is None else test_stack
-
-    seed_keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    split3 = jax.vmap(lambda k: jax.random.split(k, 3))(seed_keys)  # (k, 3, 2)
-    k_init, k_run, k_eval = split3[:, 0], split3[:, 1], split3[:, 2]
-
-    states = jax.vmap(
-        lambda k, tr: m.init(ctx, k, train=tr), in_axes=(0, data_ax)
-    )(k_init, train_arg)
-    # canonicalize weak types: an init-only weak-typed leaf (e.g. a
-    # jnp.full without dtype) would force a second jit compile at round 2
-    states = jax.tree.map(lambda l: l.astype(l.dtype), states)
-    base_step = m.make_step(ctx)
-    if adj_seeds is None and adj_rounds is None:
-        step = jax.jit(
-            jax.vmap(base_step, in_axes=(0, data_ax, 0, None)),
-            donate_argnums=_donate_argnums(options),
-        )
-    else:
-        adj_ax = 0 if adj_seeds is not None else None
-        step = jax.jit(
-            jax.vmap(base_step, in_axes=(0, data_ax, 0, None, adj_ax)),
-            donate_argnums=_donate_argnums(options),
-        )
-    evaluate = jax.jit(
-        jax.vmap(
-            lambda state, key, on, tr: m.evaluate(ctx, state, key, on,
-                                                  train=tr),
-            in_axes=(0, 0, data_ax, data_ax),
-        )
-    )
-
-    curves = [[] for _ in seeds]
-    aux = None
-    for r in range(exp.rounds):
-        ks = jax.vmap(jax.random.split)(k_run)
-        k_run, k = ks[:, 0], ks[:, 1]
-        if adj_seeds is not None:
-            states, aux = step(states, train_arg, k, lr_at(r), adj_seeds)
-        elif adj_rounds is not None:
-            states, aux = step(states, train_arg, k, lr_at(r), adj_rounds[r])
-        else:
-            states, aux = step(states, train_arg, k, lr_at(r))
-        if r % eval_every == 0 or r == exp.rounds - 1:
-            train_acc = evaluate(states, k_eval, train_arg, train_arg)
-            for i in range(len(seeds)):
-                curves[i].append((r, float(jnp.mean(train_acc[i]))))
-
-    accs = np.asarray(evaluate(states, k_eval, test_arg, train_arg))  # (k, N)
-    n_compiles = _n_compiles(step)
-    results = []
-    for i, _ in enumerate(seeds):
-        state_i = jax.tree.map(lambda l: l[i], states)
-        aux_i = jax.tree.map(lambda l: l[i], aux) if aux else aux
-        results.append(
-            _result(m, ctx, state_i, aux_i, accs[i], curves[i], t0,
-                    n_compiles=n_compiles)
-        )
-    return results
+    cfg = _coerce_cfg(cfg, dict(
+        eval_every=eval_every, gossip_mode=gossip_mode,
+        gossip_backend=gossip_backend, param_plane=param_plane, comm=comm,
+        scenario=scenario, options=options,
+    ), "run_method_batch")
+    return _drive("run_method_batch", method, data, exp, graph, seeds, cfg)

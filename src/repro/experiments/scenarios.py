@@ -12,12 +12,16 @@ Tables 2–3 — into one declarative object the experiment driver
 - ``graph_schedule``: a per-round topology sequence
   (graphs/topology.GraphSchedule, e.g. ``rewire_schedule(...)``), or a raw
   (rounds, N, N) adjacency stack. The round step receives each round's
-  (N, N) matrix as a TRACED argument (core/fedspd.make_round_step), so the
-  whole schedule — and a 10-round rewire sweep — costs ONE jit compile.
+  (N, N) matrix as a TRACED argument (core/fedspd.make_round_step); under
+  ``RunConfig(scan_rounds=True)`` the whole stack rides the scan xs — so a
+  rewire sweep costs ONE jit compile either way.
 - ``dropout``: per-round Bernoulli link failures on top of whatever the
-  schedule (or the static graph) provides. Masked rows are renormalized
-  inside the step and the comm accounting charges only surviving links —
-  a dropped edge costs zero wire bytes.
+  schedule (or the static graph) provides. The mask is drawn IN-STEP from
+  ``fold_in(PRNGKey(seed), round)`` (``bernoulli_drop`` below) — no
+  host-side (rounds, N, N) stack is materialized, and the Python-loop and
+  scan-rolled engines see the identical mask stream. Masked rows are
+  renormalized inside the step and the comm accounting charges only
+  surviving links — a dropped edge costs zero wire bytes.
 - ``data_stack``: marks a ``run_method_batch`` call whose ``data`` is a
   per-seed sequence of datasets (the old table23 protocol: k seeds ×
   k datasets × k graphs in one compile). Passing a list of datasets
@@ -25,31 +29,51 @@ Tables 2–3 — into one declarative object the experiment driver
 
 Static per-edge machinery (the permute/ppermute edge coloring, the
 shard_map collective schedule) is built once from the UNION graph over the
-whole schedule; each round's traced adjacency masks the inactive edges.
+whole PRE-dropout schedule; each round's traced adjacency masks the
+inactive edges.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.topology import (
     Graph,
     GraphSchedule,
-    drop_edges,
+    stack_schedule,
     union_graph,
 )
+
+
+def bernoulli_drop(adj: jnp.ndarray, key: jax.Array,
+                   p: float) -> jnp.ndarray:
+    """One round of TRACED Bernoulli link failures (the in-step analogue
+    of graphs/topology.drop_edges): each undirected off-diagonal link of
+    ``adj`` drops with probability ``p``; one draw per edge (failures are
+    symmetric), diagonal kept (a client always keeps its own model). The
+    driver calls this with ``fold_in(PRNGKey(scenario.seed), round)``, so
+    the mask stream is a pure function of (scenario seed, round index) —
+    identical under the Python-loop and lax.scan engines."""
+    n = adj.shape[-1]
+    u = jnp.triu(jax.random.uniform(key, (n, n), jnp.float32), k=1)
+    u = u + u.T
+    keep = (u >= p).astype(adj.dtype)
+    return adj * jnp.maximum(keep, jnp.eye(n, dtype=adj.dtype))
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """Declarative experiment scenario; see the module docstring.
 
-    ``seed`` drives the dropout mask stream (the graph schedule carries its
-    own seed). ``resolve`` turns the scenario into the driver's traced
-    inputs: a (rounds, N, N) per-round adjacency stack plus the union graph
-    the static machinery is built from.
+    ``seed`` drives the in-step dropout mask stream (the graph schedule
+    carries its own seed). ``schedule_stack``/``resolve`` turn the
+    scenario into the driver's traced inputs: a PRE-dropout
+    (rounds, N, N) adjacency stack plus the union graph the static
+    machinery is built from.
     """
 
     graph_schedule: Any = None   # GraphSchedule | (rounds, N, N) ndarray
@@ -63,35 +87,30 @@ class Scenario:
         the traced-adjacency round step)."""
         return self.graph_schedule is not None or self.dropout > 0.0
 
-    def _schedule_stack(self, rounds: int) -> Optional[np.ndarray]:
+    def schedule_stack(self, rounds: int) -> np.ndarray | None:
+        """The (rounds, N, N) PRE-dropout schedule (None without one).
+        Shorter schedules cycle (a schedule is a topology PROCESS, not a
+        fixed-length tape); longer ones are cropped to the run."""
         if self.graph_schedule is None:
             return None
         adjs = (self.graph_schedule.adjs
                 if isinstance(self.graph_schedule, GraphSchedule)
                 else np.asarray(self.graph_schedule, dtype=np.float32))
-        if adjs.ndim != 3 or adjs.shape[1] != adjs.shape[2]:
-            raise ValueError(
-                f"graph_schedule must stack (rounds, N, N) adjacencies; "
-                f"got shape {adjs.shape}"
-            )
-        # shorter schedules cycle (a schedule is a topology PROCESS, not a
-        # fixed-length tape); longer ones are cropped to the run
-        reps = -(-rounds // adjs.shape[0])
-        return np.tile(adjs, (reps, 1, 1))[:rounds]
+        return stack_schedule(adjs, rounds)
 
-    def resolve(self, graph: Optional[Graph],
+    def resolve(self, graph: Graph | None,
                 rounds: int) -> tuple[np.ndarray, Graph]:
-        """(rounds, N, N) traced adjacency stack + the union graph.
+        """(rounds, N, N) PRE-dropout adjacency stack + the union graph.
 
         ``graph`` is the static base topology, required when the scenario
         has no ``graph_schedule`` (dropout-only scenarios mask it).
-        The union is taken over the PRE-dropout schedule: dropout models
-        transient link failures, so the wiring (edge colorings, collective
-        schedules) must cover every link that can come back.
+        Dropout is NOT applied here — it is a key-derived in-step draw
+        (``bernoulli_drop``), so the wiring (edge colorings, collective
+        schedules) is built from every link that can come back.
         """
         if not self.dynamic:
             raise ValueError("static scenario: nothing to resolve")
-        stack = self._schedule_stack(rounds)
+        stack = self.schedule_stack(rounds)
         if stack is None:
             if graph is None:
                 raise ValueError(
@@ -100,9 +119,5 @@ class Scenario:
             stack = np.broadcast_to(
                 graph.adj, (rounds,) + graph.adj.shape
             ).astype(np.float32)
-        union = union_graph(stack)
-        if self.dropout > 0.0:
-            rng = np.random.default_rng(self.seed)
-            stack = np.stack([drop_edges(a, self.dropout, rng)
-                              for a in stack])
-        return np.ascontiguousarray(stack, dtype=np.float32), union
+        return np.ascontiguousarray(stack, dtype=np.float32), \
+            union_graph(stack)

@@ -236,6 +236,21 @@ class GraphSchedule:
         return union_graph(self.adjs)
 
 
+def stack_schedule(adjs: np.ndarray, rounds: int) -> np.ndarray:
+    """Cycle/crop a stacked schedule to exactly ``rounds`` (rounds, N, N)
+    matrices — the scan xs / per-round traced slices the experiment
+    driver consumes. Shorter schedules cycle (a schedule is a topology
+    PROCESS, not a fixed-length tape); longer ones are cropped."""
+    adjs = np.asarray(adjs, dtype=np.float32)
+    if adjs.ndim != 3 or adjs.shape[1] != adjs.shape[2]:
+        raise ValueError(
+            f"graph_schedule must stack (rounds, N, N) adjacencies; "
+            f"got shape {adjs.shape}"
+        )
+    reps = -(-rounds // adjs.shape[0])
+    return np.ascontiguousarray(np.tile(adjs, (reps, 1, 1))[:rounds])
+
+
 def rewire_schedule(
     kind: str, n: int, avg_degree: float, rounds: int,
     p_rewire: float = 0.3, seed: int = 0,

@@ -5,6 +5,16 @@ rounds (default): models are packed once after init, every round's step is
 jitted with the state donated (the plane is aliased in place, no per-round
 copy), and parameters re-enter pytree form only at the final personalize /
 checkpoint boundary. ``--pytree`` selects the historical per-leaf engine.
+``--scan-rounds`` folds the whole ``--rounds``-round stream into ONE
+lax.scan-rolled jitted program (batch sampling traced in the scan body,
+per-round metrics returned as scan ys, the plane donated into the single
+dispatch) — the launcher-side twin of ``RunConfig(scan_rounds=True)`` on
+the registry entry points.
+
+Execution knobs flow through the same ``RunConfig`` the registry entry
+points take (experiments/config.py): the argparse flags build one and the
+launcher consumes its resolved options, so codec/plane compatibility rules
+are enforced by the exact code path ``run_method`` uses.
 
 Two placement modes:
 
@@ -37,6 +47,7 @@ from repro.core.fedspd import FedSPDConfig, init_state, personalize
 from repro.core.gossip import GossipSpec, make_mix_fn
 from repro.core.packing import make_pack_spec, pack_state
 from repro.data.synthetic import make_mixture_tokens
+from repro.experiments.config import RunConfig
 from repro.graphs.topology import make_graph
 from repro.models.registry import build_model
 
@@ -74,6 +85,10 @@ def main(argv=None):
     ap.add_argument("--no-donate", dest="donate", action="store_false",
                     default=True,
                     help="disable in-place state donation across rounds")
+    ap.add_argument("--scan-rounds", action="store_true",
+                    help="roll ALL rounds into one lax.scan-rolled jitted "
+                         "program: one compile, one dispatch; per-round "
+                         "metrics come back as scan ys")
     ap.add_argument("--mesh", default="none", choices=["none", "pod", "2pod"],
                     help="shard the plane's client axis over the production "
                          "mesh rows (requires the packed plane and one "
@@ -95,12 +110,26 @@ def main(argv=None):
     bundle = build_model(cfg, attn_mode="ref" if args.smoke else "blocked")
     n, s = args.clients, args.clusters
 
+    # one RunConfig carries every execution knob, same as the registry
+    # entry points; resolve_options() enforces codec/plane compatibility
+    comm = CommConfig(codec=args.codec, block=args.codec_block,
+                      error_feedback=args.error_feedback)
+    run_cfg = RunConfig(
+        gossip_mode=args.gossip_mode, gossip_backend=args.gossip_backend,
+        param_plane=args.param_plane, comm=comm, eval_every=args.eval_every,
+        donate=args.donate, scan_rounds=args.scan_rounds,
+    )
+    try:
+        opts = run_cfg.resolve_options()
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+
     fcfg = FedSPDConfig(
         n_clients=n, n_clusters=s, tau=args.tau, batch=args.batch,
         lr0=args.lr, regime="stream",
     )
     graph = make_graph(args.graph, n, args.avg_degree, seed=args.seed)
-    gossip = GossipSpec.from_graph(graph, mode=args.gossip_mode)
+    gossip = GossipSpec.from_graph(graph, mode=opts["mode"])
 
     key = jax.random.PRNGKey(args.seed)
     k_init, k_data = jax.random.split(key)
@@ -109,7 +138,7 @@ def main(argv=None):
     # packed plane: pack ONCE here; the loop below carries the (S, N, X)
     # buffer round to round (donated in place) — no re-packing per call
     pack_spec = None
-    if args.param_plane:
+    if opts["param_plane"]:
         pack_spec = make_pack_spec(
             jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
         )
@@ -117,14 +146,9 @@ def main(argv=None):
 
     # wire codec: the exchange ships encoded payloads; wire_ratio scales
     # the logical comm counter to physical bytes (static per model)
-    comm = CommConfig(codec=args.codec, block=args.codec_block,
-                      error_feedback=args.error_feedback)
     wire_ratio = 1.0
     channel = None
-    if args.codec != "fp32":
-        if pack_spec is None:
-            raise SystemExit("--codec requires the packed plane "
-                             "(drop --pytree)")
+    if comm.codec != "fp32":
         channel = make_channel(comm, pack_spec.size)
         wire_ratio = channel.wire_ratio(pack_spec.model_bytes)
         if channel.has_ef:
@@ -146,16 +170,19 @@ def main(argv=None):
             )
         state = shard_plane_state(state, mesh)
     else:
-        mix_fn = make_mix_fn(gossip, args.gossip_backend,
+        mix_fn = make_mix_fn(gossip, opts["gossip_backend"],
                              plane=pack_spec is not None, comm=comm)
 
     from repro.launch.steps import make_fedspd_train_step
 
+    # scan mode traces the raw step into one whole-run program and donates
+    # the state there instead of per dispatch
     step = make_fedspd_train_step(
         bundle, gossip, fcfg, mix_fn=mix_fn, pack_spec=pack_spec,
-        mesh=mesh, donate=args.donate, comm=comm,
+        mesh=mesh, donate=run_cfg.donate and not run_cfg.scan_rounds,
+        comm=comm,
     )
-    if not args.donate:
+    if not run_cfg.donate and not run_cfg.scan_rounds:
         step = jax.jit(step)
 
     # document pool: cluster-specific Markov chains (paper's mixture analogue)
@@ -166,37 +193,57 @@ def main(argv=None):
     docs = jnp.asarray(pool["tokens"])  # (N, D, L)
 
     def sample_batch(k):
+        # traceable (static shapes only): the scan body samples in-program
         idx = jax.random.randint(k, (n, args.batch), 0, docs.shape[1])
-        return {"tokens": jnp.take_along_axis(
-            docs, idx[:, :, None], axis=1)}
-
-    print(f"FedSPD: arch={cfg.name} N={n} S={s} graph={args.graph} "
-          f"deg={graph.avg_degree:.1f} gossip={args.gossip_mode} "
-          f"true-mix[0]={pool['mix_true'][0].round(2)}")
-    t0 = time.time()
-    for r in range(args.rounds):
-        k_data, kb = jax.random.split(k_data)
-        batch = sample_batch(kb)
+        batch = {"tokens": jnp.take_along_axis(docs, idx[:, :, None], axis=1)}
         if cfg.family == "audio":
             d_enc = cfg.encoder_d_model or cfg.d_model
             batch["frames"] = jnp.zeros(
                 (n, args.batch, cfg.encoder_frames or 16, d_enc), jnp.float32)
-        state, metrics = step(state, batch)
-        if r % args.eval_every == 0 or r == args.rounds - 1:
-            cons = np.asarray(metrics["consensus"])
-            logical = float(metrics["comm_bytes"])
-            print(f"round {r:4d}  lr={float(metrics['lr']):.4f}  "
-                  f"consensus={cons}  comm={logical:.3e}B  "
-                  f"wire={logical * wire_ratio:.3e}B  "
-                  f"({time.time()-t0:.1f}s)")
+        return batch
+
+    print(f"FedSPD: arch={cfg.name} N={n} S={s} graph={args.graph} "
+          f"deg={graph.avg_degree:.1f} gossip={opts['mode']} "
+          f"true-mix[0]={pool['mix_true'][0].round(2)}")
+    t0 = time.time()
+    if run_cfg.scan_rounds:
+        def body(carry, _):
+            st, k = carry
+            k, kb = jax.random.split(k)
+            st, metrics = step(st, sample_batch(kb))
+            return (st, k), metrics
+
+        def program(st, k):
+            return jax.lax.scan(body, (st, k), xs=None, length=args.rounds)
+
+        runner = jax.jit(
+            program, donate_argnums=(0,) if run_cfg.donate else ())
+        (state, k_data), tape = runner(state, k_data)
+        tape = jax.tree.map(np.asarray, tape)
+        for r in range(args.rounds):
+            if r % run_cfg.eval_every == 0 or r == args.rounds - 1:
+                logical = float(tape["comm_bytes"][r])
+                print(f"round {r:4d}  lr={float(tape['lr'][r]):.4f}  "
+                      f"consensus={tape['consensus'][r]}  "
+                      f"comm={logical:.3e}B  "
+                      f"wire={logical * wire_ratio:.3e}B")
+        print(f"scan-rolled: {args.rounds} rounds in one compiled program, "
+              f"one dispatch ({time.time() - t0:.1f}s)")
+    else:
+        for r in range(args.rounds):
+            k_data, kb = jax.random.split(k_data)
+            state, metrics = step(state, sample_batch(kb))
+            if r % run_cfg.eval_every == 0 or r == args.rounds - 1:
+                cons = np.asarray(metrics["consensus"])
+                logical = float(metrics["comm_bytes"])
+                print(f"round {r:4d}  lr={float(metrics['lr']):.4f}  "
+                      f"consensus={cons}  comm={logical:.3e}B  "
+                      f"wire={logical * wire_ratio:.3e}B  "
+                      f"({time.time()-t0:.1f}s)")
 
     personalized = personalize(state, pack_spec)  # pytree re-entry boundary
     k_data, kb = jax.random.split(k_data)
     eval_batch = sample_batch(kb)
-    if cfg.family == "audio":
-        d_enc = cfg.encoder_d_model or cfg.d_model
-        eval_batch["frames"] = jnp.zeros(
-            (n, args.batch, cfg.encoder_frames or 16, d_enc), jnp.float32)
     print("final mean per-client loss (personalized Eq.2): "
           f"{fl_perplexity(bundle, personalized, eval_batch):.4f}")
     print(f"mixture coefficients u:\n{np.asarray(state.u).round(3)}")

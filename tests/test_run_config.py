@@ -1,0 +1,178 @@
+"""RunConfig: the one configuration object behind both entry points.
+
+Covers the PR-6 API-redesign satellites: the deprecated loose kwargs warn
+and route through the identical driver, mixing the two styles errors,
+batch validation errors name the entry point and the offending seed
+index, ``extras["n_compiles"]`` is reported identically by both entry
+points, and NO caller inside src/ / benchmarks/ / examples/ still uses
+the loose kwargs (the call-site guard).
+"""
+import ast
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.data.synthetic import make_mixture_classification
+from repro.experiments import RunConfig, run_method, run_method_batch
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def setup():
+    exp = PaperExpConfig(n_clients=6, n_per_client=32, rounds=4, tau=1,
+                         batch=8, avg_degree=3.0, model="mlp", dim=8,
+                         n_classes=3)
+    data = make_mixture_classification(
+        n_clients=6, n_clusters=2, n_per_client=32, dim=8, n_classes=3,
+        seed=7, noise=0.3,
+    )
+    return exp, data
+
+
+# ------------------------------------------------------------------
+# resolve_options semantics
+# ------------------------------------------------------------------
+
+
+def test_typed_fields_fold_into_options():
+    opts = RunConfig(gossip_mode="permute", gossip_backend="pallas",
+                     param_plane=True).resolve_options()
+    assert opts == {"mode": "permute", "gossip_backend": "pallas",
+                    "param_plane": True}
+    # explicit options entries win over the typed shorthands
+    opts = RunConfig(gossip_backend="pallas",
+                     options={"gossip_backend": "reference"}
+                     ).resolve_options()
+    assert opts["gossip_backend"] == "reference"
+
+
+def test_compressing_codec_implies_param_plane():
+    opts = RunConfig(comm=CommConfig(codec="int8")).resolve_options()
+    assert opts["param_plane"] is True
+    with pytest.raises(ValueError, match="param_plane=False"):
+        RunConfig(comm=CommConfig(codec="int8"),
+                  param_plane=False).resolve_options()
+
+
+def test_run_config_is_frozen():
+    with pytest.raises(Exception):
+        RunConfig().eval_every = 5
+
+
+# ------------------------------------------------------------------
+# deprecation shims
+# ------------------------------------------------------------------
+
+
+def test_loose_kwargs_warn_and_match_cfg(setup):
+    exp, data = setup
+    with pytest.warns(DeprecationWarning, match="cfg=RunConfig"):
+        old = run_method("fedspd", data, exp, seed=0, eval_every=100,
+                         param_plane=True)
+    new = run_method("fedspd", data, exp, seed=0,
+                     cfg=RunConfig(eval_every=100, param_plane=True))
+    np.testing.assert_array_equal(old.acc_per_client, new.acc_per_client)
+    np.testing.assert_allclose(old.comm_bytes, new.comm_bytes, rtol=1e-9)
+
+
+def test_loose_kwargs_warn_on_batch_entry(setup):
+    exp, data = setup
+    with pytest.warns(DeprecationWarning, match="run_method_batch"):
+        rs = run_method_batch("fedspd", data, exp, seeds=(0,),
+                              eval_every=100)
+    assert np.isfinite(rs[0].mean_acc)
+
+
+def test_cfg_plus_loose_kwargs_is_an_error(setup):
+    exp, data = setup
+    with pytest.raises(ValueError, match="not both"):
+        run_method("fedspd", data, exp, seed=0, cfg=RunConfig(),
+                   eval_every=100)
+    with pytest.raises(ValueError, match="run_method_batch"):
+        run_method_batch("fedspd", data, exp, seeds=(0,), cfg=RunConfig(),
+                         param_plane=True)
+
+
+# ------------------------------------------------------------------
+# batch validation errors name the entry point + seed index
+# ------------------------------------------------------------------
+
+
+def _datasets(k, dims=None):
+    return [
+        make_mixture_classification(n_clients=6, n_clusters=2,
+                                    n_per_client=32,
+                                    dim=(dims[i] if dims else 8),
+                                    n_classes=3, seed=100 + i, noise=0.3)
+        for i in range(k)
+    ]
+
+
+def test_batch_errors_name_entry_point_and_seed_index(setup):
+    exp, _ = setup
+    with pytest.raises(ValueError,
+                       match=r"run_method_batch: stacked data: got 2 "
+                             r"datasets for 3 seeds"):
+        run_method_batch("fedspd", _datasets(2), exp, seeds=(0, 1, 2))
+    # the offending dataset is called out by seed index
+    with pytest.raises(ValueError, match=r"seed index 1 \(seed 8\)"):
+        run_method_batch("fedspd", _datasets(2, dims=[8, 12]), exp,
+                         seeds=(7, 8), cfg=RunConfig(eval_every=100))
+
+
+# ------------------------------------------------------------------
+# both entry points report the same compile accounting
+# ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scan", [False, True])
+def test_n_compiles_identical_between_entry_points(setup, scan):
+    """A single-seed run_method_batch must report the exact n_compiles /
+    n_dispatches run_method reports — same driver, same program."""
+    exp, data = setup
+    cfg = RunConfig(eval_every=100, scan_rounds=scan)
+    solo = run_method("fedspd", data, exp, seed=0, cfg=cfg)
+    batch = run_method_batch("fedspd", data, exp, seeds=(0,), cfg=cfg)
+    assert solo.extras["n_compiles"] == batch[0].extras["n_compiles"] == 1
+    assert (solo.extras["n_dispatches"]
+            == batch[0].extras["n_dispatches"]
+            == (1 if scan else exp.rounds))
+
+
+# ------------------------------------------------------------------
+# call-site guard: the repo itself must not use the deprecated kwargs
+# ------------------------------------------------------------------
+
+DEPRECATED = {"eval_every", "gossip_mode", "gossip_backend", "param_plane",
+              "comm", "scenario", "options"}
+
+
+def test_no_repo_caller_uses_deprecated_loose_kwargs():
+    """Every run_method / run_method_batch call inside src/, benchmarks/
+    and examples/ must pass cfg=RunConfig(...) — the loose kwargs are
+    shims for EXTERNAL callers only (tests may exercise them)."""
+    offenders = []
+    for top in ("src", "benchmarks", "examples"):
+        for path in sorted((REPO / top).rglob("*.py")):
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = getattr(node.func, "id",
+                               getattr(node.func, "attr", None))
+                if name not in ("run_method", "run_method_batch"):
+                    continue
+                bad = DEPRECATED & {kw.arg for kw in node.keywords}
+                if bad:
+                    offenders.append(
+                        f"{path.relative_to(REPO)}:{node.lineno} "
+                        f"uses {sorted(bad)}"
+                    )
+    assert not offenders, (
+        "deprecated loose kwargs in repo callers (pass cfg=RunConfig):\n"
+        + "\n".join(offenders)
+    )

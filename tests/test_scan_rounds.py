@@ -1,0 +1,272 @@
+"""Scan-rolled round engine (``RunConfig(scan_rounds=True)``) and per-round
+cohort subsampling (``RunConfig(cohort_size=K)``).
+
+PR-6 acceptance criteria: (a) the lax.scan-rolled engine is bit-identical
+to the historical Python-loop engine AND to the committed pre-refactor
+seed fixture; (b) the whole experiment is ONE compiled program — jit cache
+size 1 and a dispatch count independent of ``rounds``; (c) in-step
+scenario dropout and schedule xs produce the identical mask/adjacency
+stream under both engines; (d) cohort subsampling carries inactive
+clients' rows bit-untouched and its wire bytes scale with K, not N.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.data.synthetic import make_mixture_classification
+from repro.experiments import (
+    RunConfig,
+    Scenario,
+    run_method,
+    run_method_batch,
+)
+from repro.experiments.registry import build_context, get_method
+from repro.experiments.runner import _cohort_indices, _cohort_step
+from repro.graphs.topology import make_graph, rewire_schedule
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "fedspd_static_seed_curve.json")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # MUST match the committed fixture's config block (test_scenarios.py)
+    exp = PaperExpConfig(n_clients=6, n_per_client=32, rounds=4, tau=1,
+                         batch=8, avg_degree=3.0, model="mlp", dim=8,
+                         n_classes=3)
+    data = make_mixture_classification(
+        n_clients=6, n_clusters=2, n_per_client=32, dim=8, n_classes=3,
+        seed=7, noise=0.3,
+    )
+    return exp, data
+
+
+def _assert_same_run(a, b, exact=True):
+    eq = (np.testing.assert_array_equal if exact
+          else lambda x, y: np.testing.assert_allclose(x, y, atol=1e-6))
+    eq(a.acc_per_client, b.acc_per_client)
+    if "u" in a.extras:
+        eq(np.asarray(a.extras["u"]), np.asarray(b.extras["u"]))
+    assert [c[0] for c in a.curve] == [c[0] for c in b.curve]
+    np.testing.assert_allclose([c[1] for c in a.curve],
+                               [c[1] for c in b.curve], atol=1e-6)
+    np.testing.assert_allclose(a.comm_bytes, b.comm_bytes, rtol=1e-9)
+
+
+# ------------------------------------------------------------------
+# engine parity: scan vs loop vs the committed fixture
+# ------------------------------------------------------------------
+
+
+def test_scan_matches_loop_and_committed_fixture(setup):
+    """The scan engine reproduces the Python loop bit for bit, and BOTH
+    still reproduce the committed pre-refactor seed curve."""
+    exp, data = setup
+    loop = run_method("fedspd", data, exp, seed=0,
+                      cfg=RunConfig(eval_every=2))
+    scan = run_method("fedspd", data, exp, seed=0,
+                      cfg=RunConfig(eval_every=2, scan_rounds=True))
+    _assert_same_run(loop, scan)
+    with open(FIXTURE) as f:
+        fx = json.load(f)
+    for r in (loop, scan):
+        np.testing.assert_allclose(r.acc_per_client, fx["acc_per_client"],
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(r.extras["u"]), fx["u"],
+                                   atol=1e-6)
+        assert [c[0] for c in r.curve] == [c[0] for c in fx["curve"]]
+        np.testing.assert_allclose([c[1] for c in r.curve],
+                                   [c[1] for c in fx["curve"]], atol=1e-6)
+        np.testing.assert_allclose(r.comm_bytes, fx["comm_bytes"],
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["dfl_fedavg", "dfl_fedem", "local"])
+def test_scan_matches_loop_baselines(setup, method):
+    """Every registry method rolls into the scan unchanged — the round
+    steps are pure in (state, train, key, lr)."""
+    exp, data = setup
+    cfg = RunConfig(eval_every=100)
+    loop = run_method(method, data, exp, seed=0, cfg=cfg)
+    scan = run_method(method, data, exp, seed=0,
+                      cfg=dataclasses.replace(cfg, scan_rounds=True))
+    _assert_same_run(loop, scan)
+
+
+def test_scan_batch_matches_loop_batch(setup):
+    exp, data = setup
+    seeds = (0, 1)
+    loop = run_method_batch("fedspd", data, exp, seeds=seeds,
+                            cfg=RunConfig(eval_every=2))
+    scan = run_method_batch("fedspd", data, exp, seeds=seeds,
+                            cfg=RunConfig(eval_every=2, scan_rounds=True))
+    assert scan[0].extras["n_compiles"] == 1
+    for a, b in zip(loop, scan):
+        _assert_same_run(a, b)
+
+
+# ------------------------------------------------------------------
+# one compile, one dispatch — independent of rounds
+# ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rounds", [5, 50])
+def test_scan_one_compile_one_dispatch(setup, rounds):
+    """rounds=5 and rounds=50 each execute as ONE compiled program with
+    ONE host dispatch (the round count only changes the scan length)."""
+    exp, data = setup
+    e = dataclasses.replace(exp, rounds=rounds)
+    r = run_method("fedspd", data, e, seed=0,
+                   cfg=RunConfig(eval_every=100, scan_rounds=True))
+    assert r.extras["n_compiles"] == 1
+    assert r.extras["n_dispatches"] == 1
+    assert np.isfinite(r.mean_acc)
+
+
+def test_loop_dispatch_count_scales_with_rounds(setup):
+    """The historical loop engine reports one dispatch PER round — the
+    contrast the scan engine's n_dispatches==1 is measured against."""
+    exp, data = setup
+    r = run_method("fedspd", data, exp, seed=0,
+                   cfg=RunConfig(eval_every=100))
+    assert r.extras["n_compiles"] == 1
+    assert r.extras["n_dispatches"] == exp.rounds
+
+
+# ------------------------------------------------------------------
+# scenario parity under the scan: in-step dropout, schedule xs
+# ------------------------------------------------------------------
+
+
+def test_scan_dropout_stream_matches_loop(setup):
+    """Link dropout is a key-derived in-step Bernoulli draw
+    (fold_in(key, round)), so the loop and the scan see the IDENTICAL
+    mask stream — same comm bytes, same states."""
+    exp, data = setup
+    sc = Scenario(dropout=0.5, seed=1)
+    loop = run_method("fedspd", data, exp, seed=0,
+                      cfg=RunConfig(eval_every=100, scenario=sc))
+    scan = run_method("fedspd", data, exp, seed=0,
+                      cfg=RunConfig(eval_every=100, scenario=sc,
+                                    scan_rounds=True))
+    _assert_same_run(loop, scan)
+    assert loop.comm_bytes > 0.0
+
+
+def test_scan_schedule_rides_the_xs(setup):
+    """A (rounds, N, N) rewire schedule feeds the scan as xs; the loop
+    indexes the same stack host-side — identical runs, one compile."""
+    exp, data = setup
+    exp10 = dataclasses.replace(exp, rounds=10)
+    sched = rewire_schedule("er", exp.n_clients, 3.0, rounds=10,
+                            p_rewire=0.4, seed=2)
+    sc = Scenario(graph_schedule=sched, dropout=0.2, seed=3)
+    loop = run_method("fedspd", data, exp10, seed=0,
+                      cfg=RunConfig(eval_every=100, scenario=sc))
+    scan = run_method("fedspd", data, exp10, seed=0,
+                      cfg=RunConfig(eval_every=100, scenario=sc,
+                                    scan_rounds=True))
+    _assert_same_run(loop, scan)
+    assert scan.extras["n_compiles"] == 1
+
+
+# ------------------------------------------------------------------
+# cohort subsampling
+# ------------------------------------------------------------------
+
+
+def test_cohort_step_leaves_inactive_rows_untouched(setup):
+    """The unit-level invariant: gather -> step at size K -> scatter must
+    return every inactive client's centers/u/z rows BIT-untouched."""
+    exp, data = setup
+    m = get_method("fedspd")
+    g = make_graph("er", exp.n_clients, 3.0, seed=0)
+    ctx = build_context(data, exp, graph=g, seed=0,
+                        options=RunConfig(param_plane=True).resolve_options())
+    state = m.init(ctx, jax.random.PRNGKey(0))
+    step = _cohort_step(m.make_step(ctx), m.cohort_axes(ctx, state))
+    active = jnp.asarray([1, 3, 4])
+    new, _ = jax.jit(step)(state, ctx.train, jax.random.PRNGKey(1),
+                           jnp.float32(0.05),
+                           jnp.asarray(g.adj, jnp.float32), active)
+    inactive = np.asarray([0, 2, 5])
+    np.testing.assert_array_equal(np.asarray(new.centers)[:, inactive],
+                                  np.asarray(state.centers)[:, inactive])
+    np.testing.assert_array_equal(np.asarray(new.u)[inactive],
+                                  np.asarray(state.u)[inactive])
+    np.testing.assert_array_equal(np.asarray(new.z)[inactive],
+                                  np.asarray(state.z)[inactive])
+    # ... while the active rows actually trained
+    assert not np.array_equal(np.asarray(new.centers)[:, np.asarray(active)],
+                              np.asarray(state.centers)[:, np.asarray(active)])
+
+
+def test_cohort_indices_sorted_unique(setup):
+    idx = np.asarray(_cohort_indices(jax.random.PRNGKey(3), 64, 16))
+    assert idx.shape == (16,)
+    assert (np.diff(idx) > 0).all()         # sorted, no duplicates
+    assert idx.min() >= 0 and idx.max() < 64
+
+
+def test_cohort_wire_bytes_scale_with_k_not_n(setup):
+    """K=3 of N=6: tracked comm is bounded by the K-clique's directed
+    edges (R * K * (K-1) messages) and lands strictly below the full run —
+    dropped clients cost zero wire bytes."""
+    exp, data = setup
+    g = make_graph("er", exp.n_clients, 3.0, seed=0)
+    base = RunConfig(eval_every=100, param_plane=True)
+    full = run_method("fedspd", data, exp, graph=g, seed=0, cfg=base)
+    coh = run_method("fedspd", data, exp, graph=g, seed=0,
+                     cfg=dataclasses.replace(base, cohort_size=3))
+    assert 0.0 < coh.comm_bytes < full.comm_bytes
+    # model bytes backed out of the full run's exact accounting
+    directed_edges = float(np.sum(g.adj)) - g.n
+    model_bytes = full.comm_bytes / (exp.rounds * directed_edges)
+    assert coh.comm_bytes <= exp.rounds * 3 * 2 * model_bytes + 1e-6
+
+
+def test_cohort_full_size_matches_no_cohort(setup):
+    """cohort_size=N gathers the identity cohort (sorted permutation of
+    everything), so the run must match the cohort-free program."""
+    exp, data = setup
+    g = make_graph("er", exp.n_clients, 3.0, seed=0)
+    base = RunConfig(eval_every=100, param_plane=True)
+    a = run_method("fedspd", data, exp, graph=g, seed=0, cfg=base)
+    b = run_method("fedspd", data, exp, graph=g, seed=0,
+                   cfg=dataclasses.replace(base,
+                                           cohort_size=exp.n_clients))
+    np.testing.assert_allclose(a.acc_per_client, b.acc_per_client,
+                               atol=1e-6)
+    np.testing.assert_allclose(a.comm_bytes, b.comm_bytes, rtol=1e-6)
+
+
+def test_cohort_scan_matches_loop(setup):
+    """The cohort stream is fold_in(key, round)-derived, so both engines
+    pick the identical cohorts."""
+    exp, data = setup
+    cfg = RunConfig(eval_every=2, param_plane=True, cohort_size=3)
+    loop = run_method("fedspd", data, exp, seed=0, cfg=cfg)
+    scan = run_method("fedspd", data, exp, seed=0,
+                      cfg=dataclasses.replace(cfg, scan_rounds=True))
+    _assert_same_run(loop, scan)
+    assert scan.extras["n_dispatches"] == 1
+
+
+def test_cohort_validation(setup):
+    exp, data = setup
+    with pytest.raises(ValueError, match="cohort subsampling"):
+        run_method("dfl_fedavg", data, exp, seed=0,
+                   cfg=RunConfig(cohort_size=3))
+    with pytest.raises(ValueError, match="param_plane"):
+        run_method("fedspd", data, exp, seed=0,
+                   cfg=RunConfig(cohort_size=3))
+    with pytest.raises(ValueError, match="must be in 1..N"):
+        run_method("fedspd", data, exp, seed=0,
+                   cfg=RunConfig(param_plane=True,
+                                 cohort_size=exp.n_clients + 1))
