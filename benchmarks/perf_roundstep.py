@@ -299,6 +299,59 @@ def bench_scan_rounds(*, n: int, m: int, dim: int, tau: int, rounds: int,
     }
 
 
+def bench_straggler(*, n: int, m: int, dim: int, rounds: int,
+                    repeats: int, seed: int = 0) -> dict:
+    """``fedspd/straggler``: the client-heterogeneity engine
+    (experiments/heterogeneity.py) at N=64 with 30% slow clients —
+    straggler timeouts with lognormal jitter, light Bernoulli
+    unavailability, and stale-gossip decay, the whole sweep scan-rolled
+    into ONE compiled program (asserted). Trend-gates the masked-step
+    overhead: activity draws + weighted adjacency + the bit-untouched
+    row restore per round."""
+    from repro.configs.paper_cnn import PaperExpConfig
+    from repro.experiments import (
+        ClientSystemModel,
+        RunConfig,
+        Scenario,
+        run_method,
+    )
+
+    exp = PaperExpConfig(
+        n_clients=n, n_per_client=m, rounds=rounds, tau=1,
+        batch=min(16, m), avg_degree=4.0, model="mlp", dim=dim, n_classes=4,
+    )
+    data = make_mixture_classification(
+        n_clients=n, n_clusters=2, n_per_client=m, dim=dim, n_classes=4,
+        seed=seed,
+    )
+    het = ClientSystemModel(
+        slow_fraction=0.3, slow_factor=4.0, time_budget=2.0, jitter=0.5,
+        p_unavailable=0.05, staleness_gamma=0.9, seed=seed,
+    )
+    cfg = RunConfig(eval_every=10**9, param_plane=True, scan_rounds=True,
+                    scenario=Scenario(system=het))
+    walls, r = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = run_method("fedspd", data, exp, seed=seed, cfg=cfg)
+        walls.append(time.perf_counter() - t0)
+    assert r.extras["n_compiles"] == 1, r.extras
+    assert r.extras["n_dispatches"] == 1, r.extras
+    per_round = [w * 1e3 / rounds for w in walls]
+    return {
+        "lane": "fedspd/straggler",
+        "n_clients": n, "rounds": rounds, "slow_fraction": 0.3,
+        "n_compiles": r.extras["n_compiles"],
+        "n_dispatches": r.extras["n_dispatches"],
+        "run_s": round(min(walls), 4),
+        "round_ms": round(min(per_round), 4),
+        "round_ms_median": round(statistics.median(per_round), 4),
+        "mean_acc": round(float(r.mean_acc), 4),
+        "max_staleness": int(max(r.extras["staleness"])),
+        "wire_bytes": float(r.wire_bytes),
+    }
+
+
 def bench_method_pair(method: str, *, n: int, m: int, dim: int, tau: int,
                       reps: int, seed: int = 0) -> list[dict]:
     """Registry baseline steps, pytree vs packed (N, X)/(S, N, X) plane —
@@ -404,6 +457,14 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
     print(f"{coh['lane']:>24s}  round {coh['round_ms']:9.2f} ms   "
           f"(N={coh['n_clients']}, K={coh['cohort_size']}, "
           f"{coh['n_dispatches']} dispatch)")
+    # client-heterogeneity lane: N=64, 30% slow clients, stragglers +
+    # availability + staleness decay scan-rolled into one program
+    stg = bench_straggler(n=64, m=16, dim=dim,
+                          rounds=8 if fast else 16, repeats=2)
+    results.append(stg)
+    print(f"{stg['lane']:>24s}  round {stg['round_ms']:9.2f} ms   "
+          f"(N={stg['n_clients']}, 30% slow, max stale "
+          f"{stg['max_staleness']}, {stg['n_dispatches']} dispatch)")
     comparisons = []
     for model in ("mlp", "conv"):
         for regime in ("full", "stream"):

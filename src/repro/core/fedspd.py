@@ -237,6 +237,14 @@ def make_round_step(
     ``adj=`` when dynamic graphs are actually used; the built-in backends
     (core/gossip.make_mix_fn) all do.
 
+    The traced adjacency may be WEIGHTED (the heterogeneity engine,
+    experiments/heterogeneity.py): a zero row+column removes a straggling
+    or unavailable client from the round (its mixing row collapses to
+    e_i, zero wire bytes charged — the accounting binarizes the matrix),
+    and a fractional column decays a stale sender's weight before row
+    renormalization. Weighted entries need the dense wiring; the permute
+    paths read the adjacency as a binary mask.
+
     ``comm`` (comm/codecs.CommConfig) runs the exchange through a wire
     codec: the transmitted (N, X) slab is encoded, receivers mix the
     decoded values, and (with ``error_feedback=True``) the per-client

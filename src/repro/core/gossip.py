@@ -76,6 +76,15 @@ def fedspd_weight_matrix(
     engine). Rows are renormalized over the surviving links, so a dropped
     edge simply vanishes from the average; ``adj=None`` reproduces the
     static-graph program bit for bit.
+
+    The traced matrix may be WEIGHTED, not just 0/1: the heterogeneity
+    engine (experiments/heterogeneity.py) decays a stale sender's column
+    by ``gamma**staleness`` — those entries scale the pre-normalization
+    weights and the row renormalization folds them into the mixture. A
+    fully masked row (an unavailable client) collapses to e_i after the
+    diagonal restore: the client keeps its own model. Weighted entries
+    require the dense wiring — ``mix_permute`` reads the adjacency as a
+    binary mask.
     """
     adj = jnp.asarray(spec.adj) if adj is None else adj.astype(jnp.float32)
     match = (s[None, :] == s[:, None]).astype(jnp.float32)
@@ -361,13 +370,19 @@ def round_comm_bytes(
 
     ``adj`` (traced per-round adjacency — the scenario engine) replaces the
     static topology in the link count, so a dropped or rewired-away edge
-    costs exactly zero wire bytes this round.
+    costs exactly zero wire bytes this round. The traced matrix may carry
+    fractional stale-gossip weights (experiments/heterogeneity.py) — the
+    accounting BINARIZES it: a link either ships a full model or nothing,
+    and a timed-out / unavailable client (zero row and column) is charged
+    exactly zero bytes.
     """
     # the eye is sized from the EFFECTIVE adjacency, not the spec: cohort
     # subsampling passes the (K, K) minor of the round's graph
     adj = (jnp.asarray(spec.adj) if adj is None
-           else adj.astype(jnp.float32))
-    adj = adj - jnp.eye(adj.shape[0])
+           else (adj > 0).astype(jnp.float32))
+    # zero the diagonal MULTIPLICATIVELY: an inactive client's masked-out
+    # diagonal is already 0, and subtracting the eye would charge it -1
+    adj = adj * (1.0 - jnp.eye(adj.shape[0]))
     if point_to_point:
         match = (s[None, :] == s[:, None]).astype(jnp.float32)
         links = jnp.sum(adj * match)

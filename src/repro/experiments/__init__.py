@@ -2,9 +2,14 @@
 # Algorithms register a Method adapter (registry.py); the driver (runner.py)
 # owns the round loop, eval cadence, curve/comm accounting, and multi-seed
 # batching; scenarios.py declares dynamic topologies / link dropout /
-# stacked per-seed data.
+# stacked per-seed data; heterogeneity.py declares per-client system
+# models (stragglers, availability, stale gossip).
 from repro.comm.codecs import CommConfig  # noqa: F401  (RunConfig(comm=...))
 from repro.experiments.config import RunConfig  # noqa: F401
+from repro.experiments.heterogeneity import (  # noqa: F401
+    ClientSystemModel,
+    HetCarry,
+)
 from repro.experiments.registry import (  # noqa: F401
     CommModel,
     ExperimentContext,

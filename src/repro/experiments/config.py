@@ -51,7 +51,12 @@ class RunConfig:
     comm            comm/codecs.CommConfig wire codec (implies param_plane
                     for compressing codecs)
     scenario        experiments/scenarios.Scenario: dynamic topologies,
-                    in-step link dropout, stacked per-seed data
+                    in-step link dropout, stacked per-seed data, and
+                    client-system heterogeneity (``Scenario.system`` — an
+                    experiments/heterogeneity.ClientSystemModel: straggler
+                    timeouts, Bernoulli/Markov availability, stale-gossip
+                    decay; inactive clients drop like failed links, zero
+                    wire bytes, state rows carried bit-untouched)
     eval_every      train-curve cadence (the final round always evaluates)
     donate          donate the state into the jitted round program (the
                     plane is aliased in place; disable when holding on to

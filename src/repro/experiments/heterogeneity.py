@@ -1,0 +1,276 @@
+"""Client-system heterogeneity: traced stragglers, availability, staleness.
+
+FedSPD's headline claim is accuracy under LOW-connectivity networks, but
+real decentralized deployments degrade along a second axis: *client-system*
+heterogeneity — slow devices, flaky availability, stale exchange. DeceFL
+(Yuan et al., 2021) motivates exactly this robustness story; FLSim's
+per-client ``TimeOutSimulator``/channel models define the standard
+simulation surface. This module is that surface for the scenario engine:
+
+- ``ClientSystemModel`` declares per-client compute speeds (explicit
+  multipliers or a slow-client fraction), a per-round time budget with
+  lognormal jitter (straggler timeouts), Bernoulli or two-state Markov
+  availability, and a stale-gossip decay ``staleness_gamma``.
+- ``het_round`` draws ONE round of it — key-derived
+  (``fold_in(key, round)`` in the driver), so the Python-loop and
+  lax.scan engines see the identical straggler stream and a
+  heterogeneity sweep stays one jit compile.
+- ``apply_client_weights`` folds the resulting per-client activity
+  weights into the traced adjacency: an inactive client's row AND column
+  vanish before ``fedspd_weight_matrix`` renormalization (it neither
+  sends nor receives — exactly like a failed link, zero wire bytes), and
+  a stale sender's column is decayed by ``gamma**staleness`` so
+  chronically slow clients fade from consensus instead of poisoning it.
+- ``masked_client_step`` carries an inactive client's state rows
+  BIT-untouched through the round, reusing the ``Method.cohort_axes``
+  client-axis contract the cohort-gather machinery already defines.
+
+The staleness counter rides the round carry (``HetCarry``): it resets to
+zero on a successful exchange and increments while a client is timed out
+or unavailable. A returning client is down-weighted ONCE by its age
+(``w = active * gamma**staleness``, staleness measured BEFORE the reset),
+then rejoins at full weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HetCarry(NamedTuple):
+    """Per-client heterogeneity state threaded through the round carry
+    (the loop engine threads it eagerly; ``scan_rounds=True`` puts it in
+    the lax.scan carry next to the parameter plane)."""
+
+    stale: jnp.ndarray  # (N,) int32 — rounds since the last successful
+    #                     exchange (0 = exchanged last round)
+    avail: jnp.ndarray  # (N,) float32 — Markov up/down state (1 = up);
+    #                     all-ones under Bernoulli / no availability model
+
+
+def _check_prob(name: str, v: float) -> None:
+    if not 0.0 <= float(v) <= 1.0:
+        raise ValueError(
+            f"ClientSystemModel.{name}={v!r} must be in [0, 1]"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSystemModel:
+    """Declarative per-client compute-speed / availability / staleness
+    model; resolved by the experiment driver via ``Scenario.system``.
+
+    speed           explicit (N,) per-client speed multipliers (1.0 =
+                    nominal; 0.25 = 4x slower), or None to derive from
+                    ``slow_fraction``/``slow_factor``
+    slow_fraction   fraction of clients that are slow (chosen host-side
+                    from ``seed``; deterministic count round(f*N))
+    slow_factor     slowdown multiplier for the slow clients (>= 1)
+    time_budget     per-round wall budget in nominal-client round units;
+                    a client whose round time 1/speed (x jitter) exceeds
+                    it STRAGGLES this round. 0 disables timeouts.
+    jitter          lognormal sigma on per-round compute time (0 = none)
+    p_unavailable   i.i.d. Bernoulli per-round unavailability
+    markov          (p_fail, p_recover) two-state availability chain —
+                    bursty outages; mutually exclusive with
+                    ``p_unavailable``
+    staleness_gamma stale-gossip decay in (0, 1]: a sender's mixing
+                    weight is scaled by gamma**staleness (1.0 = off)
+    seed            drives the slow-client choice AND the traced
+                    timeout/availability stream (fold_in(round) in-step)
+    """
+
+    speed: Any = None
+    slow_fraction: float = 0.0
+    slow_factor: float = 4.0
+    time_budget: float = 0.0
+    jitter: float = 0.0
+    p_unavailable: float = 0.0
+    markov: Optional[tuple] = None
+    staleness_gamma: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        _check_prob("slow_fraction", self.slow_fraction)
+        _check_prob("p_unavailable", self.p_unavailable)
+        if self.markov is not None:
+            if len(self.markov) != 2:
+                raise ValueError(
+                    "ClientSystemModel.markov must be (p_fail, p_recover);"
+                    f" got {self.markov!r}"
+                )
+            _check_prob("markov[0] (p_fail)", self.markov[0])
+            _check_prob("markov[1] (p_recover)", self.markov[1])
+            if self.p_unavailable > 0.0:
+                raise ValueError(
+                    "ClientSystemModel: p_unavailable and markov are "
+                    "mutually exclusive availability models"
+                )
+        if self.slow_factor < 1.0:
+            raise ValueError(
+                f"ClientSystemModel.slow_factor={self.slow_factor!r} "
+                "must be >= 1 (it is a slowdown)"
+            )
+        if self.time_budget < 0.0:
+            raise ValueError(
+                f"ClientSystemModel.time_budget={self.time_budget!r} "
+                "must be >= 0 (0 disables straggler timeouts)"
+            )
+        if self.jitter < 0.0:
+            raise ValueError(
+                f"ClientSystemModel.jitter={self.jitter!r} must be >= 0"
+            )
+        if not 0.0 < float(self.staleness_gamma) <= 1.0:
+            raise ValueError(
+                "ClientSystemModel.staleness_gamma="
+                f"{self.staleness_gamma!r} must be in (0, 1]"
+            )
+
+    @property
+    def has_stragglers(self) -> bool:
+        return self.time_budget > 0.0
+
+    @property
+    def has_availability(self) -> bool:
+        return self.p_unavailable > 0.0 or self.markov is not None
+
+    def resolve_speeds(self, n: int) -> np.ndarray:
+        """Host-side (N,) speed multipliers: explicit ``speed`` wins;
+        otherwise round(slow_fraction*N) clients chosen from ``seed``
+        run at 1/slow_factor. Host-side like the topology generators —
+        WHO is slow is experiment configuration; WHETHER a slow client
+        misses the budget each round is the traced draw (het_round)."""
+        if self.speed is not None:
+            arr = np.asarray(self.speed, dtype=np.float32)
+            if arr.shape != (n,):
+                raise ValueError(
+                    f"ClientSystemModel.speed must have shape ({n},); "
+                    f"got {arr.shape}"
+                )
+            if (arr <= 0.0).any():
+                raise ValueError(
+                    "ClientSystemModel.speed multipliers must be positive"
+                )
+            return arr
+        speeds = np.ones(n, dtype=np.float32)
+        k = int(round(float(self.slow_fraction) * n))
+        if k:
+            rng = np.random.default_rng(self.seed)
+            idx = rng.choice(n, size=k, replace=False)
+            speeds[idx] = np.float32(1.0 / self.slow_factor)
+        return speeds
+
+    def init_carry(self, n: int) -> HetCarry:
+        """Round-0 carry: nobody stale, everybody up."""
+        return HetCarry(stale=jnp.zeros((n,), jnp.int32),
+                        avail=jnp.ones((n,), jnp.float32))
+
+
+def het_round(model: ClientSystemModel, speeds: jnp.ndarray,
+              carry: HetCarry, key: jax.Array) -> tuple[HetCarry, jnp.ndarray]:
+    """One round of the heterogeneity process: (carry', weights).
+
+    ``weights`` is the (N,) per-client activity vector: 0 for a client
+    that timed out or is unavailable this round, ``gamma**staleness``
+    (staleness BEFORE this round's reset) for one that exchanges. All
+    draws come from ``key`` — the driver passes ``fold_in(key, round)``,
+    so the stream is a pure function of (model seed, round index) and is
+    identical under the Python-loop and lax.scan engines.
+    """
+    n = carry.stale.shape[0]
+    k_time, k_avail = jax.random.split(key)
+    if model.has_stragglers:
+        t = 1.0 / speeds
+        if model.jitter > 0.0:
+            t = t * jnp.exp(
+                model.jitter * jax.random.normal(k_time, (n,), jnp.float32)
+            )
+        timely = (t <= model.time_budget).astype(jnp.float32)
+    else:
+        timely = jnp.ones((n,), jnp.float32)
+    if model.markov is not None:
+        p_fail, p_recover = (float(p) for p in model.markov)
+        u = jax.random.uniform(k_avail, (n,), jnp.float32)
+        up = carry.avail > 0.0
+        avail = jnp.where(up, u >= p_fail, u < p_recover).astype(jnp.float32)
+    elif model.p_unavailable > 0.0:
+        u = jax.random.uniform(k_avail, (n,), jnp.float32)
+        avail = (u >= model.p_unavailable).astype(jnp.float32)
+    else:
+        avail = jnp.ones((n,), jnp.float32)
+    active = timely * avail
+    gamma = float(model.staleness_gamma)
+    if gamma < 1.0:
+        w = active * jnp.power(
+            jnp.float32(gamma), carry.stale.astype(jnp.float32)
+        )
+    else:
+        w = active
+    stale = jnp.where(active > 0.0, 0, carry.stale + 1).astype(jnp.int32)
+    return HetCarry(stale=stale, avail=avail), w
+
+
+def apply_client_weights(adj: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Fold per-client activity weights into the traced adjacency.
+
+    An inactive client (w == 0) loses its row AND column — it neither
+    receives (its mixing row becomes e_i after the weight-matrix diagonal
+    restore) nor sends (no neighbor averages it in), and the comm
+    accounting charges it zero wire bytes. An active-but-stale sender's
+    column is scaled by its decayed weight, which
+    ``fedspd_weight_matrix`` row-renormalizes into the mixture.
+    """
+    recv = (w > 0.0).astype(adj.dtype)
+    return adj * recv[..., :, None] * w.astype(adj.dtype)[..., None, :]
+
+
+def restore_inactive(old, new, axes, keep):
+    """Carry inactive clients' state rows BIT-untouched through a round.
+
+    ``old``/``new`` are same-shaped state namedtuples; ``axes`` maps each
+    field to its client axis (the ``Method.cohort_axes`` contract: None =
+    global field, kept from ``new``); ``keep`` is the (N,) active mask.
+    A where-select, not an arithmetic blend — the carried rows are the
+    exact old bits.
+    """
+
+    def keep_old(o, v, ax):
+        if o is None or ax is None:
+            return v
+        shape = (1,) * ax + (-1,) + (1,) * (o.ndim - ax - 1)
+        return jnp.where(keep.reshape(shape), v, o)
+
+    return type(old)(*(keep_old(o, v, a)
+                       for o, v, a in zip(old, new, axes)))
+
+
+def masked_client_step(step, axes):
+    """Run a traced-adjacency step under per-client activity weights.
+
+    ``axes`` maps each state field to its client axis — the SAME
+    ``Method.cohort_axes`` contract cohort subsampling uses (None =
+    global field, threaded through whole). The wrapper folds this
+    round's weights (the LAST extra argument) into the traced adjacency
+    via ``apply_client_weights``, runs the wrapped step unchanged, then
+    restores inactive clients' state rows bit-untouched
+    (``restore_inactive``): a straggling client's plane row is carried,
+    not recomputed — its local training never ran as far as the
+    experiment is concerned.
+
+    Composes outside the cohort wrapper: inactive cohort members are
+    masked out of the gathered (K, K) sub-adjacency and their scattered
+    rows are restored here; clients outside the cohort were never
+    touched, so the restore is a no-op for them either way.
+    """
+
+    def steph(state, train, key, lr, adj, *rest):
+        *inner, aw = rest
+        new, aux = step(state, train, key, lr,
+                        apply_client_weights(adj, aw), *inner)
+        return restore_inactive(state, new, axes, aw > 0.0), aux
+
+    return steph

@@ -31,6 +31,16 @@ either engine: K of N clients are gathered into a compact active plane
 size K, and results scatter back — inactive clients' rows are carried
 bit-untouched and dropped links cost zero wire bytes (the comm accounting
 reads the (K, K) sub-adjacency).
+
+``Scenario.system`` (experiments/heterogeneity.ClientSystemModel) layers
+client-system heterogeneity on either engine the same way: straggler
+timeouts and Bernoulli/Markov availability are key-derived in-step draws
+(``fold_in(key, round)``), an inactive client drops from the traced
+adjacency exactly like a failed link (zero wire bytes, plane row carried
+bit-untouched via the cohort-axes contract), and the per-client staleness
+counter rides the round carry — threaded eagerly by the loop engine, in
+the lax.scan carry under ``scan_rounds=True`` — decaying stale senders'
+mixing weights by ``gamma**staleness``.
 """
 from __future__ import annotations
 
@@ -52,6 +62,7 @@ from repro.experiments.registry import (
     build_context,
     get_method,
 )
+from repro.experiments.heterogeneity import het_round, masked_client_step
 from repro.experiments.scenarios import Scenario, bernoulli_drop
 from repro.graphs.topology import Graph, union_graph
 
@@ -192,7 +203,8 @@ def _donate_argnums(options: dict) -> tuple:
 
 
 def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
-            curve, t0, n_compiles=None, n_dispatches=None) -> RunResult:
+            curve, t0, n_compiles=None, n_dispatches=None,
+            staleness=None) -> RunResult:
     comm_model = method.comm_model(ctx)
     if comm_model.kind == "tracked":
         comm = float(state.comm_bytes)
@@ -203,6 +215,10 @@ def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
         extras["n_compiles"] = n_compiles
     if n_dispatches is not None:
         extras["n_dispatches"] = n_dispatches
+    if staleness is not None:
+        # final per-client staleness counters (heterogeneity scenarios):
+        # 0 = exchanged in the last round, k = k rounds out of contact
+        extras["staleness"] = staleness
     acc = np.asarray(acc)
     return RunResult(
         method=method.name,
@@ -344,6 +360,25 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
         if adj_seeds is None and adj_rounds is None and adj_const is None:
             adj_const = jnp.asarray(ctx.graph.adj, jnp.float32)
 
+    # ---- client-system heterogeneity (Scenario.system) ---------------------
+    het = scenario.system if scenario is not None else None
+    het_key = het_speeds = het_carry = None
+    if het is not None:
+        _require_dynamic_graph(m, "client-system heterogeneity")
+        # the same per-field client-axis contract cohort subsampling uses
+        # (and the same constraints: packed plane, dense wiring) — the
+        # masked step restores inactive rows along these axes
+        het_axes = m.cohort_axes(ctx, states)
+        het_speeds = jnp.asarray(het.resolve_speeds(ctx.n_clients))
+        # straggler/availability stream: deterministic per (model seed,
+        # round) — fold_in(r) in the program keeps both engines identical
+        het_key = jax.random.fold_in(jax.random.PRNGKey(int(het.seed)),
+                                     0x51AC)
+        het_carry = het.init_carry(ctx.n_clients)
+        # wraps OUTSIDE the cohort gather: weights cover the full client
+        # axis; the activity vector rides as the LAST step extra
+        base_step = masked_client_step(base_step, het_axes)
+
     # ---- normalized closures shared by both engines ------------------------
     has_adj = (adj_seeds is not None or adj_rounds is not None
                or adj_const is not None)
@@ -351,6 +386,8 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
     if has_adj:
         extra_axes += (0 if adj_seeds is not None else None,)
     if cohort is not None:
+        extra_axes += (None,)
+    if het is not None:
         extra_axes += (None,)
     if batched:
         step0 = jax.vmap(base_step,
@@ -361,9 +398,12 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
     def round_call(states, train, k, lr, extra):
         return step0(states, train, k, lr, *extra)
 
-    def round_extra(adj, r):
+    def round_extra(adj, r, hc):
         """This round's traced extras: in-step Bernoulli link dropout
-        (key ⊕ round) and the active-cohort gather indices."""
+        (key ⊕ round), the active-cohort gather indices, and the
+        per-client activity weights. Returns (extras, updated
+        heterogeneity carry) — the carry threads through the loop engine
+        eagerly and rides the lax.scan carry under scan_rounds."""
         ex = ()
         if has_adj:
             if drop_p > 0.0:
@@ -375,7 +415,11 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
             ex += (_cohort_indices(
                 jax.random.fold_in(cohort_key, r), ctx.n_clients, cohort
             ),)
-        return ex
+        if het is not None:
+            hc, aw = het_round(het, het_speeds, hc,
+                               jax.random.fold_in(het_key, r))
+            ex += (aw,)
+        return ex, hc
 
     adj_static = adj_seeds if adj_seeds is not None else adj_const
 
@@ -416,26 +460,30 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
                                 axis=-1)
             return jnp.mean(m.evaluate(ctx, sts, k_eval, train))
 
-        def program(states, train, kr, xs):
+        def program(states, train, kr, hc, xs):
             def body(carry, x):
-                sts, kr = carry
+                sts, kr, hc = carry
                 kr, k = split_run(kr)
                 a = x["adj"] if adj_rounds is not None else adj_static
-                sts, _ = round_call(sts, train, k, x["lr"],
-                                    round_extra(a, x["r"]))
+                ex, hc = round_extra(a, x["r"], hc)
+                sts, _ = round_call(sts, train, k, x["lr"], ex)
                 do = jnp.logical_or(x["r"] % eval_every == 0,
                                     x["r"] == rounds - 1)
                 acc = jax.lax.cond(do, eval_mean, lambda op: nan_acc,
                                    (sts, train))
-                return (sts, kr), acc
+                return (sts, kr, hc), acc
 
-            (states, kr), accs = jax.lax.scan(body, (states, kr), xs)
-            return states, accs
+            # hc is None (an empty pytree carry leaf) without a
+            # heterogeneity model — the compiled program is unchanged
+            (states, kr, hc), accs = jax.lax.scan(body, (states, kr, hc),
+                                                  xs)
+            return states, hc, accs
 
         runner = jax.jit(program, donate_argnums=_donate_argnums(options))
         if not batched:
             states = jax.tree.map(lambda l: l.astype(l.dtype), states)
-        states, accs_tape = runner(states, train_arg, k_run, xs)
+        states, het_carry, accs_tape = runner(states, train_arg, k_run,
+                                              het_carry, xs)
         accs_tape = np.asarray(accs_tape)   # (rounds,) or (rounds, k)
         for r in range(rounds):
             if r % eval_every == 0 or r == rounds - 1:
@@ -452,8 +500,8 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
         for r in range(rounds):
             k_run, k = split_run(k_run)
             a = adj_rounds[r] if adj_rounds is not None else adj_static
-            states, aux = step_jit(states, train_arg, k, lrs[r],
-                                   round_extra(a, r))
+            ex, het_carry = round_extra(a, r, het_carry)
+            states, aux = step_jit(states, train_arg, k, lrs[r], ex)
             n_disp += 1
             if r % eval_every == 0 or r == rounds - 1:
                 if batched:
@@ -471,6 +519,9 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
         accs = np.asarray(evaluate(states, k_eval, test_arg, train_arg))
     else:
         accs = np.asarray(m.evaluate(ctx, states, k_eval, ctx.test))[None]
+    # the straggler stream is shared across seeds (like the dropout mask),
+    # so every seed reports the same final staleness counters
+    het_stale = (np.asarray(het_carry.stale) if het is not None else None)
     results = []
     for i in range(len(seeds)):
         if batched:
@@ -480,7 +531,8 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
             state_i, aux_i = states, aux
         results.append(
             _result(m, ctx, state_i, aux_i, accs[i], curves[i], t0,
-                    n_compiles=n_compiles, n_dispatches=n_disp)
+                    n_compiles=n_compiles, n_dispatches=n_disp,
+                    staleness=het_stale)
         )
     return results if batched else results[0]
 

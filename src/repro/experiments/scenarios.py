@@ -26,6 +26,13 @@ Tables 2–3 — into one declarative object the experiment driver
   per-seed sequence of datasets (the old table23 protocol: k seeds ×
   k datasets × k graphs in one compile). Passing a list of datasets
   implies it; the flag exists so a Scenario fully describes a protocol.
+- ``system``: a ``heterogeneity.ClientSystemModel`` — per-client compute
+  speeds, straggler timeouts, Bernoulli/Markov availability, and
+  stale-gossip decay. A straggling or unavailable client drops from the
+  traced adjacency exactly like a failed link (zero wire bytes, plane
+  row carried bit-untouched); a stale sender's mixing weight decays by
+  ``gamma**staleness``. The draws are key-derived in-step like dropout,
+  so both engines see the identical straggler stream.
 
 Static per-edge machinery (the permute/ppermute edge coloring, the
 shard_map collective schedule) is built once from the UNION graph over the
@@ -45,6 +52,7 @@ from repro.graphs.topology import (
     Graph,
     GraphSchedule,
     stack_schedule,
+    symmetric_mask_drop,
     union_graph,
 )
 
@@ -52,17 +60,18 @@ from repro.graphs.topology import (
 def bernoulli_drop(adj: jnp.ndarray, key: jax.Array,
                    p: float) -> jnp.ndarray:
     """One round of TRACED Bernoulli link failures (the in-step analogue
-    of graphs/topology.drop_edges): each undirected off-diagonal link of
-    ``adj`` drops with probability ``p``; one draw per edge (failures are
-    symmetric), diagonal kept (a client always keeps its own model). The
-    driver calls this with ``fold_in(PRNGKey(scenario.seed), round)``, so
-    the mask stream is a pure function of (scenario seed, round index) —
+    of graphs/topology.drop_edges — both share
+    ``topology.symmetric_mask_drop``, so the host and traced semantics
+    cannot drift): each undirected off-diagonal link of ``adj`` drops
+    with probability ``p``; one draw per edge (failures are symmetric),
+    diagonal kept (a client always keeps its own model). The driver
+    calls this with ``fold_in(PRNGKey(scenario.seed), round)``, so the
+    mask stream is a pure function of (scenario seed, round index) —
     identical under the Python-loop and lax.scan engines."""
     n = adj.shape[-1]
     u = jnp.triu(jax.random.uniform(key, (n, n), jnp.float32), k=1)
     u = u + u.T
-    keep = (u >= p).astype(adj.dtype)
-    return adj * jnp.maximum(keep, jnp.eye(n, dtype=adj.dtype))
+    return symmetric_mask_drop(adj, u, p, xp=jnp)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +79,8 @@ class Scenario:
     """Declarative experiment scenario; see the module docstring.
 
     ``seed`` drives the in-step dropout mask stream (the graph schedule
-    carries its own seed). ``schedule_stack``/``resolve`` turn the
+    carries its own seed; ``system`` — the client-heterogeneity model —
+    carries its own too). ``schedule_stack``/``resolve`` turn the
     scenario into the driver's traced inputs: a PRE-dropout
     (rounds, N, N) adjacency stack plus the union graph the static
     machinery is built from.
@@ -80,12 +90,24 @@ class Scenario:
     dropout: float = 0.0         # per-round Bernoulli edge-drop probability
     data_stack: bool = False     # run_method_batch data is per-seed stacked
     seed: int = 0                # dropout mask stream
+    system: Any = None           # heterogeneity.ClientSystemModel
+
+    def __post_init__(self):
+        # out-of-range dropout would silently produce a degenerate mask
+        # (p > 1 drops everything, p < 0 drops nothing) — fail loudly at
+        # construction instead; ClientSystemModel validates its own
+        # probabilities the same way
+        if not 0.0 <= float(self.dropout) <= 1.0:
+            raise ValueError(
+                f"Scenario.dropout={self.dropout!r} must be in [0, 1]"
+            )
 
     @property
     def dynamic(self) -> bool:
-        """Whether the scenario varies the topology (and therefore needs
-        the traced-adjacency round step)."""
-        return self.graph_schedule is not None or self.dropout > 0.0
+        """Whether the scenario varies the effective topology (and
+        therefore needs the traced-adjacency round step)."""
+        return (self.graph_schedule is not None or self.dropout > 0.0
+                or self.system is not None)
 
     def schedule_stack(self, rounds: int) -> np.ndarray | None:
         """The (rounds, N, N) PRE-dropout schedule (None without one).
@@ -114,7 +136,8 @@ class Scenario:
         if stack is None:
             if graph is None:
                 raise ValueError(
-                    "a dropout-only scenario needs the base graph"
+                    "a dropout- or heterogeneity-only scenario needs "
+                    "the base graph"
                 )
             stack = np.broadcast_to(
                 graph.adj, (rounds,) + graph.adj.shape

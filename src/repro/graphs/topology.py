@@ -268,6 +268,20 @@ def rewire_schedule(
     return GraphSchedule(np.stack(adjs).astype(np.float32))
 
 
+def symmetric_mask_drop(adj, u, p_drop: float, xp=np):
+    """The ONE symmetric edge-drop core shared by the host path
+    (``drop_edges`` below) and the traced path
+    (experiments/scenarios.bernoulli_drop): ``u`` is an (N, N) symmetric
+    matrix of per-edge uniforms (upper triangle drawn once, mirrored —
+    failures are symmetric), each off-diagonal link drops where
+    ``u < p_drop``, and the diagonal is kept (a client always keeps its
+    own model). ``xp`` selects the array namespace (numpy / jax.numpy),
+    so the two callers cannot drift."""
+    n = adj.shape[-1]
+    keep = (u >= p_drop).astype(adj.dtype)
+    return adj * xp.maximum(keep, xp.eye(n, dtype=adj.dtype))
+
+
 def drop_edges(adj: np.ndarray, p_drop: float,
                rng: np.random.Generator) -> np.ndarray:
     """One round of Bernoulli link failures: each undirected off-diagonal
@@ -276,11 +290,10 @@ def drop_edges(adj: np.ndarray, p_drop: float,
     connectivity repair: dropout models per-round failures, not topology
     design (DeceFL-style robustness stress)."""
     adj = _augment(adj.copy())
-    iu, ju = np.triu_indices(adj.shape[0], k=1)
-    mask = (adj[iu, ju] > 0) & (rng.random(iu.shape[0]) < p_drop)
-    adj[iu[mask], ju[mask]] = 0.0
-    adj[ju[mask], iu[mask]] = 0.0
-    return adj
+    n = adj.shape[0]
+    u = np.triu(rng.random((n, n)).astype(np.float32), k=1)
+    u = u + u.T
+    return symmetric_mask_drop(adj, u, p_drop, xp=np)
 
 
 def dropout_schedule(

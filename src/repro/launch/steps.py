@@ -86,8 +86,13 @@ def make_fedspd_train_step(
         comm=comm,
     )
 
-    def train_step(state, batch):
-        return step(state, batch)
+    def train_step(state, batch, adj=None):
+        # adj: the scenario/heterogeneity engines' traced per-round
+        # adjacency (core/fedspd.make_round_step); None keeps the
+        # static-graph program bit for bit
+        if adj is None:
+            return step(state, batch)
+        return step(state, batch, adj=adj)
 
     return train_step
 

@@ -48,6 +48,12 @@ from repro.core.gossip import GossipSpec, make_mix_fn
 from repro.core.packing import make_pack_spec, pack_state
 from repro.data.synthetic import make_mixture_tokens
 from repro.experiments.config import RunConfig
+from repro.experiments.heterogeneity import (
+    ClientSystemModel,
+    apply_client_weights,
+    het_round,
+    restore_inactive,
+)
 from repro.graphs.topology import make_graph
 from repro.models.registry import build_model
 
@@ -101,6 +107,21 @@ def main(argv=None):
                     help="carry per-client error-feedback residuals")
     ap.add_argument("--codec-block", type=int, default=256,
                     help="quantization-scale block width along X")
+    ap.add_argument("--slow-fraction", type=float, default=0.0,
+                    help="fraction of clients running at 1/slow-factor "
+                         "speed (client heterogeneity)")
+    ap.add_argument("--slow-factor", type=float, default=4.0,
+                    help="slowdown multiplier for the slow clients")
+    ap.add_argument("--time-budget", type=float, default=0.0,
+                    help="per-round time budget in nominal round units; "
+                         "clients over budget straggle (0 = off)")
+    ap.add_argument("--het-jitter", type=float, default=0.0,
+                    help="lognormal sigma on per-round compute time")
+    ap.add_argument("--p-unavailable", type=float, default=0.0,
+                    help="i.i.d. per-round client unavailability")
+    ap.add_argument("--staleness-gamma", type=float, default=1.0,
+                    help="stale-gossip decay in (0, 1]: sender mixing "
+                         "weight scales by gamma**staleness (1 = off)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
@@ -123,6 +144,21 @@ def main(argv=None):
         opts = run_cfg.resolve_options()
     except ValueError as e:
         raise SystemExit(str(e)) from None
+
+    # client-system heterogeneity (experiments/heterogeneity.py): any of
+    # the straggler/availability knobs turns the engine on
+    het = None
+    if args.time_budget > 0 or args.p_unavailable > 0:
+        try:
+            het = ClientSystemModel(
+                slow_fraction=args.slow_fraction,
+                slow_factor=args.slow_factor,
+                time_budget=args.time_budget, jitter=args.het_jitter,
+                p_unavailable=args.p_unavailable,
+                staleness_gamma=args.staleness_gamma, seed=args.seed,
+            )
+        except ValueError as e:
+            raise SystemExit(str(e)) from None
 
     fcfg = FedSPDConfig(
         n_clients=n, n_clusters=s, tau=args.tau, batch=args.batch,
@@ -173,16 +209,62 @@ def main(argv=None):
         mix_fn = make_mix_fn(gossip, opts["gossip_backend"],
                              plane=pack_spec is not None, comm=comm)
 
+    # the heterogeneity wrapper restores inactive plane rows along the
+    # client axes — that needs the packed plane, the dense wiring (the
+    # permute/ppermute paths read the adjacency as a binary mask), and a
+    # single-host plane (the masked where-select is not mesh-aware)
+    het_axes = het_key = het_speeds = None
+    adj_base = None
+    if het is not None:
+        if pack_spec is None:
+            raise SystemExit(
+                "client heterogeneity requires the packed plane "
+                "(drop --pytree)"
+            )
+        if mesh is not None:
+            raise SystemExit(
+                "client heterogeneity is not available with --mesh "
+                "(the ppermute schedule reads a binary adjacency)"
+            )
+        if opts["mode"] != "dense":
+            raise SystemExit(
+                "client heterogeneity needs --gossip-mode dense "
+                "(stale-gossip weights are real-valued)"
+            )
+        from repro.core.fedspd import FedSPDState
+
+        het_axes = FedSPDState(
+            centers=1, u=0, z=0, round=None, key=None, comm_bytes=None,
+            ef=None if state.ef is None else 0,
+        )
+        het_key = jax.random.fold_in(jax.random.PRNGKey(args.seed), 0x51AC)
+        het_speeds = jnp.asarray(het.resolve_speeds(n))
+        adj_base = jnp.asarray(graph.adj, jnp.float32)
+
     from repro.launch.steps import make_fedspd_train_step
 
     # scan mode traces the raw step into one whole-run program and donates
-    # the state there instead of per dispatch
+    # the state there instead of per dispatch; the het wrapper likewise
+    # owns the jit boundary (old and new plane meet in its where-select)
+    inner_donate = (run_cfg.donate and not run_cfg.scan_rounds
+                    and het is None)
     step = make_fedspd_train_step(
         bundle, gossip, fcfg, mix_fn=mix_fn, pack_spec=pack_spec,
-        mesh=mesh, donate=run_cfg.donate and not run_cfg.scan_rounds,
-        comm=comm,
+        mesh=mesh, donate=inner_donate, comm=comm,
     )
-    if not run_cfg.donate and not run_cfg.scan_rounds:
+    if het is not None:
+        def het_step(st, batch, r, hc):
+            hc, aw = het_round(het, het_speeds, hc,
+                               jax.random.fold_in(het_key, r))
+            new, metrics = step(st, batch, adj=apply_client_weights(
+                adj_base, aw))
+            return restore_inactive(st, new, het_axes, aw > 0.0), hc, \
+                metrics
+
+        if not run_cfg.scan_rounds:
+            het_step = jax.jit(
+                het_step, donate_argnums=(0,) if run_cfg.donate else ())
+    elif not run_cfg.donate and not run_cfg.scan_rounds:
         step = jax.jit(step)
 
     # document pool: cluster-specific Markov chains (paper's mixture analogue)
@@ -206,19 +288,29 @@ def main(argv=None):
           f"deg={graph.avg_degree:.1f} gossip={opts['mode']} "
           f"true-mix[0]={pool['mix_true'][0].round(2)}")
     t0 = time.time()
+    het_carry = het.init_carry(n) if het is not None else None
     if run_cfg.scan_rounds:
-        def body(carry, _):
-            st, k = carry
+        def body(carry, x):
+            st, k, hc = carry
             k, kb = jax.random.split(k)
-            st, metrics = step(st, sample_batch(kb))
-            return (st, k), metrics
+            if het is not None:
+                st, hc, metrics = het_step(st, sample_batch(kb), x, hc)
+            else:
+                st, metrics = step(st, sample_batch(kb))
+            return (st, k, hc), metrics
 
-        def program(st, k):
-            return jax.lax.scan(body, (st, k), xs=None, length=args.rounds)
+        def program(st, k, hc):
+            # the round index rides the xs only when the heterogeneity
+            # stream needs fold_in(round); hc is None otherwise and the
+            # compiled program is unchanged
+            xs = (jnp.arange(args.rounds, dtype=jnp.int32)
+                  if het is not None else None)
+            return jax.lax.scan(body, (st, k, hc), xs=xs,
+                                length=args.rounds)
 
         runner = jax.jit(
             program, donate_argnums=(0,) if run_cfg.donate else ())
-        (state, k_data), tape = runner(state, k_data)
+        (state, k_data, het_carry), tape = runner(state, k_data, het_carry)
         tape = jax.tree.map(np.asarray, tape)
         for r in range(args.rounds):
             if r % run_cfg.eval_every == 0 or r == args.rounds - 1:
@@ -232,7 +324,11 @@ def main(argv=None):
     else:
         for r in range(args.rounds):
             k_data, kb = jax.random.split(k_data)
-            state, metrics = step(state, sample_batch(kb))
+            if het is not None:
+                state, het_carry, metrics = het_step(
+                    state, sample_batch(kb), r, het_carry)
+            else:
+                state, metrics = step(state, sample_batch(kb))
             if r % run_cfg.eval_every == 0 or r == args.rounds - 1:
                 cons = np.asarray(metrics["consensus"])
                 logical = float(metrics["comm_bytes"])
@@ -247,6 +343,9 @@ def main(argv=None):
     print("final mean per-client loss (personalized Eq.2): "
           f"{fl_perplexity(bundle, personalized, eval_batch):.4f}")
     print(f"mixture coefficients u:\n{np.asarray(state.u).round(3)}")
+    if het is not None:
+        print(f"final staleness (rounds since last exchange): "
+              f"{np.asarray(het_carry.stale)}")
     if args.save:
         ckpt.save(args.save, {"personalized": personalized, "u": state.u},
                   metadata={"arch": cfg.name, "n_clients": n})

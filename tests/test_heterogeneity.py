@@ -1,0 +1,322 @@
+"""Client-system heterogeneity engine (experiments/heterogeneity.py).
+
+Robustness invariants: the loop and scan engines see the identical
+straggler/staleness stream (bit-parity), a timed-out or unavailable client
+is charged ZERO wire bytes and its plane rows are carried bit-untouched,
+staleness counters reset on successful exchange, age-decayed mixing
+matrices stay row-stochastic, and the host/traced edge-drop paths share
+one symmetric-mask core.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.core.gossip import GossipSpec, fedspd_weight_matrix, round_comm_bytes
+from repro.data.synthetic import make_mixture_classification
+from repro.experiments import (
+    ClientSystemModel,
+    RunConfig,
+    Scenario,
+    run_method,
+    run_method_batch,
+)
+from repro.experiments.heterogeneity import (
+    apply_client_weights,
+    het_round,
+    masked_client_step,
+)
+from repro.experiments.registry import build_context, get_method
+from repro.graphs.topology import drop_edges, make_graph, symmetric_mask_drop
+
+pytestmark = pytest.mark.robustness
+
+
+@pytest.fixture(scope="module")
+def setup():
+    exp = PaperExpConfig(n_clients=6, n_per_client=32, rounds=4, tau=1,
+                         batch=8, avg_degree=3.0, model="mlp", dim=8,
+                         n_classes=3)
+    data = make_mixture_classification(
+        n_clients=6, n_clusters=2, n_per_client=32, dim=8, n_classes=3,
+        seed=7, noise=0.3,
+    )
+    graph = make_graph("er", 6, 3.0, seed=0)
+    return exp, data, graph
+
+
+HET = ClientSystemModel(slow_fraction=0.34, slow_factor=4.0,
+                        time_budget=2.0, p_unavailable=0.2,
+                        staleness_gamma=0.8, seed=3)
+
+
+# --------------------------------------------------------------------------
+# Model validation
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kwargs,field", [
+    (dict(slow_fraction=1.5), "slow_fraction"),
+    (dict(p_unavailable=-0.1), "p_unavailable"),
+    (dict(markov=(1.2, 0.5)), "markov[0]"),
+    (dict(markov=(0.5,)), "markov"),
+    (dict(p_unavailable=0.2, markov=(0.1, 0.5)), "mutually exclusive"),
+    (dict(slow_factor=0.5), "slow_factor"),
+    (dict(time_budget=-1.0), "time_budget"),
+    (dict(jitter=-0.5), "jitter"),
+    (dict(staleness_gamma=0.0), "staleness_gamma"),
+    (dict(staleness_gamma=1.5), "staleness_gamma"),
+])
+def test_client_system_model_validates(kwargs, field):
+    with pytest.raises(ValueError, match=field.replace("[", r"\[")):
+        ClientSystemModel(**kwargs)
+
+
+def test_scenario_dropout_validates():
+    with pytest.raises(ValueError, match="dropout"):
+        Scenario(dropout=1.5)
+    with pytest.raises(ValueError, match="dropout"):
+        Scenario(dropout=-0.2)
+
+
+def test_system_scenario_is_dynamic():
+    assert Scenario(system=HET).dynamic
+    assert not Scenario().dynamic
+
+
+def test_resolve_speeds():
+    m = ClientSystemModel(slow_fraction=0.5, slow_factor=4.0, seed=1)
+    speeds = m.resolve_speeds(8)
+    assert speeds.shape == (8,)
+    assert (speeds == 0.25).sum() == 4 and (speeds == 1.0).sum() == 4
+    # explicit speeds win and are validated
+    m2 = ClientSystemModel(speed=[1.0, 0.5])
+    np.testing.assert_array_equal(m2.resolve_speeds(2), [1.0, 0.5])
+    with pytest.raises(ValueError, match="shape"):
+        m2.resolve_speeds(3)
+    with pytest.raises(ValueError, match="positive"):
+        ClientSystemModel(speed=[1.0, 0.0]).resolve_speeds(2)
+
+
+# --------------------------------------------------------------------------
+# het_round: staleness semantics and key-derivation
+# --------------------------------------------------------------------------
+
+
+def test_staleness_resets_on_exchange_and_grows_offline():
+    m = ClientSystemModel(staleness_gamma=0.5)
+    carry = m.init_carry(3)._replace(stale=jnp.asarray([3, 5, 0], jnp.int32))
+    # no straggler/availability model => everyone active: counters reset,
+    # but THIS round's weight is decayed by the PRE-reset age
+    carry2, w = het_round(m, jnp.ones(3), carry, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(carry2.stale), [0, 0, 0])
+    np.testing.assert_allclose(np.asarray(w), [0.5 ** 3, 0.5 ** 5, 1.0])
+    # everyone down => counters grow, weights zero
+    m_down = ClientSystemModel(p_unavailable=1.0)
+    carry3, w3 = het_round(m_down, jnp.ones(3), carry,
+                           jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(carry3.stale), [4, 6, 1])
+    np.testing.assert_array_equal(np.asarray(w3), [0.0, 0.0, 0.0])
+
+
+def test_straggler_timeout_is_deterministic_per_speed():
+    # 1/speed > budget with no jitter => ALWAYS straggles; timely client
+    # never does
+    m = ClientSystemModel(time_budget=2.0)
+    speeds = jnp.asarray([1.0, 0.25])
+    for r in range(4):
+        _, w = het_round(m, speeds, m.init_carry(2),
+                         jax.random.fold_in(jax.random.PRNGKey(0), r))
+        np.testing.assert_array_equal(np.asarray(w), [1.0, 0.0])
+
+
+def test_markov_availability_chain():
+    # p_fail=0, p_recover=1: an up client stays up, a down one recovers
+    m = ClientSystemModel(markov=(0.0, 1.0))
+    carry = m.init_carry(2)._replace(avail=jnp.asarray([1.0, 0.0]))
+    carry2, w = het_round(m, jnp.ones(2), carry, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(carry2.avail), [1.0, 1.0])
+    # p_fail=1: everyone down next round
+    m2 = ClientSystemModel(markov=(1.0, 0.0))
+    carry3, w3 = het_round(m2, jnp.ones(2), carry2, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(w3), [0.0, 0.0])
+
+
+# --------------------------------------------------------------------------
+# Adjacency masking + comm accounting
+# --------------------------------------------------------------------------
+
+
+def test_apply_client_weights_masks_rows_and_columns():
+    adj = jnp.ones((3, 3))
+    w = jnp.asarray([1.0, 0.0, 0.5])
+    out = np.asarray(apply_client_weights(adj, w))
+    assert (out[1, :] == 0).all() and (out[:, 1] == 0).all()
+    np.testing.assert_allclose(out[0], [1.0, 0.0, 0.5])
+
+
+def test_decayed_weight_matrix_row_stochastic():
+    g = make_graph("er", 8, 4.0, seed=2)
+    spec = GossipSpec.from_graph(g)
+    s = jnp.zeros(8, jnp.int32)
+    w_cl = jnp.asarray([1.0, 0.9, 0.0, 0.5, 1.0, 0.0, 0.7, 1.0])
+    adj = apply_client_weights(jnp.asarray(g.adj), w_cl)
+    W = np.asarray(fedspd_weight_matrix(spec, s, adj=adj))
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+    assert (W >= 0).all()
+    # an inactive client's row collapses to e_i: it keeps its own model
+    for i in (2, 5):
+        e = np.zeros(8)
+        e[i] = 1.0
+        np.testing.assert_array_equal(W[i], e)
+    # nobody averages an inactive client in
+    assert (W[:, 2][np.arange(8) != 2] == 0).all()
+
+
+def test_masked_links_charge_zero_and_binarized_bytes():
+    g = make_graph("er", 6, 3.0, seed=0)
+    spec = GossipSpec.from_graph(g)
+    s = jnp.zeros(6, jnp.int32)
+    full = float(round_comm_bytes(spec, s, 100,
+                                  adj=jnp.asarray(g.adj)))
+    # fractional stale weights are binarized: same bytes as the 0/1 graph
+    w_stale = jnp.asarray([1.0, 0.5, 0.25, 1.0, 0.9, 0.4])
+    stale_adj = apply_client_weights(jnp.asarray(g.adj), w_stale)
+    assert float(round_comm_bytes(spec, s, 100, adj=stale_adj)) == full
+    # a fully masked client is charged zero: bytes drop by exactly its
+    # (binary) links, and an all-down round charges exactly zero
+    down = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0, 1.0])
+    lost = 2 * float(np.asarray(g.adj)[2].sum() - 1)  # both directions
+    got = float(round_comm_bytes(
+        spec, s, 100, adj=apply_client_weights(jnp.asarray(g.adj), down)))
+    assert got == full - lost * 100
+    allz = apply_client_weights(jnp.asarray(g.adj), jnp.zeros(6))
+    assert float(round_comm_bytes(spec, s, 100, adj=allz)) == 0.0
+
+
+def test_inactive_plane_rows_bit_untouched(setup):
+    exp, data, graph = setup
+    m = get_method("fedspd")
+    ctx = build_context(data, exp, graph=graph, seed=0,
+                        options={"param_plane": True})
+    key = jax.random.PRNGKey(0)
+    state = m.init(ctx, key)
+    axes = m.cohort_axes(ctx, state)
+    step = masked_client_step(m.make_step(ctx), axes)
+    aw = jnp.asarray([1.0, 1.0, 0.0, 1.0, 0.0, 1.0])
+    new, _ = jax.jit(step)(state, ctx.train, jax.random.PRNGKey(1),
+                           0.05, jnp.asarray(graph.adj, jnp.float32), aw)
+    old_c, new_c = np.asarray(state.centers), np.asarray(new.centers)
+    old_u, new_u = np.asarray(state.u), np.asarray(new.u)
+    for i in (2, 4):  # inactive: the EXACT old bits
+        np.testing.assert_array_equal(new_c[:, i], old_c[:, i])
+        np.testing.assert_array_equal(new_u[i], old_u[i])
+    for i in (0, 1, 3, 5):  # active clients actually trained
+        assert not np.array_equal(new_c[:, i], old_c[:, i])
+
+
+# --------------------------------------------------------------------------
+# Engine parity + whole-run accounting
+# --------------------------------------------------------------------------
+
+
+def _run(setup, cfg, batch=False):
+    exp, data, graph = setup
+    if batch:
+        return run_method_batch("fedspd", data, exp, seeds=(0, 1),
+                                graph=graph, cfg=cfg)
+    return run_method("fedspd", data, exp, graph=graph, seed=0, cfg=cfg)
+
+
+def test_loop_scan_bit_parity_heterogeneity(setup):
+    base = RunConfig(param_plane=True, eval_every=2,
+                     scenario=Scenario(system=HET))
+    a = _run(setup, base)
+    b = _run(setup, dataclasses.replace(base, scan_rounds=True))
+    np.testing.assert_array_equal(a.acc_per_client, b.acc_per_client)
+    np.testing.assert_array_equal(a.extras["staleness"],
+                                  b.extras["staleness"])
+    assert a.comm_bytes == b.comm_bytes
+    assert b.extras["n_compiles"] == 1 and b.extras["n_dispatches"] == 1
+
+
+def test_full_composition_one_compile(setup):
+    """Stragglers + Markov availability + staleness decay + link dropout
+    + cohort subsampling, batched over seeds: ONE compiled program under
+    both engines, bit-identical."""
+    het = ClientSystemModel(slow_fraction=0.34, time_budget=2.0,
+                            markov=(0.3, 0.7), staleness_gamma=0.9, seed=5)
+    base = RunConfig(param_plane=True, eval_every=2, cohort_size=4,
+                     scenario=Scenario(dropout=0.2, system=het, seed=11))
+    a = _run(setup, base, batch=True)
+    b = _run(setup, dataclasses.replace(base, scan_rounds=True),
+             batch=True)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.acc_per_client, y.acc_per_client)
+        assert x.comm_bytes == y.comm_bytes
+    assert b[0].extras["n_compiles"] == 1
+    assert b[0].extras["n_dispatches"] == 1
+
+
+def test_all_down_run_charges_zero_bytes(setup):
+    cfg = RunConfig(param_plane=True, eval_every=10 ** 9,
+                    scenario=Scenario(
+                        system=ClientSystemModel(p_unavailable=1.0)))
+    r = _run(setup, cfg)
+    assert r.comm_bytes == 0.0 and r.wire_bytes == 0.0
+    exp = setup[0]
+    np.testing.assert_array_equal(r.extras["staleness"],
+                                  np.full(6, exp.rounds))
+
+
+def test_always_straggling_clients_never_exchange(setup):
+    # explicit speeds: clients 4 and 5 can never meet the budget
+    het = ClientSystemModel(speed=[1, 1, 1, 1, 0.25, 0.25],
+                            time_budget=2.0)
+    cfg = RunConfig(param_plane=True, eval_every=10 ** 9,
+                    scenario=Scenario(system=het))
+    r = _run(setup, cfg)
+    exp = setup[0]
+    np.testing.assert_array_equal(r.extras["staleness"][4:],
+                                  [exp.rounds, exp.rounds])
+    np.testing.assert_array_equal(r.extras["staleness"][:4], [0, 0, 0, 0])
+    # a straggler never trained: its mixture weights are still uniform
+    u = np.asarray(r.extras["u"])
+    np.testing.assert_array_equal(u[4:], np.full_like(u[4:], 0.5))
+
+
+def test_het_requires_dynamic_capable_method(setup):
+    exp, data, graph = setup
+    cfg = RunConfig(scenario=Scenario(system=HET))
+    with pytest.raises(ValueError, match="dynamic"):
+        run_method("local", data, exp, graph=graph, seed=0, cfg=cfg)
+
+
+# --------------------------------------------------------------------------
+# Shared symmetric edge-drop core
+# --------------------------------------------------------------------------
+
+
+def test_symmetric_mask_drop_host_traced_agree():
+    g = make_graph("er", 10, 4.0, seed=3)
+    rng = np.random.default_rng(0)
+    u = np.triu(rng.random((10, 10)).astype(np.float32), k=1)
+    u = u + u.T
+    host = symmetric_mask_drop(g.adj, u, 0.4, xp=np)
+    traced = np.asarray(symmetric_mask_drop(
+        jnp.asarray(g.adj), jnp.asarray(u), 0.4, xp=jnp))
+    np.testing.assert_array_equal(host, traced)
+    assert (np.diag(host) == 1).all()
+    np.testing.assert_array_equal(host, host.T)
+
+
+def test_drop_edges_extremes():
+    g = make_graph("er", 8, 4.0, seed=1)
+    rng = np.random.default_rng(0)
+    none = drop_edges(g.adj, 0.0, rng)
+    np.testing.assert_array_equal(none, g.adj)
+    all_ = drop_edges(g.adj, 1.0, np.random.default_rng(1))
+    np.testing.assert_array_equal(all_, np.eye(8, dtype=np.float32))

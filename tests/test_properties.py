@@ -210,6 +210,48 @@ def test_dropout_schedule_rows_renormalize(kind, seed, n, rounds, p_drop):
             assert spectral_gap(w) > 0.0
 
 
+@given(seed=st.integers(0, 40), n=st.integers(5, 14),
+       gamma=st.floats(0.5, 1.0), age_seed=st.integers(0, 99))
+@SET
+@pytest.mark.robustness
+def test_age_decayed_weight_matrix_keeps_gap(seed, n, gamma, age_seed):
+    """Stale-gossip decay (experiments/heterogeneity.py): with arbitrary
+    staleness ages and an arbitrary active subset, the decayed mixing
+    matrix stays row-stochastic, inactive clients collapse to e_i rows,
+    and the minor over ACTIVE clients keeps a positive spectral gap
+    whenever the surviving subgraph is connected (self-loops make the
+    weighted chain aperiodic)."""
+    from repro.experiments.heterogeneity import apply_client_weights
+
+    g = _graph(seed, n, 4.0)
+    rng = np.random.default_rng(age_seed)
+    stale = rng.integers(0, 6, n)
+    active = rng.random(n) < 0.8
+    active[rng.integers(n)] = True  # at least one active client
+    w_cl = jnp.asarray(np.where(active, gamma ** stale, 0.0), jnp.float32)
+    adj = apply_client_weights(jnp.asarray(g.adj, jnp.float32), w_cl)
+    spec = GossipSpec.from_graph(g)
+    W = np.asarray(
+        fedspd_weight_matrix(spec, jnp.zeros(n, jnp.int32), adj=adj))
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-5)
+    assert (W >= 0).all()
+    idx = np.nonzero(active)[0]
+    off = np.nonzero(~active)[0]
+    for i in off:  # an offline client keeps exactly its own model
+        e = np.zeros(n)
+        e[i] = 1.0
+        np.testing.assert_array_equal(W[i], e)
+    if off.size:  # and nobody averages one in
+        assert (W[np.ix_(idx, off)] == 0).all()
+    sub = g.adj[np.ix_(idx, idx)]
+    if idx.size >= 2 and Graph(sub).is_connected():
+        # active rows are supported on active columns only, so the minor
+        # is itself row-stochastic
+        W_sub = W[np.ix_(idx, idx)]
+        np.testing.assert_allclose(W_sub.sum(axis=1), 1.0, atol=1e-5)
+        assert spectral_gap(W_sub) > 1e-6
+
+
 @given(seed=st.integers(0, 99), n=st.integers(3, 12))
 @SET
 def test_mix_preserves_convex_hull(seed, n):
