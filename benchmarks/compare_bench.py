@@ -9,8 +9,9 @@ any lane whose median round time regresses by more than ``--threshold``
 (default 25%) fails the job. A lane present only in the NEW run (a freshly
 added benchmark, e.g. ``fedspd/dynamic_graph``) never fails the gate: its
 first timing seeds the baseline for subsequent runs. A markdown delta table — per-lane timings,
-the packed-vs-pytree speedup matrix, and the wire-byte table for the
-compressed-communication lanes (fedspd/comm_*) — is appended to
+the packed-vs-pytree speedup matrix, the wire-byte table for the
+compressed-communication lanes (fedspd/comm_*), and the personalized
+serving throughput table (serve/mixture_qps*) — is appended to
 ``$GITHUB_STEP_SUMMARY`` when set, and always printed to stdout.
 
   python -m benchmarks.compare_bench --baseline prev.json --new BENCH_roundstep.json
@@ -126,6 +127,24 @@ def markdown_report(base: dict, new: dict, rows: list,
                 f"| {r['lane']} | {_fmt(prev, 'd')} "
                 f"| {r['wire_model_bytes']} | {r['logical_model_bytes']} "
                 f"| x{r['wire_ratio']} | {delta} |"
+            )
+    if new.get("serve_lanes"):
+        old_qps = {r.get("lane"): r.get("qps")
+                   for r in base.get("serve_lanes", [])}
+        lines += [
+            "",
+            "### personalized mixture serving (serve lanes)",
+            "",
+            "| lane | codec | prev users/s | users/s | batch ms | Δ |",
+            "|---|---|---:|---:|---:|---:|",
+        ]
+        for r in new["serve_lanes"]:
+            prev = old_qps.get(r["lane"])
+            delta = ("—" if prev in (None, 0)
+                     else f"{(r['qps'] / prev - 1) * 100:+.1f}%")
+            lines.append(
+                f"| {r['lane']} | {r['codec']} | {_fmt(prev, '.1f')} "
+                f"| {r['qps']:.1f} | {r['round_ms_median']:.2f} | {delta} |"
             )
     lines.append("")
     lines.append("**FAIL**: " + ", ".join(regressions) if regressions

@@ -24,6 +24,12 @@ production train loop) across:
                                                cohort subsampling at
                                                N=1024 clients (lane
                                                fedspd/cohort_n1024)
+  serving         personalized mixture       predictions/sec off the hot
+                                               cluster plane at simulated
+                                               1e6-user cardinality (lanes
+                                               serve/mixture_qps fp32 +
+                                               serve/mixture_qps_int4
+                                               bit-packed fused kernel)
 
 All steps are jitted with the state donated (the production loop's
 configuration). Every result row carries a stable ``lane`` id; the output
@@ -49,7 +55,7 @@ import jax.numpy as jnp
 from repro.comm import CommConfig, make_channel
 from repro.core.fedspd import FedSPDConfig, init_state, make_round_step
 from repro.core.gossip import GossipSpec, make_mix_fn
-from repro.core.packing import make_pack_spec, pack_state
+from repro.core.packing import make_pack_spec, pack, pack_state
 from repro.data.synthetic import make_mixture_classification
 from repro.graphs.topology import make_graph
 from repro.models.smallnets import make_classifier
@@ -352,6 +358,83 @@ def bench_straggler(*, n: int, m: int, dim: int, rounds: int,
     }
 
 
+def bench_mixture_qps(codec: str, *, s: int, dim: int, users: int,
+                      batch: int, reps: int, seed: int = 0) -> dict:
+    """``serve/mixture_qps`` lanes: personalized predictions/sec off the
+    hot cluster plane (serve/ClusterPlaneServer) at simulated ``users``
+    population cardinality.
+
+    Every rep draws a FRESH heterogeneous request batch — ``batch`` user
+    ids from the ``users``-sized population, each with its own Dirichlet
+    mixture over the S clusters — and answers it in the server's single
+    compiled predict step (mix → unpack → vmapped forward). Per-user
+    models are never materialized; the population never exists on device —
+    exactly the property that makes the 1e6-user north star servable. The
+    fp32 lane exercises the einsum plane path, ``_int4`` the bit-packed
+    fused Pallas kernel (kernels/mixture_mix_dequant4)."""
+    import numpy as np
+
+    from repro.comm.codecs import Channel, int4_pack
+    from repro.serve import ClusterPlaneServer
+
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    _, apply, *_ = make_classifier("mlp", key, dim, 4)
+
+    def model_init(k):
+        p, *_ = make_classifier("mlp", k, dim, 4)
+        return p
+
+    spec = make_pack_spec(jax.eval_shape(model_init, key))
+    plane = jnp.stack([pack(model_init(jax.random.PRNGKey(seed + i)), spec)
+                       for i in range(s)])
+    qblock = 64
+    if codec == "fp32":
+        server = ClusterPlaneServer(spec, plane=plane, apply_fn=apply)
+    else:
+        ch = Channel(CommConfig(codec=codec, block=qblock), spec.size)
+        enc = ch.encode(plane, key, rounding="nearest")
+        kw = {"plane_q": enc["q"]} if codec == "int8" else \
+            {"plane_packed": int4_pack(enc["q"])}
+        server = ClusterPlaneServer(spec, codec=codec, qblock=qblock,
+                                    plane_scale=enc["scale"],
+                                    apply_fn=apply, **kw)
+
+    def request_batch():
+        # ids drawn from the full population; mixtures are per-user
+        # functions of the id (nothing per-user is ever materialized)
+        ids = rng.integers(0, users, size=batch)
+        u = rng.dirichlet(np.ones(s), size=batch).astype(np.float32)
+        x = rng.normal(size=(batch, dim)).astype(np.float32)
+        del ids
+        return u, x
+
+    u, x = request_batch()
+    t0 = time.perf_counter()
+    _block(server.predict(u, x))
+    compile_s = time.perf_counter() - t0
+    times = []
+    for _ in range(reps):
+        u, x = request_batch()
+        t0 = time.perf_counter()
+        _block(server.predict(u, x))
+        times.append(time.perf_counter() - t0)
+    med = statistics.median(times)
+    assert server.n_compiles == 1, server.n_compiles
+    return {
+        "lane": ("serve/mixture_qps" if codec == "fp32"
+                 else f"serve/mixture_qps_{codec}"),
+        "codec": codec, "n_clusters": s, "n_params": spec.size,
+        "users": users, "batch": batch,
+        "compile_s": round(compile_s, 4),
+        "round_ms": round(min(times) * 1e3, 4),
+        "round_ms_median": round(med * 1e3, 4),
+        "qps": round(batch / med, 1),
+        "n_compiles": server.n_compiles,
+        "n_dispatches": server.n_dispatches,
+    }
+
+
 def bench_method_pair(method: str, *, n: int, m: int, dim: int, tau: int,
                       reps: int, seed: int = 0) -> list[dict]:
     """Registry baseline steps, pytree vs packed (N, X)/(S, N, X) plane —
@@ -465,6 +548,19 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
     print(f"{stg['lane']:>24s}  round {stg['round_ms']:9.2f} ms   "
           f"(N={stg['n_clients']}, 30% slow, max stale "
           f"{stg['max_staleness']}, {stg['n_dispatches']} dispatch)")
+    # mixture-serving lanes: personalized predictions/sec off the hot
+    # cluster plane (fp32 einsum + bit-packed int4 fused kernel) at
+    # simulated 1e6-user population cardinality
+    serve_lanes = []
+    for codec in ("fp32", "int4"):
+        row = bench_mixture_qps(codec, s=4, dim=dim, users=1_000_000,
+                                batch=64 if fast else 256,
+                                reps=min(reps, 40))
+        results.append(row)
+        serve_lanes.append(row)
+        print(f"{row['lane']:>24s}  batch {row['round_ms']:9.2f} ms   "
+              f"({row['qps']:>9.1f} users/s, B={row['batch']}, "
+              f"{row['n_compiles']} compile)")
     comparisons = []
     for model in ("mlp", "conv"):
         for regime in ("full", "stream"):
@@ -501,6 +597,7 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
         "results": results,
         "comparisons": comparisons,
         "comm_lanes": comm_lanes,
+        "serve_lanes": serve_lanes,
     }
     out = os.path.abspath(out)
     with open(out, "w") as f:

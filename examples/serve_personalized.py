@@ -1,5 +1,7 @@
-"""Train a small FedSPD federation of LM clients, then serve one client's
-personalized model with batched requests.
+"""Train a small FedSPD federation of LM clients, export the consensus
+cluster plane as a servable artifact, then serve personalized mixtures —
+one trained client's row AND a heterogeneous request batch — off the hot
+plane through the serve/ subsystem.
 
     PYTHONPATH=src python examples/serve_personalized.py --arch mamba2-370m
 
@@ -18,18 +20,29 @@ def main(argv=None):
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--codec", default="int4",
+                    choices=["fp32", "int8", "int4"],
+                    help="plane shipping format for the servable export")
     args = ap.parse_args(argv)
 
-    ckpt = "/tmp/fedspd_federation.npz"
+    artifact = "/tmp/fedspd_servable.npz"
     print("=== phase 1: FedSPD training across", args.clients, "clients ===")
     train_mod.main([
         "--arch", args.arch, "--smoke", "--rounds", str(args.rounds),
         "--clients", str(args.clients), "--batch", "2", "--seq", "48",
-        "--eval-every", "4", "--save", ckpt,
+        "--eval-every", "4", "--export-servable", artifact,
+        "--export-codec", args.codec,
     ])
-    print("\n=== phase 2: serve client 0's personalized model ===")
+    print("\n=== phase 2: serve client 0's trained mixture ===")
     serve_mod.main([
-        "--arch", args.arch, "--smoke", "--ckpt", ckpt, "--client", "0",
+        "--arch", args.arch, "--smoke", "--artifact", artifact,
+        "--codec", args.codec, "--client", "0",
+        "--batch", "4", "--prompt-len", "16", "--gen", "8",
+    ])
+    print("\n=== phase 3: heterogeneous batch (explicit mixture) ===")
+    serve_mod.main([
+        "--arch", args.arch, "--smoke", "--artifact", artifact,
+        "--codec", args.codec, "--mixture", "0.7,0.3",
         "--batch", "4", "--prompt-len", "16", "--gen", "8",
     ])
 

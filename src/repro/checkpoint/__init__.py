@@ -1,1 +1,7 @@
-from repro.checkpoint.ckpt import latest, restore, save  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CkptManifest,
+    latest,
+    read_manifest,
+    restore,
+    save,
+)

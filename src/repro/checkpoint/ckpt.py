@@ -1,21 +1,116 @@
-"""Checkpointing: pytree <-> npz with structural paths.
+"""Checkpointing: pytree <-> npz with structural paths + typed manifest.
 
 FL-aware: FedSPD state (cluster centers with (S, N, ...) leading axes,
 mixture coefficients, assignments, round counter) is just a pytree, so the
 same mechanism checkpoints single-model training and full federations.
+
+The sidecar that used to be a free-form JSON blob (``__metadata__`` bytes
+in a uint8 array, read back with ``meta.get(..., 1)`` silent defaults) is
+now a typed ``CkptManifest``: what a reader needs to interpret the arrays
+— arch, client/cluster cardinality, plane shape, PackSpec digest, wire
+codec — as declared fields, with ``need``/``check`` raising errors that
+NAME the missing or mismatched field. Legacy blobs still load (upconverted
+with a DeprecationWarning) for one release.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import tempfile
-from typing import Any
+import warnings
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
 PyTree = Any
 _SEP = "|"
+_MANIFEST_KEY = "__manifest__"
+_LEGACY_KEY = "__metadata__"
+
+MANIFEST_VERSION = 2
+
+# Fields a manifest declares (everything else rides in ``extra``).
+_FIELDS = ("kind", "arch", "n_clients", "n_clusters", "plane_shape",
+           "pack_digest", "codec", "qblock")
+
+
+@dataclasses.dataclass(frozen=True)
+class CkptManifest:
+    """Typed checkpoint sidecar. ``None`` means "writer did not declare
+    it" — readers that depend on a field call ``need(...)`` and get a
+    hard error naming it, instead of a silent default."""
+
+    kind: str = "checkpoint"            # "checkpoint" | "servable" | ...
+    arch: Optional[str] = None          # model registry name
+    n_clients: Optional[int] = None     # N
+    n_clusters: Optional[int] = None    # S
+    plane_shape: Optional[tuple] = None  # packed plane dims, e.g. (S, X)
+    pack_digest: Optional[str] = None   # PackSpec.digest of the layout
+    codec: str = "fp32"                 # wire codec of stored plane
+    qblock: Optional[int] = None        # quantization block (quant codecs)
+    version: int = MANIFEST_VERSION
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def need(self, *fields: str) -> "CkptManifest":
+        """Assert the named fields were declared by the writer; error
+        names every missing one (no ``.get(..., default)`` fallbacks)."""
+        missing = [f for f in fields if getattr(self, f, None) is None]
+        if missing:
+            raise KeyError(
+                "checkpoint manifest missing required field(s) "
+                f"{missing} (kind={self.kind!r}); re-export with a writer "
+                "that declares them"
+            )
+        return self
+
+    def check(self, **expected: Any) -> "CkptManifest":
+        """Assert declared fields match ``expected`` exactly; mismatches
+        are reported per-field with both values."""
+        bad = []
+        for f, want in expected.items():
+            got = getattr(self, f)
+            if isinstance(got, tuple) or isinstance(want, (tuple, list)):
+                got, want = tuple(got or ()), tuple(want or ())
+            if got != want:
+                bad.append(f"{f}: manifest {got!r} != expected {want!r}")
+        if bad:
+            raise ValueError(
+                "checkpoint manifest mismatch — " + "; ".join(bad)
+            )
+        return self
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        if d["plane_shape"] is not None:
+            d["plane_shape"] = list(d["plane_shape"])
+        return json.dumps(d)
+
+    @classmethod
+    def from_json(cls, raw: str) -> "CkptManifest":
+        d = json.loads(raw)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = {k: d.pop(k) for k in list(d) if k not in known}
+        if d.get("plane_shape") is not None:
+            d["plane_shape"] = tuple(d["plane_shape"])
+        if unknown:
+            d.setdefault("extra", {}).update(unknown)
+        return cls(**d)
+
+    @classmethod
+    def from_legacy(cls, meta: dict) -> "CkptManifest":
+        """Upconvert a v1 free-form metadata dict: recognized keys become
+        declared fields, the rest lands in ``extra`` verbatim."""
+        meta = dict(meta)
+        kw: dict[str, Any] = {"version": 1}
+        for f in _FIELDS:
+            if f in meta:
+                kw[f] = meta.pop(f)
+        if kw.get("plane_shape") is not None:
+            kw["plane_shape"] = tuple(kw["plane_shape"])
+        kw["extra"] = meta
+        return cls(**kw)
 
 
 def _paths(tree: PyTree) -> list[tuple[str, Any]]:
@@ -27,18 +122,35 @@ def _paths(tree: PyTree) -> list[tuple[str, Any]]:
     return out
 
 
-def save(path: str, tree: PyTree, metadata: dict | None = None) -> None:
-    """Atomic save of a pytree (+ JSON metadata) to ``path`` (.npz)."""
+def save(path: str, tree: PyTree, manifest: CkptManifest | None = None,
+         metadata: dict | None = None) -> None:
+    """Atomic save of a pytree (+ manifest) to ``path`` (.npz).
+
+    ``metadata=`` (the v1 loose-dict sidecar) still works but warns; the
+    dict is upconverted through ``CkptManifest.from_legacy`` so readers
+    see one format either way.
+    """
+    if metadata is not None:
+        warnings.warn(
+            "ckpt.save(metadata=...) is deprecated; pass "
+            "manifest=CkptManifest(...) instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        if manifest is not None:
+            raise ValueError("pass manifest= or metadata=, not both")
+        manifest = dataclasses.replace(
+            CkptManifest.from_legacy(metadata), version=MANIFEST_VERSION)
+    manifest = manifest or CkptManifest()
     arrays = {}
     for key, leaf in _paths(tree):
         arrays[key] = np.asarray(leaf)
-    meta = json.dumps(metadata or {})
+    raw = manifest.to_json().encode()
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
     os.close(fd)
     try:
         with open(tmp, "wb") as f:
-            np.savez(f, __metadata__=np.frombuffer(meta.encode(), dtype=np.uint8),
+            np.savez(f, **{_MANIFEST_KEY: np.frombuffer(raw, dtype=np.uint8)},
                      **arrays)
         os.replace(tmp, path)
     finally:
@@ -46,10 +158,31 @@ def save(path: str, tree: PyTree, metadata: dict | None = None) -> None:
             os.remove(tmp)
 
 
-def restore(path: str, like: PyTree) -> tuple[PyTree, dict]:
+def _load_manifest(data) -> CkptManifest:
+    if _MANIFEST_KEY in data:
+        return CkptManifest.from_json(
+            data[_MANIFEST_KEY].tobytes().decode())
+    if _LEGACY_KEY in data:
+        warnings.warn(
+            "loading legacy __metadata__ JSON-blob checkpoint; re-save "
+            "with the CkptManifest writer (support lasts one release)",
+            DeprecationWarning, stacklevel=3,
+        )
+        return CkptManifest.from_legacy(
+            json.loads(data[_LEGACY_KEY].tobytes().decode()))
+    return CkptManifest(version=1)
+
+
+def read_manifest(path: str) -> CkptManifest:
+    """Peek at a checkpoint's manifest without loading the arrays."""
+    with np.load(path) as data:
+        return _load_manifest(data)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, CkptManifest]:
     """Restore into the structure of ``like`` (shapes/dtypes validated)."""
     with np.load(path) as data:
-        meta_raw = data["__metadata__"].tobytes().decode() if "__metadata__" in data else "{}"
+        manifest = _load_manifest(data)
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
         for pathk, leaf in flat:
@@ -63,7 +196,7 @@ def restore(path: str, like: PyTree) -> tuple[PyTree, dict]:
                     f"{np.shape(leaf)}"
                 )
             leaves.append(arr.astype(np.asarray(leaf).dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves), json.loads(meta_raw)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
 
 
 def latest(dirpath: str, prefix: str = "ckpt_") -> str | None:

@@ -11,6 +11,8 @@ from repro.comm.codecs import (
     WithEF,
     available_codecs,
     exchange,
+    int4_pack,
+    int4_unpack,
     join_ef,
     make_channel,
     quant_decode,
@@ -27,6 +29,8 @@ __all__ = [
     "WithEF",
     "available_codecs",
     "exchange",
+    "int4_pack",
+    "int4_unpack",
     "join_ef",
     "make_channel",
     "split_ef",

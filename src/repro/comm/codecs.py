@@ -18,9 +18,14 @@ Codecs (``CommConfig.codec``):
   scales: each ``block``-wide slice of the X axis is scaled by
   ``max|x| / qmax`` and rounded stochastically (``floor(y + u)``,
   u ~ U[0,1)), which makes the codec UNBIASED: E[decode(encode(x))] = x.
-  Wire cost ``ceil(X·bits/8) + 4·ceil(X/block)`` bytes per message.
-  The int4 payload is simulated with int8 storage in [-7, 7] (host memory
-  is not the wire); accounting uses the packed-nibble width.
+  Wire cost: int8 ships one byte per value + fp32 scales
+  (``X + 4·ceil(X/block)``); int4 ships REAL paired nibbles in uint8 +
+  fp16 scales (``ceil(X/2) + 2·ceil(X/block)``). The int4 device payload
+  keeps int8 storage in [-7, 7] — compute reads it unpacked — but the
+  serialized wire/disk image (``Channel.serialize_payload``) is the
+  bit-packed form, and its byte length equals ``wire_model_bytes``
+  EXACTLY. int4 scales are rounded through fp16 at encode time so the
+  device decode and the wire decode are bit-identical.
 - ``topk``  magnitude sparsification: the k largest-|x| entries of each
   (X,)-message survive as (value, index) pairs; 8k bytes per message.
   Top-k is BIASED — pair it with ``error_feedback=True`` so the dropped
@@ -94,13 +99,23 @@ def _pad_width(x_width: int, block: int) -> tuple[int, int]:
 
 
 def quant_encode(x: jnp.ndarray, key: jax.Array, *, bits: int,
-                 block: int) -> dict:
+                 block: int, scale_dtype=jnp.float32,
+                 rounding: str = "stochastic") -> dict:
     """x (..., X) -> {"q": (..., Xp) int8, "scale": (..., Xp/block) f32}.
 
     Xp pads X up to a whole number of scale blocks; the padded tail
     quantizes to exact zeros, so the fused dequantize+mix kernel can run
     on the padded width with no edge special-casing and the caller crops
-    the output back to X."""
+    the output back to X.
+
+    ``scale_dtype`` rounds the per-block scales through a narrower wire
+    dtype (int4 ships fp16 scales) BEFORE the division, so quantizing and
+    dequantizing with the stored scale keeps the one-step error bound and
+    the device stream is bit-identical to what a receiver reconstructs
+    from the serialized payload. ``rounding="nearest"`` (u = 1/2,
+    ``key`` may be None) is the deterministic variant used when shipping
+    a plane once — e.g. a servable artifact — where unbiasedness across
+    repeated sends buys nothing and halving the worst-case error does."""
     x_width = x.shape[-1]
     nq, xp = _pad_width(x_width, block)
     qmax = float(2 ** (bits - 1) - 1)
@@ -108,8 +123,15 @@ def quant_encode(x: jnp.ndarray, key: jax.Array, *, bits: int,
         x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, xp - x_width)]
     ).reshape(x.shape[:-1] + (nq, block))
     scale = jnp.max(jnp.abs(xb), axis=-1) / qmax          # (..., nq)
+    if jnp.dtype(scale_dtype) != jnp.float32:
+        scale = scale.astype(scale_dtype).astype(jnp.float32)
     y = xb / jnp.maximum(scale, 1e-12)[..., None]          # |y| <= qmax
-    u = jax.random.uniform(key, xb.shape, jnp.float32)
+    if rounding == "nearest":
+        u = 0.5
+    elif rounding == "stochastic":
+        u = jax.random.uniform(key, xb.shape, jnp.float32)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
     q = jnp.clip(jnp.floor(y + u), -qmax, qmax).astype(jnp.int8)
     return {"q": q.reshape(x.shape[:-1] + (xp,)), "scale": scale}
 
@@ -119,6 +141,40 @@ def quant_decode(enc: dict, *, block: int, x_width: int) -> jnp.ndarray:
     xb = q.reshape(q.shape[:-1] + (scale.shape[-1], block))
     out = xb.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
     return out.reshape(q.shape)[..., :x_width]
+
+
+# --------------------------------------------------------------------------
+# int4 bit packing: paired two's-complement nibbles in uint8
+# --------------------------------------------------------------------------
+
+
+def int4_pack(q: jnp.ndarray) -> jnp.ndarray:
+    """(..., W) int8 values in [-8, 7] -> (..., ceil(W/2)) uint8.
+
+    Adjacent pairs along the last axis share one byte: element 2i in the
+    low nibble, 2i+1 in the high nibble, both as two's-complement 4-bit
+    values. Odd widths pad one zero nibble (the wire format's
+    ``ceil(X/2)``). Works identically as host numpy or traced jnp."""
+    w = q.shape[-1]
+    if w % 2:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 1)])
+    lo = q[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = q[..., 1::2].astype(jnp.uint8) & 0xF
+    return lo | (hi << 4)
+
+
+def int4_unpack(packed: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Inverse of ``int4_pack``: (..., ceil(W/2)) uint8 -> (..., W) int8.
+
+    Bit-exact: ``int4_unpack(int4_pack(q), q.shape[-1]) == q`` for every
+    int8 ``q`` in [-8, 7] (asserted in tests/test_comm.py)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    v = jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[:-1] + (2 * packed.shape[-1],)
+    )
+    v = v - jnp.asarray(16, jnp.int8) * (v > 7).astype(jnp.int8)
+    return v[..., :width]
 
 
 # --------------------------------------------------------------------------
@@ -177,14 +233,30 @@ class Channel:
         return self.cfg.k if self.cfg.k is not None else max(1, self.x // 16)
 
     @property
+    def scale_wire_dtype(self):
+        """Dtype the per-block scales ship in: fp16 for int4 (half the
+        scale overhead of a codec whose whole point is halving bytes),
+        fp32 for int8. Encode rounds through this dtype, so device and
+        wire decodes agree bit for bit."""
+        return np.float16 if self.cfg.codec == "int4" else np.float32
+
+    @property
+    def scale_bytes(self) -> int:
+        """Per-message scale payload: one ``scale_wire_dtype`` scalar per
+        quantization block."""
+        nq, _ = _pad_width(self.x, self.cfg.block)
+        return int(np.dtype(self.scale_wire_dtype).itemsize * nq)
+
+    @property
     def wire_model_bytes(self) -> int:
         c = self.cfg
         if c.codec == "fp32":
             return 4 * self.x
-        if c.codec in ("int8", "int4"):
-            nq, _ = _pad_width(self.x, c.block)
-            bits = _quant_bits(c.codec)
-            return int(-(-self.x * bits // 8) + 4 * nq)
+        if c.codec == "int8":
+            return int(self.x + self.scale_bytes)
+        if c.codec == "int4":
+            # paired nibbles: exactly what serialize_payload emits
+            return int(-(-self.x // 2) + self.scale_bytes)
         return int(8 * min(self.k, self.x))  # topk: fp32 value + int32 index
 
     def wire_ratio(self, logical_model_bytes: int) -> float:
@@ -193,11 +265,14 @@ class Channel:
 
     # -------------------------------------------------- encode / decode
 
-    def encode(self, x: jnp.ndarray, key: jax.Array) -> dict:
+    def encode(self, x: jnp.ndarray, key: jax.Array, *,
+               rounding: str = "stochastic") -> dict:
         c = self.cfg
         if c.codec in ("int8", "int4"):
             return quant_encode(x, key, bits=_quant_bits(c.codec),
-                                block=c.block)
+                                block=c.block,
+                                scale_dtype=self.scale_wire_dtype,
+                                rounding=rounding)
         if c.codec == "topk":
             return topk_encode(x, min(self.k, self.x))
         raise ValueError(f"codec {c.codec!r} has no encoded form")
@@ -207,6 +282,62 @@ class Channel:
         if c.codec in ("int8", "int4"):
             return quant_decode(enc, block=c.block, x_width=self.x)
         return topk_decode(enc, x_width=self.x)
+
+    # ------------------------------------------------- wire serialization
+
+    def serialize_payload(self, enc: dict) -> bytes:
+        """The exact physical wire/disk image of an encoded message batch:
+        the quantized payload (int4: paired nibbles, int8: raw bytes)
+        followed by the per-block scales in ``scale_wire_dtype``, both
+        cropped to the LOGICAL width X (the encode-side pad is zeros the
+        receiver reconstructs). ``len(...) == n_messages ×
+        wire_model_bytes`` exactly — wire accounting is the serializer,
+        not an estimate (asserted in tests/test_comm.py)."""
+        c = self.cfg
+        if c.codec not in ("int8", "int4"):
+            raise ValueError(
+                f"codec {c.codec!r} has no plane wire format (quantized "
+                "codecs only)"
+            )
+        q = np.asarray(enc["q"])[..., : self.x]
+        sc = np.ascontiguousarray(
+            np.asarray(enc["scale"]), dtype=self.scale_wire_dtype
+        )
+        if c.codec == "int4":
+            payload = np.asarray(int4_pack(jnp.asarray(q)))
+        else:
+            payload = q.astype(np.int8)
+        return np.ascontiguousarray(payload).tobytes() + sc.tobytes()
+
+    def deserialize_payload(self, data: bytes,
+                            batch_prefix: tuple = ()) -> dict:
+        """Inverse of ``serialize_payload`` for a ``batch_prefix``-shaped
+        message batch: reconstructs the device-form encoding ({"q" int8
+        padded to whole scale blocks, "scale" f32}) such that
+        ``decode(deserialize(serialize(enc)))`` is bit-identical to
+        ``decode(enc)``."""
+        c = self.cfg
+        nq, xp = _pad_width(self.x, c.block)
+        batch = tuple(int(b) for b in batch_prefix)
+        n_msgs = int(np.prod(batch)) if batch else 1
+        if len(data) != n_msgs * self.wire_model_bytes:
+            raise ValueError(
+                f"payload is {len(data)} bytes; {batch} × "
+                f"{self.cfg.codec} messages of width {self.x} need "
+                f"{n_msgs * self.wire_model_bytes}"
+            )
+        qw = -(-self.x // 2) if c.codec == "int4" else self.x
+        split = n_msgs * qw
+        raw = np.frombuffer(data[:split], dtype=np.uint8).reshape(
+            batch + (qw,))
+        if c.codec == "int4":
+            q = np.asarray(int4_unpack(jnp.asarray(raw), self.x))
+        else:
+            q = raw.view(np.int8)
+        q = np.pad(q, [(0, 0)] * len(batch) + [(0, xp - self.x)])
+        sc = np.frombuffer(data[split:], dtype=self.scale_wire_dtype)
+        sc = sc.reshape(batch + (nq,)).astype(np.float32)
+        return {"q": jnp.asarray(q), "scale": jnp.asarray(sc)}
 
     # ---------------------------------------------- round-loop interface
 

@@ -27,6 +27,7 @@ at the API boundary (init, eval, checkpoint); everything between is flat.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Optional
 
 import jax
@@ -59,6 +60,22 @@ class PackSpec:
         representation does)."""
         return int(sum(s * np.dtype(d).itemsize
                        for s, d in zip(self.sizes, self.dtypes)))
+
+    @property
+    def digest(self) -> str:
+        """Content hash of the layout (shapes/dtypes/sizes/offsets/width).
+        A servable artifact records this so a server can refuse to unpack
+        a plane through a spec built from a different architecture, rather
+        than silently reshaping X into the wrong leaves. The treedef is
+        covered indirectly: same arch ⇒ same flatten order."""
+        parts = [
+            ";".join(f"{s}:{np.dtype(d).name}"
+                     for s, d in zip(self.shapes, self.dtypes)),
+            ",".join(map(str, self.sizes)),
+            ",".join(map(str, self.offsets)),
+            str(self.size),
+        ]
+        return hashlib.sha1("|".join(parts).encode()).hexdigest()[:16]
 
 
 def make_pack_spec(example: PyTree, dtype=jnp.float32) -> PackSpec:

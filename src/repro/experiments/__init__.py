@@ -6,6 +6,11 @@
 # models (stragglers, availability, stale gossip).
 from repro.comm.codecs import CommConfig  # noqa: F401  (RunConfig(comm=...))
 from repro.experiments.config import RunConfig  # noqa: F401
+from repro.experiments.export import (  # noqa: F401
+    cluster_plane,
+    export_run,
+    export_servable,
+)
 from repro.experiments.heterogeneity import (  # noqa: F401
     ClientSystemModel,
     HetCarry,

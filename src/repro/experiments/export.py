@@ -1,0 +1,71 @@
+"""Export: a finished FedSPD run -> a servable cluster-plane artifact.
+
+The run owns N·S cluster-center copies (consensus makes the N copies of
+each cluster agree); the server needs the S consensus models as one
+(S, X) plane plus the trained (N, S) mixture table. ``cluster_plane``
+lifts the first from a final method state (packed plane OR pytree
+engine), ``export_servable`` ships it in a serve/artifact.py format, and
+``export_run`` does both straight from a RunResult produced with
+``RunConfig(options={"keep_state": True})`` (experiments/runner.py stashes
+the final state + PackSpec in ``extras``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import CkptManifest
+from repro.core.packing import PackSpec, make_pack_spec, pack
+from repro.serve.artifact import save_servable
+
+
+def cluster_plane(state, spec: Optional[PackSpec] = None) -> jnp.ndarray:
+    """(S, X) consensus cluster plane from a final FedSPD state: the mean
+    over the client axis of each cluster's N center copies (the consensus
+    estimate — after convergence the copies agree and the mean is any of
+    them). Accepts both engines: a packed (S, N, X) ``centers`` plane, or
+    the pytree engine's (S, N, ...) leaves packed through ``spec``."""
+    centers = state.centers
+    if isinstance(centers, jnp.ndarray) and centers.ndim == 3:
+        plane_snx = centers
+    else:
+        if spec is None:
+            raise ValueError(
+                "pytree-engine state needs spec= to pack the centers")
+        plane_snx = pack(centers, spec)           # (S, N, X)
+    return plane_snx.mean(axis=1)
+
+
+def export_servable(state, spec: PackSpec, path: str, *, arch: str,
+                    codec: str = "fp32", qblock: int = 64,
+                    key=None) -> CkptManifest:
+    """Ship a final FedSPD state as a servable artifact: consensus plane
+    in ``codec`` form + the trained (N, S) mixture table."""
+    plane = cluster_plane(state, spec)
+    return save_servable(path, plane, spec, arch=arch, u=state.u,
+                         codec=codec, qblock=qblock, key=key)
+
+
+def export_run(result, path: str, *, arch: str = "mlp",
+               codec: str = "fp32", qblock: int = 64,
+               key=None) -> CkptManifest:
+    """Export straight from a RunResult. The run must have been driven
+    with ``RunConfig(options={"keep_state": True})`` so the final state
+    (and its PackSpec, when the packed engine ran) is in ``extras``."""
+    if "state" not in result.extras:
+        raise ValueError(
+            "RunResult has no final state; run with "
+            'RunConfig(options={"keep_state": True}) to export'
+        )
+    state = result.extras["state"]
+    spec = result.extras.get("pack_spec")
+    if spec is None:
+        # pytree engine: derive the layout from the centers' leaves
+        # (strip the (S, N) prefix from the first cluster/client copy)
+        import jax
+
+        one = jax.tree.map(lambda l: l[0, 0], state.centers)
+        spec = make_pack_spec(one)
+    return export_servable(state, spec, path, arch=arch, codec=codec,
+                           qblock=qblock, key=key)

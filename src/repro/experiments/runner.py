@@ -219,6 +219,12 @@ def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
         # final per-client staleness counters (heterogeneity scenarios):
         # 0 = exchanged in the last round, k = k rounds out of contact
         extras["staleness"] = staleness
+    if ctx.opt("keep_state"):
+        # serve-export path (experiments/export.py): hand back the final
+        # method state + its PackSpec so export_run can lift the cluster
+        # plane without re-deriving the run's packing
+        extras["state"] = state
+        extras["pack_spec"] = ctx.options.get("_pack_spec")
     acc = np.asarray(acc)
     return RunResult(
         method=method.name,

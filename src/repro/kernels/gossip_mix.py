@@ -141,7 +141,7 @@ def _mix_dequant_kernel(w_ref, q_ref, sc_ref, o_ref, *, qblock: int):
     plane: o = W · (q ⊙ repeat(scale, qblock)). The mix reads int8 values
     (plus one fp32 scale per ``qblock`` columns) from HBM — ~4× less read
     traffic than mixing a materialized fp32 decode."""
-    w = w_ref[...].astype(jnp.float32)        # (N, N)
+    w = w_ref[...].astype(jnp.float32)        # (M, N)
     q = q_ref[...].astype(jnp.float32)        # (N, x_block) int8 payload
     sc = sc_ref[...].astype(jnp.float32)      # (N, x_block // qblock)
     c = q * jnp.repeat(sc, qblock, axis=1)
@@ -151,7 +151,8 @@ def _mix_dequant_kernel(w_ref, q_ref, sc_ref, o_ref, *, qblock: int):
 
 
 def gossip_mix_dequant(
-    w: jnp.ndarray,       # (N, N) row-stochastic mixing weights
+    w: jnp.ndarray,       # (M, N) mixing weights (M == N for gossip;
+                          # M == B request rows for mixture serving)
     q: jnp.ndarray,       # (N, Xp) int8 quantized plane (comm/codecs)
     scales: jnp.ndarray,  # (N, Xp // qblock) fp32 per-block scales
     *,
@@ -163,6 +164,11 @@ def gossip_mix_dequant(
     payload (per-block scales) and apply Eq. (1)'s W·C on each slab without
     ever materializing the fp32 decode in HBM.
 
+    The weight matrix may be rectangular: gossip passes the square (N, N)
+    round-mixing matrix; the serving layer (serve/server.py) passes a
+    (B, S) batch of per-request mixture weights over the S-row cluster
+    plane — Eq. (2) as the same fused kernel.
+
     ``q`` comes padded to a whole number of scale blocks
     (comm/codecs.quant_encode pads the tail with exact-zero quanta), so the
     grid tiles an X axis that is a multiple of ``qblock`` and the slab's
@@ -171,6 +177,9 @@ def gossip_mix_dequant(
     here (equal-width, 128-lane aligned) then rounded up to a multiple of
     ``qblock`` so every scale belongs to exactly one slab."""
     n, xp = q.shape
+    m = w.shape[0]
+    if w.shape[1] != n:
+        raise ValueError(f"weights {w.shape} do not match plane rows {n}")
     if xp % qblock != 0 or scales.shape != (n, xp // qblock):
         raise ValueError(
             f"quantized plane {q.shape} / scales {scales.shape} do not "
@@ -182,14 +191,77 @@ def gossip_mix_dequant(
         functools.partial(_mix_dequant_kernel, qblock=qblock),
         grid=(-(-xp // x_block),),
         in_specs=[
-            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
             pl.BlockSpec((n, x_block), lambda i: (0, i)),
             pl.BlockSpec((n, x_block // qblock), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((n, x_block), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, xp), jnp.float32),
+        out_specs=pl.BlockSpec((m, x_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, xp), jnp.float32),
         interpret=interpret,
     )(w, q, scales)
+
+
+def _mixture_dequant4_kernel(u_ref, p_ref, sc_ref, o_ref, *, qblock: int):
+    """Fused nibble-unpack + dequantize + mixture matmul on one slab of
+    the BIT-PACKED int4 cluster plane: o = U · (unpack4(p) ⊙ scales).
+    The plane stays at ~0.5 byte/param in HBM — the serve path's hot
+    format — and the fp32 cluster models never exist outside registers."""
+    u = u_ref[...].astype(jnp.float32)        # (B, S)
+    p = p_ref[...]                            # (S, x_block // 2) uint8
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    q = jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], 2 * p.shape[1])
+    q = q - jnp.asarray(16, jnp.int8) * (q > 7).astype(jnp.int8)
+    sc = sc_ref[...].astype(jnp.float32)      # (S, x_block // qblock)
+    c = q.astype(jnp.float32) * jnp.repeat(sc, qblock, axis=1)
+    o_ref[...] = jax.lax.dot_general(
+        u, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def mixture_mix_dequant4(
+    u: jnp.ndarray,       # (B, S) per-request mixture weights (Eq. (2))
+    packed: jnp.ndarray,  # (S, Xp // 2) uint8 bit-packed int4 plane
+    scales: jnp.ndarray,  # (S, Xp // qblock) fp32 per-block scales
+    *,
+    qblock: int,                 # quantization block width along X (even)
+    x_block: int | None = None,  # default: 2048 compiled, whole-X interpret
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Personalized-parameter materialization for a request batch in ONE
+    ``pallas_call`` over the int4 BIT-PACKED cluster plane: each grid step
+    unpacks a (S, x_block) slab from its paired-nibble uint8 image,
+    dequantizes with the per-block scales, and contracts with the (B, S)
+    mixture weights — Eq. (2) fused with the int4 decode, reading half a
+    byte per parameter from HBM. Companion of ``gossip_mix_dequant``
+    (which reads the int8-storage payload); the caller crops the (B, Xp)
+    result back to the logical width X."""
+    s, xh = packed.shape
+    xp = 2 * xh
+    if qblock % 2 or xp % qblock != 0 or scales.shape != (s, xp // qblock):
+        raise ValueError(
+            f"packed plane {packed.shape} / scales {scales.shape} do not "
+            f"tile with an even qblock={qblock}"
+        )
+    b = u.shape[0]
+    if u.shape != (b, s):
+        raise ValueError(f"mixture weights {u.shape} != (B, {s})")
+    x_block = _plan_blocks(xp, x_block, interpret)
+    x_block = min(-(-x_block // qblock) * qblock, xp)
+    if x_block % 2:  # nibble pairs must not straddle slabs
+        x_block = min(2 * x_block, xp)
+    return pl.pallas_call(
+        functools.partial(_mixture_dequant4_kernel, qblock=qblock),
+        grid=(-(-xp // x_block),),
+        in_specs=[
+            pl.BlockSpec((b, s), lambda i: (0, 0)),
+            pl.BlockSpec((s, x_block // 2), lambda i: (0, i)),
+            pl.BlockSpec((s, x_block // qblock), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, x_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, xp), jnp.float32),
+        interpret=interpret,
+    )(u, packed, scales)
 
 
 def gossip_mix_encoded(w: jnp.ndarray, enc: dict, *, qblock: int,

@@ -1,77 +1,113 @@
-"""Serving launcher: batched generation from a personalized FedSPD model.
+"""Serving launcher: thin CLI over the serve/ mixture-serving subsystem.
 
-After FedSPD training each client owns a personalized model x_i (Eq. 2 +
-final local epochs). This driver serves one such model: prefill a batch of
-requests, then decode tokens autoregressively. On the production mesh,
-weights are tensor-parallel over "model" and requests data-parallel over
-("pod","data"); the compiled program for the big shapes is proven by
-launch/dryrun.py (decode_32k / long_500k lower serve_step, not train_step).
+After FedSPD training the product is Eq. (2)'s per-user mixture of S
+cluster models. This driver builds a ``ServeConfig`` from flags, loads a
+servable artifact (experiments/export.py / ``launch/train --export-
+servable``), and answers a request batch off the hot cluster plane in ONE
+compiled program — per-user models are never materialized.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --smoke \\
-      --batch 4 --prompt-len 32 --gen 16
+      --artifact runs/servable.npz --client 0 --batch 4 --gen 16
+
+  # heterogeneous batch: every request its own mixture over S clusters
+  ... --mixture 0.7,0.3
+
+Legacy surface (DeprecationWarning shims, one release):
+  --ckpt/--client   pytree-restore serving of one materialized client
+  generate(...)     module-level per-model decode loop
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.configs.base import ARCH_ALIASES, get_config, get_smoke_config
+from repro.configs.base import ARCH_ALIASES
+from repro.core.packing import make_pack_spec, pack
 from repro.models.registry import build_model
+from repro.serve import ClusterPlaneServer, ServeConfig, load_servable
 
 
 def generate(bundle, params, prompt_tokens, *, gen_len: int, max_len: int,
              frames=None, temperature: float = 0.0, key=None):
-    """Prefill + greedy/temperature decode. Returns (B, gen_len) tokens."""
-    # the audio family's prefill does NOT consume the prompt
-    # (encdec_prefill_cross only fills cross-attention K/V, pos stays 0):
-    # fail loudly before paying the prefill compile instead of decoding
-    # against an empty self-attention cache (the old dynamic pos check
-    # made this path die later with an undefined `logits`)
+    """DEPRECATED: serve through serve.ClusterPlaneServer / ServeConfig.
+
+    Kept for one release as a shim: the materialized ``params`` pytree is
+    packed as a single-cluster plane and decoded by the server's
+    one-compile step (identical tokens, same re-score-last-prompt-token
+    contract). ``max_len`` is derived by the server; the argument is
+    accepted and ignored beyond a sanity check."""
+    warnings.warn(
+        "launch.serve.generate is deprecated; build a serve.ServeConfig "
+        "and use serve.ClusterPlaneServer.generate",
+        DeprecationWarning, stacklevel=2,
+    )
     if frames is not None:
         raise NotImplementedError(
             "audio serving needs a decoder prefill over the prompt tokens "
             "(encdec_prefill_cross only fills the cross-attention cache); "
             "use launch/dryrun.py's serve shapes for audio"
         )
-    cfg = bundle.cfg
-    b, lp = prompt_tokens.shape
-    cache = bundle.init_cache(b, max_len)
-    cache = jax.jit(bundle.prefill)(params, {"tokens": prompt_tokens}, cache)
+    del max_len  # server derives prompt_len + gen + 1 itself
+    spec = make_pack_spec(params)
+    plane = pack(params, spec)[None, :]                    # (1, X)
+    server = ClusterPlaneServer(spec, plane=plane, bundle=bundle)
+    b = prompt_tokens.shape[0]
+    u = jnp.ones((b, 1), jnp.float32)
+    return server.generate(u, prompt_tokens, gen=gen_len,
+                           temperature=temperature, key=key)
 
-    # first generated token comes from the last prompt logits: the LM
-    # bundles' prefill consumes the full prompt WITHOUT emitting logits
-    # (pos lands at lp by construction — a static property of the model
-    # bundles, not runtime data), so the first token always comes from
-    # re-scoring the last prompt token. Reading the device value back with
-    # `int(cache["pos"])` here blocked the host on the entire prefill
-    # before the first decode step could even be enqueued — a per-request
-    # sync in the generate setup; set the decode position statically.
-    step = jax.jit(bundle.decode_step)
-    cache["pos"] = jnp.asarray(lp - 1, jnp.int32)
-    logits, cache = step(params, cache, prompt_tokens[:, -1:])
-    out = []
-    tok = None
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    for t in range(gen_len):
-        if tok is None:
-            lg = logits[:, -1, : cfg.vocab]
-        else:
-            logits, cache = step(params, cache, tok)
-            lg = logits[:, -1, : cfg.vocab]
-        if temperature > 0:
-            key, k = jax.random.split(key)
-            tok = jax.random.categorical(k, lg / temperature)[:, None]
-        else:
-            tok = jnp.argmax(lg, axis=-1)[:, None]
-        tok = tok.astype(jnp.int32)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+
+def _parse_mixture(text):
+    if text is None:
+        return None
+    return np.asarray([float(t) for t in text.split(",")], np.float32)
+
+
+def build_config(args) -> ServeConfig:
+    """Flags -> resolved ServeConfig (the CLI's only config authority)."""
+    return ServeConfig(
+        arch=args.arch, smoke=args.smoke, batch=args.batch,
+        prompt_len=args.prompt_len, gen=args.gen,
+        temperature=args.temperature, client=args.client,
+        mixture=_parse_mixture(args.mixture), codec=args.codec,
+        seed=args.seed,
+    ).resolve()
+
+
+def _serve_legacy_ckpt(args, bundle, key):
+    """DEPRECATED --ckpt path: restore ONE client's materialized pytree
+    from a launch/train --save checkpoint and serve it as a single-
+    cluster plane. The manifest (or upconverted legacy blob) must declare
+    n_clients — no silent ``.get("n_clients", 1)`` default."""
+    warnings.warn(
+        "--ckpt serving is deprecated; export a servable artifact "
+        "(launch/train --export-servable / experiments.export_run) and "
+        "pass --artifact",
+        DeprecationWarning, stacklevel=2,
+    )
+    manifest = ckpt.read_manifest(args.ckpt).need("n_clients")
+    n = int(manifest.n_clients)
+    like_one = jax.eval_shape(bundle.init, key)
+    like = {
+        "personalized": jax.tree.map(
+            lambda l: np.zeros((n,) + l.shape, l.dtype), like_one),
+        "u": np.zeros((n, manifest.n_clusters or 2), np.float32),
+    }
+    blob, _ = ckpt.restore(args.ckpt, like)
+    client = args.client or 0
+    params = jax.tree.map(lambda l: jnp.asarray(l[client]),
+                          blob["personalized"])
+    spec = make_pack_spec(params)
+    plane = pack(params, spec)[None, :]
+    print(f"serving client {client}/{n} personalized model from {args.ckpt}")
+    return ClusterPlaneServer(spec, plane=plane, bundle=bundle), \
+        np.ones((args.batch, 1), np.float32)
 
 
 def main(argv=None):
@@ -82,56 +118,63 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--artifact", default=None,
+                    help="servable cluster-plane artifact "
+                         "(launch/train --export-servable)")
+    ap.add_argument("--client", type=int, default=None,
+                    help="serve this trained client's mixture row")
+    ap.add_argument("--mixture", default=None,
+                    help="explicit mixture weights, e.g. 0.7,0.3 "
+                         "(exclusive with --client)")
+    ap.add_argument("--codec", choices=("fp32", "int8", "int4"),
+                    default="fp32", help="plane shipping format expected "
+                                         "in the artifact")
     ap.add_argument("--ckpt", default=None,
-                    help="personalized checkpoint from launch/train --save")
-    ap.add_argument("--client", type=int, default=0,
-                    help="which client's personalized model to serve")
+                    help="DEPRECATED: personalized checkpoint from "
+                         "launch/train --save (use --artifact)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    bundle = build_model(cfg, attn_mode="ref" if args.smoke else "blocked")
-    key = jax.random.PRNGKey(args.seed)
+    cfg = build_config(args)
+    arch_cfg = cfg.arch_config()
+    bundle = build_model(arch_cfg, attn_mode="ref" if cfg.smoke else "blocked")
+    key = jax.random.PRNGKey(cfg.seed)
 
     if args.ckpt:
-        import numpy as _np
-        with _np.load(args.ckpt) as data:
-            import json as _json
-            meta = _json.loads(data["__metadata__"].tobytes().decode())
-            n = int(meta.get("n_clients", 1))
-        like_one = jax.eval_shape(bundle.init, key)
-        like = {
-            "personalized": jax.tree.map(
-                lambda l: _np.zeros((n,) + l.shape, l.dtype), like_one),
-            "u": _np.zeros((n, 2), _np.float32),
-        }
-        blob, _ = ckpt.restore(args.ckpt, like)
-        params = jax.tree.map(lambda l: jnp.asarray(l[args.client]),
-                              blob["personalized"])
-        print(f"serving client {args.client}/{n} personalized model from "
-              f"{args.ckpt}")
+        server, u = _serve_legacy_ckpt(args, bundle, key)
     else:
-        params = bundle.init(key)
-        print("serving a randomly initialized model (no --ckpt)")
+        spec = make_pack_spec(jax.eval_shape(bundle.init, key))
+        if args.artifact:
+            art = load_servable(args.artifact, spec)
+            art.manifest.check(arch=cfg.arch, codec=cfg.codec)
+            server = ClusterPlaneServer.from_artifact(art, spec,
+                                                      bundle=bundle)
+            u = cfg.request_mixture(server.n_clusters, art.u_table)
+            print(f"serving {server.n_clusters}-cluster {art.codec} plane "
+                  f"from {args.artifact}")
+        else:
+            # no artifact: random S=2 plane (smoke / latency probing)
+            plane = jnp.stack([
+                pack(bundle.init(jax.random.PRNGKey(cfg.seed + s)), spec)
+                for s in range(2)
+            ])
+            server = ClusterPlaneServer(spec, plane=plane, bundle=bundle)
+            u = cfg.request_mixture(2)
+            print("serving a randomly initialized 2-cluster plane "
+                  "(no --artifact)")
 
     prompts = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab, dtype=jnp.int32
+        key, (cfg.batch, cfg.prompt_len), 0, arch_cfg.vocab, dtype=jnp.int32
     )
-    frames = None
-    if cfg.family == "audio":
-        d_enc = cfg.encoder_d_model or cfg.d_model
-        frames = jnp.zeros(
-            (args.batch, cfg.encoder_frames or 16, d_enc), jnp.float32)
-
-    max_len = args.prompt_len + args.gen + 1
     t0 = time.time()
-    toks = generate(
-        bundle, params, prompts, gen_len=args.gen, max_len=max_len,
-        frames=frames, temperature=args.temperature, key=key,
-    )
+    toks = server.generate(u, prompts, gen=cfg.gen,
+                           temperature=cfg.temperature, key=key)
+    toks = jax.block_until_ready(toks)
     dt = time.time() - t0
-    print(f"generated {args.gen} tokens × {args.batch} requests in {dt:.2f}s "
-          f"({args.gen * args.batch / dt:.1f} tok/s)")
+    print(f"generated {cfg.gen} tokens × {cfg.batch} requests in {dt:.2f}s "
+          f"({cfg.gen * cfg.batch / dt:.1f} tok/s, "
+          f"{server.n_compiles} compile(s), "
+          f"{server.n_dispatches} dispatch(es))")
     print(np.asarray(toks))
 
 

@@ -125,6 +125,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    ap.add_argument("--export-servable", default=None,
+                    help="also export the consensus cluster plane as a "
+                         "servable artifact for launch/serve --artifact")
+    ap.add_argument("--export-codec", default="fp32",
+                    choices=["fp32", "int8", "int4"],
+                    help="plane shipping format for --export-servable")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -347,9 +353,24 @@ def main(argv=None):
         print(f"final staleness (rounds since last exchange): "
               f"{np.asarray(het_carry.stale)}")
     if args.save:
-        ckpt.save(args.save, {"personalized": personalized, "u": state.u},
-                  metadata={"arch": cfg.name, "n_clients": n})
+        ckpt.save(
+            args.save, {"personalized": personalized, "u": state.u},
+            manifest=ckpt.CkptManifest(
+                kind="checkpoint", arch=cfg.name, n_clients=n, n_clusters=s,
+                pack_digest=pack_spec.digest if pack_spec else None,
+            ),
+        )
         print(f"saved -> {args.save}")
+    if args.export_servable:
+        from repro.experiments.export import export_servable
+
+        spec = pack_spec or make_pack_spec(
+            jax.eval_shape(bundle.init, jax.random.PRNGKey(0)))
+        export_servable(state, spec, args.export_servable, arch=cfg.name,
+                        codec=args.export_codec,
+                        qblock=max(2, args.codec_block // 2 * 2))
+        print(f"servable plane -> {args.export_servable} "
+              f"({args.export_codec})")
 
 
 if __name__ == "__main__":

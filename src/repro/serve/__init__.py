@@ -1,0 +1,14 @@
+"""Mixture-serving subsystem: Eq. (2) as an inference service.
+
+ServeConfig (config.py) describes a session, ServableArtifact
+(artifact.py) is the shipped plane, ClusterPlaneServer (server.py)
+answers request batches off the hot plane. launch/serve.py is the CLI;
+experiments/export.py produces artifacts from finished runs.
+"""
+from repro.serve.artifact import (  # noqa: F401
+    ServableArtifact,
+    load_servable,
+    save_servable,
+)
+from repro.serve.config import SERVE_CODECS, ServeConfig  # noqa: F401
+from repro.serve.server import ClusterPlaneServer  # noqa: F401

@@ -1,0 +1,128 @@
+"""Servable artifact: the (S, X) cluster plane in its shipping format.
+
+A finished FedSPD run owns N·S cluster-center copies; what a server needs
+is the S consensus cluster models packed as one (S, X) plane, the trained
+(N, S) mixture table, and the PackSpec identity — nothing else. This
+module defines that artifact:
+
+  fp32   plane stored as the raw (S, X) float32 array
+  int8   plane stored as the EXACT wire bytes of comm/codecs'
+         ``serialize_payload`` — S · wire_model_bytes of int8 quanta +
+         fp32 per-block scales
+  int4   same, at S · wire_model_bytes = S · (ceil(X/2) + 2·nq) bytes:
+         paired two's-complement nibbles in uint8 + fp16 scales
+
+Quantized planes are encoded with ``rounding="nearest"`` — shipping is a
+one-time deterministic export, not an unbiased stochastic stream — and
+load back into the forms the fused kernels consume (int8 storage for
+``gossip_mix_dequant``, bit-packed uint8 for ``mixture_mix_dequant4``).
+The manifest pins arch / plane shape / PackSpec digest / codec so a
+server cannot silently unpack a plane through the wrong layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.comm.codecs import Channel, CommConfig, int4_pack
+from repro.core.packing import PackSpec
+
+
+@dataclasses.dataclass
+class ServableArtifact:
+    """A loaded servable plane, already in serving form."""
+
+    manifest: ckpt.CkptManifest
+    u_table: Optional[np.ndarray] = None   # (N, S) trained mixtures
+    plane: Optional[np.ndarray] = None     # (S, X) fp32 — codec == fp32
+    plane_q: Optional[np.ndarray] = None   # (S, Xp) int8 quanta (quantized)
+    plane_scale: Optional[np.ndarray] = None  # (S, Xp // qblock) fp32
+    plane_packed: Optional[np.ndarray] = None  # (S, Xp // 2) uint8 — int4
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.manifest.need("n_clusters").n_clusters)
+
+    @property
+    def codec(self) -> str:
+        return self.manifest.codec
+
+
+def save_servable(path: str, plane, spec: PackSpec, *,
+                  arch: str, u=None, codec: str = "fp32",
+                  qblock: int = 64, key=None) -> ckpt.CkptManifest:
+    """Write the (S, X) cluster plane as a servable .npz in ``codec``
+    shipping form; returns the manifest written alongside it."""
+    plane = np.asarray(plane, np.float32)
+    if plane.ndim != 2 or plane.shape[1] != spec.size:
+        raise ValueError(
+            f"plane {plane.shape} is not (S, X={spec.size}) for this spec")
+    s = plane.shape[0]
+    tree = {}
+    if u is not None:
+        u = np.asarray(u, np.float32)
+        if u.ndim != 2 or u.shape[1] != s:
+            raise ValueError(f"u table {u.shape} is not (N, S={s})")
+        tree["u"] = u
+    if codec == "fp32":
+        tree["plane"] = plane
+    elif codec in ("int8", "int4"):
+        ch = Channel(CommConfig(codec=codec, block=qblock), spec.size)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        enc = ch.encode(plane, key, rounding="nearest")
+        wire = ch.serialize_payload(enc)
+        assert len(wire) == s * ch.wire_model_bytes  # shipping-size contract
+        tree["plane_wire"] = np.frombuffer(wire, dtype=np.uint8)
+    else:
+        raise ValueError(f"codec {codec!r} is not a plane shipping format")
+    manifest = ckpt.CkptManifest(
+        kind="servable", arch=arch, n_clients=None if u is None else
+        int(u.shape[0]), n_clusters=s, plane_shape=tuple(plane.shape),
+        pack_digest=spec.digest, codec=codec,
+        qblock=qblock if codec != "fp32" else None,
+    )
+    ckpt.save(path, tree, manifest=manifest)
+    return manifest
+
+
+def load_servable(path: str,
+                  spec: Optional[PackSpec] = None) -> ServableArtifact:
+    """Load a servable artifact back into serving form, verifying the
+    manifest (kind, plane shape, PackSpec digest) field-by-field."""
+    manifest = ckpt.read_manifest(path)
+    manifest.check(kind="servable")
+    manifest.need("arch", "n_clusters", "plane_shape", "codec")
+    s, x = manifest.plane_shape
+    if spec is not None:
+        manifest.need("pack_digest").check(pack_digest=spec.digest)
+        if x != spec.size:
+            raise ValueError(
+                f"plane width {x} != PackSpec X {spec.size}")
+    like = {}
+    if manifest.n_clients is not None:
+        like["u"] = np.zeros((manifest.n_clients, s), np.float32)
+    ch = None
+    if manifest.codec == "fp32":
+        like["plane"] = np.zeros((s, x), np.float32)
+    else:
+        manifest.need("qblock")
+        ch = Channel(
+            CommConfig(codec=manifest.codec, block=manifest.qblock), x)
+        like["plane_wire"] = np.zeros((s * ch.wire_model_bytes,), np.uint8)
+    tree, _ = ckpt.restore(path, like)
+    art = ServableArtifact(manifest=manifest, u_table=tree.get("u"))
+    if manifest.codec == "fp32":
+        art.plane = np.asarray(tree["plane"])
+    else:
+        enc = ch.deserialize_payload(
+            np.asarray(tree["plane_wire"]).tobytes(), batch_prefix=(s,))
+        art.plane_q = np.asarray(enc["q"])
+        art.plane_scale = np.asarray(enc["scale"], np.float32)
+        if manifest.codec == "int4":
+            art.plane_packed = np.asarray(int4_pack(art.plane_q))
+    return art

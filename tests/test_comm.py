@@ -58,6 +58,8 @@ def test_quant_roundtrip_error_bounded_by_step(codec, block):
     nq = -(-203 // block)
     xp = np.pad(np.asarray(x), [(0, 0), (0, nq * block - 203)])
     step = np.abs(xp).reshape(7, nq, block).max(-1) / qmax  # per-block scale
+    if codec == "int4":  # int4 ships fp16 scales; the step is the fp16 one
+        step = step.astype(np.float16).astype(np.float32)
     err = np.abs(np.asarray(x_hat) - np.asarray(x))
     bound = np.repeat(step, block, axis=1)[:, :203]
     assert (err <= bound + 1e-6).all()
@@ -420,3 +422,42 @@ def test_sharded_plane_carries_ef_residual():
                          text=True, timeout=1200, env=env)
     assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
     assert "sharded comm+EF parity OK" in out.stdout
+
+
+# ---------------------------------------------------- int4 wire bit-packing
+
+
+@pytest.mark.parametrize("width", [1, 7, 16, 203])
+def test_int4_pack_unpack_bit_roundtrip(width):
+    """Paired-nibble packing is lossless for every int8 value in [-8, 7],
+    including odd widths (one zero pad nibble)."""
+    from repro.comm import int4_pack, int4_unpack
+
+    rng = np.random.default_rng(width)
+    q = rng.integers(-8, 8, size=(3, width)).astype(np.int8)
+    packed = np.asarray(int4_pack(jnp.asarray(q)))
+    assert packed.shape == (3, -(-width // 2)) and packed.dtype == np.uint8
+    np.testing.assert_array_equal(
+        np.asarray(int4_unpack(jnp.asarray(packed), width)), q)
+
+
+@pytest.mark.parametrize("codec,block,x", [
+    ("int8", 32, 203), ("int4", 16, 203), ("int4", 64, 64),
+])
+def test_serialized_payload_is_wire_exact_and_decodes_identically(
+        codec, block, x):
+    """``serialize_payload`` IS the wire accounting: its byte length is
+    n_messages x wire_model_bytes exactly, and the round-tripped encoding
+    decodes bit-identically to the device-side payload."""
+    ch = make_channel(CommConfig(codec=codec, block=block), x)
+    xs = 2.0 * jax.random.normal(jax.random.PRNGKey(0), (5, x))
+    enc = ch.encode(xs, jax.random.PRNGKey(1), rounding="nearest")
+    wire = ch.serialize_payload(enc)
+    assert len(wire) == 5 * ch.wire_model_bytes
+    back = ch.deserialize_payload(wire, batch_prefix=(5,))
+    np.testing.assert_array_equal(np.asarray(back["q"]),
+                                  np.asarray(enc["q"]))
+    np.testing.assert_array_equal(np.asarray(ch.decode(back)),
+                                  np.asarray(ch.decode(enc)))
+    with pytest.raises(ValueError, match="bytes"):
+        ch.deserialize_payload(wire[:-1], batch_prefix=(5,))

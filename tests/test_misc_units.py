@@ -39,9 +39,11 @@ def test_checkpoint_roundtrip(tmp_path):
     tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
             "b": {"c": jnp.ones((4,), jnp.int32)}}
     path = str(tmp_path / "x.npz")
-    ckpt.save(path, tree, metadata={"round": 7})
+    ckpt.save(path, tree,
+              manifest=ckpt.CkptManifest(kind="checkpoint",
+                                         extra={"round": 7}))
     back, meta = ckpt.restore(path, tree)
-    assert meta["round"] == 7
+    assert meta.kind == "checkpoint" and meta.extra["round"] == 7
     np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
     np.testing.assert_array_equal(np.asarray(back["b"]["c"]),
                                   np.asarray(tree["b"]["c"]))

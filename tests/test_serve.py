@@ -1,0 +1,443 @@
+"""Mixture-serving subsystem: the PR-8 tentpole + API-redesign satellites.
+
+Covers: ServeConfig resolve-time validation; the einsum-over-plane
+personalized apply matching materialized per-user pytrees at atol=1e-6
+across three model families; single-compile/single-dispatch assertions on
+the serve step; the int4 bit-packed fused-kernel serve path; servable
+artifacts whose quantized plane bytes equal ``wire_model_bytes`` exactly;
+the typed CkptManifest (hard errors naming fields, legacy-blob reader);
+the train→export→serve end-to-end loop; and the AST call-site guard that
+no repo caller still uses the deprecated serving surface.
+"""
+import ast
+import pathlib
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.comm.codecs import Channel, CommConfig
+from repro.configs.base import get_smoke_config
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.core.packing import make_pack_spec, pack, unpack
+from repro.data.synthetic import make_mixture_classification
+from repro.experiments import RunConfig, export_run, run_method
+from repro.models.registry import build_model
+from repro.models.smallnets import make_classifier
+from repro.serve import (
+    ClusterPlaneServer,
+    ServeConfig,
+    load_servable,
+    save_servable,
+)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+# ------------------------------------------------------------------
+# ServeConfig.resolve validation
+# ------------------------------------------------------------------
+
+
+def test_serve_config_defaults_resolve():
+    cfg = ServeConfig().resolve()
+    assert cfg.arch == "olmo-1b" and cfg.mixture is None
+
+
+@pytest.mark.parametrize("bad,match", [
+    (dict(arch="gpt-17"), "unknown arch"),
+    (dict(batch=0), "batch"),
+    (dict(gen=-1), "gen"),
+    (dict(temperature=-0.5), "temperature"),
+    (dict(codec="zip"), "shipping format"),
+    (dict(codec="int4", qblock=15), "even qblock"),
+    (dict(client=0, mixture=(0.5, 0.5)), "exclusive"),
+    (dict(client=-2), "non-negative"),
+    (dict(mixture=np.ones((3, 2, 2))), r"\(S,\) or \(B, S\)"),
+    (dict(mixture=(0.5, -0.5)), "non-negative"),
+    (dict(mixture=(0.0, 0.0)), "positive mass"),
+])
+def test_serve_config_rejects_bad_fields(bad, match):
+    with pytest.raises(ValueError, match=match):
+        ServeConfig(**bad).resolve()
+
+
+def test_serve_config_audio_unsupported():
+    with pytest.raises(NotImplementedError, match="audio"):
+        ServeConfig(arch="whisper-base").resolve()
+
+
+def test_serve_config_normalizes_mixture_rows():
+    cfg = ServeConfig(batch=2, mixture=[[2.0, 2.0], [1.0, 3.0]]).resolve()
+    np.testing.assert_allclose(cfg.mixture,
+                               [[0.5, 0.5], [0.25, 0.75]], atol=1e-7)
+
+
+def test_serve_config_is_frozen():
+    with pytest.raises(Exception):
+        ServeConfig().batch = 8
+
+
+def test_request_mixture_sources():
+    cfg = ServeConfig(batch=3, mixture=(0.25, 0.75)).resolve()
+    u = cfg.request_mixture(2)
+    assert u.shape == (3, 2) and np.allclose(u[0], [0.25, 0.75])
+    table = np.asarray([[0.9, 0.1], [0.2, 0.8]], np.float32)
+    u = ServeConfig(batch=2, client=1).resolve().request_mixture(2, table)
+    assert np.allclose(u, [[0.2, 0.8]] * 2)
+    with pytest.raises(ValueError, match="out of range"):
+        ServeConfig(batch=2, client=5).resolve().request_mixture(2, table)
+    with pytest.raises(ValueError, match="u table"):
+        ServeConfig(batch=2, client=0).resolve().request_mixture(2, None)
+    # uniform default, and a cluster-count mismatch is named
+    assert np.allclose(ServeConfig(batch=2).resolve().request_mixture(4),
+                       0.25)
+    with pytest.raises(ValueError, match="clusters"):
+        ServeConfig(batch=2, mixture=(1.0, 0.0)).resolve().request_mixture(3)
+
+
+# ------------------------------------------------------------------
+# einsum-over-plane == materialized per-user pytrees (atol=1e-6), 3 archs
+# ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mamba2-370m", "zamba2-1.2b"])
+def test_personalized_forward_matches_materialized(arch):
+    """Eq. (2) served as u @ plane (then unpack) must equal the per-user
+    weighted pytree sum to float accuracy, for dense/ssm/hybrid."""
+    cfg = get_smoke_config(arch)
+    bundle = build_model(cfg, attn_mode="ref")
+    key = jax.random.PRNGKey(0)
+    spec = make_pack_spec(jax.eval_shape(bundle.init, key))
+    s, b, lp = 2, 3, 8
+    plane = jnp.stack([pack(bundle.init(jax.random.PRNGKey(i)), spec)
+                       for i in range(s)])
+    u = jnp.asarray(np.random.default_rng(0).dirichlet(
+        np.ones(s), size=b).astype(np.float32))
+    prompts = jax.random.randint(key, (b, lp), 0, cfg.vocab, jnp.int32)
+
+    server = ClusterPlaneServer(spec, plane=plane, bundle=bundle)
+    params_b = server.personalized(u)       # leaves (B, ...)
+
+    clusters = [unpack(plane[i], spec) for i in range(s)]
+    for i in range(b):
+        # materialized per-user model: Σ_s u_is · c_s, leaf by leaf
+        mat = jax.tree.map(
+            lambda *ls: jnp.tensordot(u[i], jnp.stack(ls), axes=1),
+            *clusters)
+        got = jax.tree.map(lambda l: l[i], params_b)
+        for a, c in zip(jax.tree.leaves(mat), jax.tree.leaves(got)):
+            np.testing.assert_allclose(np.asarray(c), np.asarray(a),
+                                       atol=1e-6)
+        logits_mat, _ = bundle.forward(mat, {"tokens": prompts[i][None]})
+        logits_got, _ = bundle.forward(got, {"tokens": prompts[i][None]})
+        np.testing.assert_allclose(np.asarray(logits_got),
+                                   np.asarray(logits_mat), atol=1e-6)
+
+
+# ------------------------------------------------------------------
+# one-compile serve step + dispatch accounting
+# ------------------------------------------------------------------
+
+
+def _mlp_plane(s=3, dim=16, nc=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    _, apply, *_ = make_classifier("mlp", key, dim, nc)
+
+    def model_init(k):
+        return make_classifier("mlp", k, dim, nc)[0]
+
+    spec = make_pack_spec(jax.eval_shape(model_init, key))
+    plane = jnp.stack([pack(model_init(jax.random.PRNGKey(seed + i)), spec)
+                       for i in range(s)])
+    return spec, plane, apply
+
+
+def test_serve_step_compiles_once_dispatches_per_call():
+    spec, plane, apply = _mlp_plane()
+    server = ClusterPlaneServer(spec, plane=plane, apply_fn=apply)
+    rng = np.random.default_rng(0)
+    u = rng.dirichlet(np.ones(3), size=5).astype(np.float32)
+    x = rng.normal(size=(5, 16)).astype(np.float32)
+    server.predict(u, x)
+    assert server.n_compiles == 1 and server.n_dispatches == 1
+    server.predict(u, x)   # same shapes: no recompile, one more dispatch
+    assert server.n_compiles == 1 and server.n_dispatches == 2
+
+
+def test_generate_single_compile_and_matches_materialized():
+    """The LM serve step is ONE compiled program whose greedy tokens equal
+    serving each user's materialized model separately."""
+    cfg = get_smoke_config("olmo-1b")
+    bundle = build_model(cfg, attn_mode="ref")
+    key = jax.random.PRNGKey(0)
+    spec = make_pack_spec(jax.eval_shape(bundle.init, key))
+    s, b, lp, gen = 2, 3, 8, 4
+    plane = jnp.stack([pack(bundle.init(jax.random.PRNGKey(i)), spec)
+                       for i in range(s)])
+    u = jnp.asarray(np.random.default_rng(1).dirichlet(
+        np.ones(s), size=b).astype(np.float32))
+    prompts = jax.random.randint(key, (b, lp), 0, cfg.vocab, jnp.int32)
+
+    server = ClusterPlaneServer(spec, plane=plane, bundle=bundle)
+    toks = server.generate(u, prompts, gen=gen)
+    assert toks.shape == (b, gen)
+    assert server.n_compiles == 1 and server.n_dispatches == 1
+    assert jnp.array_equal(server.generate(u, prompts, gen=gen), toks)
+    assert server.n_compiles == 1 and server.n_dispatches == 2
+
+    # per-user materialized reference: single-cluster plane per user
+    for i in range(b):
+        one = ClusterPlaneServer(
+            spec, plane=(u[i] @ plane)[None, :], bundle=bundle)
+        ref = one.generate(jnp.ones((1, 1)), prompts[i][None], gen=gen)
+        np.testing.assert_array_equal(np.asarray(toks[i]),
+                                      np.asarray(ref[0]))
+
+
+def test_quantized_serve_paths_match_their_decode():
+    """int8 (fused dequant kernel) and int4 (bit-packed fused kernel)
+    serving equal the explicit decode→einsum reference bit-for-bit."""
+    spec, plane, apply = _mlp_plane()
+    qb = 16
+    rng = np.random.default_rng(2)
+    u = rng.dirichlet(np.ones(3), size=4).astype(np.float32)
+    x = rng.normal(size=(4, 16)).astype(np.float32)
+    ch = Channel(CommConfig(codec="int4", block=qb), spec.size)
+    enc = ch.encode(plane, jax.random.PRNGKey(3), rounding="nearest")
+    dec = (enc["q"].astype(jnp.float32)
+           * jnp.repeat(enc["scale"], qb, axis=1))[:, :spec.size]
+    ref = jnp.stack([apply(unpack(jnp.asarray(u[i]) @ dec, spec),
+                           x[i][None])[0] for i in range(4)])
+    from repro.comm.codecs import int4_pack
+
+    srv8 = ClusterPlaneServer(spec, codec="int8", qblock=qb,
+                              plane_q=enc["q"], plane_scale=enc["scale"],
+                              apply_fn=apply)
+    srv4 = ClusterPlaneServer(spec, codec="int4", qblock=qb,
+                              plane_packed=int4_pack(enc["q"]),
+                              plane_scale=enc["scale"], apply_fn=apply)
+    for srv in (srv8, srv4):
+        out = srv.predict(u, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+        assert srv.n_compiles == 1
+
+
+# ------------------------------------------------------------------
+# servable artifacts: wire-exact bytes, digest guard, round trips
+# ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["fp32", "int8", "int4"])
+def test_servable_roundtrip_and_wire_exact_bytes(tmp_path, codec):
+    spec, plane, apply = _mlp_plane()
+    qb = 16
+    path = str(tmp_path / f"plane_{codec}.npz")
+    ut = np.random.default_rng(0).dirichlet(np.ones(3), size=7)
+    man = save_servable(path, plane, spec, arch="mlp", u=ut, codec=codec,
+                        qblock=qb)
+    assert man.kind == "servable" and man.pack_digest == spec.digest
+    art = load_servable(path, spec)
+    assert art.n_clusters == 3
+    np.testing.assert_allclose(art.u_table, ut, atol=1e-7)
+    if codec == "fp32":
+        np.testing.assert_array_equal(art.plane, np.asarray(plane))
+    else:
+        # the stored plane is EXACTLY wire_model_bytes per cluster row
+        ch = Channel(CommConfig(codec=codec, block=qb), spec.size)
+        with np.load(path) as data:
+            wire_key = [k for k in data.files if "plane_wire" in k]
+            assert len(wire_key) == 1
+            assert data[wire_key[0]].nbytes == 3 * ch.wire_model_bytes
+        # and decodes bit-identically to a fresh nearest-rounding encode
+        enc = ch.encode(plane, jax.random.PRNGKey(0), rounding="nearest")
+        np.testing.assert_array_equal(art.plane_q, np.asarray(enc["q"]))
+        np.testing.assert_array_equal(art.plane_scale,
+                                      np.asarray(enc["scale"]))
+
+
+def test_servable_refuses_wrong_pack_digest(tmp_path):
+    spec, plane, _ = _mlp_plane()
+    path = str(tmp_path / "plane.npz")
+    save_servable(path, plane, spec, arch="mlp")
+    other = make_pack_spec(make_classifier(
+        "linear", jax.random.PRNGKey(0), 16, 4)[0])
+    with pytest.raises(ValueError, match="pack_digest"):
+        load_servable(path, other)
+
+
+def test_servable_refuses_non_servable_kind(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, {"a": np.ones(3)},
+              manifest=ckpt.CkptManifest(kind="checkpoint"))
+    with pytest.raises(ValueError, match="kind"):
+        load_servable(path)
+
+
+# ------------------------------------------------------------------
+# train → export → serve end-to-end (subsumes examples/serve_personalized)
+# ------------------------------------------------------------------
+
+
+def test_train_export_serve_end_to_end(tmp_path):
+    exp = PaperExpConfig(n_clients=5, n_per_client=32, rounds=3, tau=1,
+                         batch=8, avg_degree=3.0, model="mlp", dim=8,
+                         n_classes=3)
+    data = make_mixture_classification(
+        n_clients=5, n_clusters=2, n_per_client=32, dim=8, n_classes=3,
+        seed=0, noise=0.3,
+    )
+    res = run_method(
+        "fedspd", data, exp,
+        cfg=RunConfig(param_plane=True, eval_every=100,
+                      options={"keep_state": True}))
+    path = str(tmp_path / "servable.npz")
+    man = export_run(res, path, arch="mlp", codec="int4", qblock=16)
+    assert man.n_clients == 5 and man.n_clusters == 2
+
+    _, apply, *_ = make_classifier("mlp", jax.random.PRNGKey(0), 8, 3)
+    spec = make_pack_spec(make_classifier(
+        "mlp", jax.random.PRNGKey(0), 8, 3)[0])
+    art = load_servable(path, spec)
+    server = ClusterPlaneServer.from_artifact(art, spec, apply_fn=apply)
+    # serve every trained client's own mixture in one batch
+    out = server.predict(art.u_table, jnp.asarray(data.x[:, 0]))
+    assert out.shape == (5, 3) and np.isfinite(np.asarray(out)).all()
+    assert server.n_compiles == 1 and server.n_dispatches == 1
+
+
+def test_export_requires_keep_state():
+    exp = PaperExpConfig(n_clients=4, n_per_client=16, rounds=1, tau=1,
+                         batch=8, avg_degree=3.0, model="mlp", dim=8,
+                         n_classes=3)
+    data = make_mixture_classification(
+        n_clients=4, n_clusters=2, n_per_client=16, dim=8, n_classes=3,
+        seed=1, noise=0.3,
+    )
+    res = run_method("fedspd", data, exp,
+                     cfg=RunConfig(param_plane=True, eval_every=100))
+    with pytest.raises(ValueError, match="keep_state"):
+        export_run(res, "/tmp/should_not_exist.npz")
+
+
+# ------------------------------------------------------------------
+# deprecation shims + AST call-site guard
+# ------------------------------------------------------------------
+
+
+def test_legacy_generate_shim_warns_and_matches_server():
+    from repro.launch.serve import generate
+
+    cfg = get_smoke_config("olmo-1b")
+    bundle = build_model(cfg, attn_mode="ref")
+    key = jax.random.PRNGKey(0)
+    params = bundle.init(key)
+    prompts = jax.random.randint(key, (2, 8), 0, cfg.vocab, jnp.int32)
+    with pytest.warns(DeprecationWarning, match="ClusterPlaneServer"):
+        toks = generate(bundle, params, prompts, gen_len=4, max_len=13)
+    spec = make_pack_spec(params)
+    server = ClusterPlaneServer(spec, plane=pack(params, spec)[None, :],
+                                bundle=bundle)
+    ref = server.generate(jnp.ones((2, 1)), prompts, gen=4)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(ref))
+
+
+def test_no_repo_caller_uses_deprecated_serving_surface():
+    """No module in src/, benchmarks/ or examples/ may still call the
+    deprecated serving surface: ``launch.serve.generate`` (module-level
+    decode loop), ``ckpt.save(metadata=...)``, or a ``--ckpt`` flag passed
+    to ``serve.main``/``serve_mod.main`` — all shims for EXTERNAL callers
+    only (tests may exercise them; launch/serve.py defines the shims)."""
+    offenders = []
+    shim_def = REPO / "src" / "repro" / "launch" / "serve.py"
+    for top in ("src", "benchmarks", "examples"):
+        for path in sorted((REPO / top).rglob("*.py")):
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ImportFrom) and \
+                        node.module == "repro.launch.serve":
+                    if any(a.name == "generate" for a in node.names):
+                        offenders.append(
+                            f"{path.relative_to(REPO)}:{node.lineno} "
+                            "imports deprecated launch.serve.generate")
+                if not isinstance(node, ast.Call):
+                    continue
+                name = getattr(node.func, "id",
+                               getattr(node.func, "attr", None))
+                if name == "save" and any(
+                        kw.arg == "metadata" for kw in node.keywords):
+                    offenders.append(
+                        f"{path.relative_to(REPO)}:{node.lineno} "
+                        "uses ckpt.save(metadata=...)")
+                if name == "main" and path != shim_def:
+                    for arg in node.args:
+                        for c in ast.walk(arg):
+                            if isinstance(c, ast.Constant) and \
+                                    c.value == "--ckpt":
+                                offenders.append(
+                                    f"{path.relative_to(REPO)}:"
+                                    f"{node.lineno} serves via --ckpt")
+    assert not offenders, (
+        "deprecated serving surface in repo callers (use serve/ "
+        "ServeConfig + artifacts):\n" + "\n".join(offenders)
+    )
+
+
+# ------------------------------------------------------------------
+# CkptManifest: typed sidecar, hard errors, legacy blob
+# ------------------------------------------------------------------
+
+
+def test_manifest_need_names_missing_fields():
+    with pytest.raises(KeyError, match=r"\['n_clients', 'pack_digest'\]"):
+        ckpt.CkptManifest().need("n_clients", "pack_digest")
+
+
+def test_manifest_check_names_mismatched_fields():
+    m = ckpt.CkptManifest(arch="mlp", plane_shape=(2, 10))
+    with pytest.raises(ValueError, match="plane_shape"):
+        m.check(arch="mlp", plane_shape=(2, 11))
+    assert m.check(arch="mlp", plane_shape=(2, 10)) is m
+
+
+def test_manifest_roundtrip_and_peek(tmp_path):
+    path = str(tmp_path / "m.npz")
+    m = ckpt.CkptManifest(kind="servable", arch="mlp", n_clients=4,
+                          n_clusters=2, plane_shape=(2, 99),
+                          pack_digest="ab", codec="int4", qblock=16,
+                          extra={"note": "hi"})
+    ckpt.save(path, {"a": np.ones(2)}, manifest=m)
+    assert ckpt.read_manifest(path) == m
+    _, back = ckpt.restore(path, {"a": np.ones(2)})
+    assert back == m
+
+
+def test_legacy_metadata_kwarg_and_blob_reader(tmp_path):
+    path = str(tmp_path / "legacy.npz")
+    tree = {"a": np.arange(3.0)}
+    with pytest.warns(DeprecationWarning, match="manifest=CkptManifest"):
+        ckpt.save(path, tree, metadata={"round": 7, "n_clients": 9})
+    _, m = ckpt.restore(path, tree)
+    assert m.n_clients == 9 and m.extra["round"] == 7
+    # a v1 __metadata__ blob still loads, with a deprecation warning
+    import json
+
+    raw = json.dumps({"arch": "mlp", "foo": 1}).encode()
+    np.savez(str(tmp_path / "v1.npz"),
+             __metadata__=np.frombuffer(raw, dtype=np.uint8),
+             **{"['a']": np.arange(3.0)})
+    with pytest.warns(DeprecationWarning, match="legacy __metadata__"):
+        _, m1 = ckpt.restore(str(tmp_path / "v1.npz"), tree)
+    assert m1.version == 1 and m1.arch == "mlp" and m1.extra["foo"] == 1
+
+
+def test_save_rejects_manifest_plus_metadata(tmp_path):
+    with pytest.raises(ValueError, match="not both"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ckpt.save(str(tmp_path / "x.npz"), {"a": np.ones(1)},
+                      manifest=ckpt.CkptManifest(), metadata={"x": 1})
