@@ -10,7 +10,8 @@ any lane whose median round time regresses by more than ``--threshold``
 added benchmark, e.g. ``fedspd/dynamic_graph``) never fails the gate: its
 first timing seeds the baseline for subsequent runs. A markdown delta table — per-lane timings,
 the packed-vs-pytree speedup matrix, the wire-byte table for the
-compressed-communication lanes (fedspd/comm_*), and the personalized
+compressed-communication lanes (fedspd/comm_*), the telemetry collection
+overhead (fedspd/telemetry_overhead), and the personalized
 serving throughput table (serve/mixture_qps*) — is appended to
 ``$GITHUB_STEP_SUMMARY`` when set, and always printed to stdout.
 
@@ -127,6 +128,24 @@ def markdown_report(base: dict, new: dict, rows: list,
                 f"| {r['lane']} | {_fmt(prev, 'd')} "
                 f"| {r['wire_model_bytes']} | {r['logical_model_bytes']} "
                 f"| x{r['wire_ratio']} | {delta} |"
+            )
+    if new.get("telemetry_lanes"):
+        old_ov = {r.get("lane"): r.get("paired_overhead_vs_off")
+                  for r in base.get("telemetry_lanes", [])}
+        lines += [
+            "",
+            "### telemetry collection overhead",
+            "",
+            "| lane | off ms | on ms | prev overhead | overhead |",
+            "|---|---:|---:|---:|---:|",
+        ]
+        for r in new["telemetry_lanes"]:
+            prev = old_ov.get(r["lane"])
+            lines.append(
+                f"| {r['lane']} | {r['off_round_ms']:.2f} "
+                f"| {r['round_ms']:.2f} | "
+                f"{'—' if prev is None else f'x{prev}'} "
+                f"| x{r['paired_overhead_vs_off']} |"
             )
     if new.get("serve_lanes"):
         old_qps = {r.get("lane"): r.get("qps")

@@ -24,6 +24,12 @@ production train loop) across:
                                                cohort subsampling at
                                                N=1024 clients (lane
                                                fedspd/cohort_n1024)
+  telemetry       bare round step            vs the step with the traced
+                                               round-metrics plane spliced
+                                               in (lane fedspd/
+                                               telemetry_overhead: paired
+                                               collection cost, must stay
+                                               within noise)
   serving         personalized mixture       predictions/sec off the hot
                                                cluster plane at simulated
                                                1e6-user cardinality (lanes
@@ -358,6 +364,65 @@ def bench_straggler(*, n: int, m: int, dim: int, rounds: int,
     }
 
 
+def bench_telemetry_overhead(*, n: int, m: int, dim: int, tau: int,
+                             reps: int, seed: int = 0) -> dict:
+    """``fedspd/telemetry_overhead``: the traced round-metrics plane
+    (telemetry/metrics.make_collector) spliced into the packed FedSPD
+    round step vs the bare step — the SAME wrapper shape the experiment
+    driver jits, timed with the interleaved paired protocol of
+    ``bench_pair``. Pairing happens at the STEP level on purpose: at
+    smoke sizes compile time dwarfs 32 rounds of execution, so a
+    whole-run pairing would gate compile-time jitter, not collection
+    cost. The acceptance bar is paired overhead within noise (<= 5%
+    median); the scan-engine one-compile/one-dispatch claim with
+    telemetry ON is asserted in tests/test_telemetry.py."""
+    from repro.telemetry import TelemetryConfig
+    from repro.telemetry.metrics import make_collector
+
+    built = {p: _build("mlp", "full", "reference", True,
+                       n=n, m=m, dim=dim, tau=tau, seed=seed)
+             for p in (False, True)}
+    adj = jnp.asarray(make_graph("er", n, 4.0, seed=seed).adj, jnp.float32)
+    collect = make_collector(TelemetryConfig(), n_clusters=2, n_clients=n)
+
+    steps = {}
+    for p, (step, _, _, _) in built.items():
+        if p:
+            def step_on(st, b, _step=step):
+                new, aux = _step(st, b)
+                return new, aux, collect(st, new, adj)
+
+            steps[p] = jax.jit(step_on)
+        else:
+            steps[p] = jax.jit(lambda st, b, _step=step: _step(st, b))
+    compile_s, times, states = {}, {False: [], True: []}, {}
+    for p, (_, state, payload, _) in built.items():
+        t0 = time.perf_counter()
+        out = steps[p](state, payload)
+        _block(out)
+        compile_s[p] = time.perf_counter() - t0
+        states[p] = out[0]
+    for _ in range(reps):
+        for p, (_, _, payload, _) in built.items():
+            t0 = time.perf_counter()
+            out = steps[p](states[p], payload)
+            _block(out)
+            states[p] = out[0]
+            times[p].append(time.perf_counter() - t0)
+    paired = statistics.median(
+        b / a for a, b in zip(times[False], times[True])
+    )
+    return {
+        "lane": "fedspd/telemetry_overhead",
+        "n_clients": n, "streams": 9,
+        "compile_s": round(compile_s[True], 4),
+        "round_ms": round(min(times[True]) * 1e3, 4),
+        "round_ms_median": round(statistics.median(times[True]) * 1e3, 4),
+        "off_round_ms": round(min(times[False]) * 1e3, 4),
+        "paired_overhead_vs_off": round(paired, 3),
+    }
+
+
 def bench_mixture_qps(codec: str, *, s: int, dim: int, users: int,
                       batch: int, reps: int, seed: int = 0) -> dict:
     """``serve/mixture_qps`` lanes: personalized predictions/sec off the
@@ -548,6 +613,13 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
     print(f"{stg['lane']:>24s}  round {stg['round_ms']:9.2f} ms   "
           f"(N={stg['n_clients']}, 30% slow, max stale "
           f"{stg['max_staleness']}, {stg['n_dispatches']} dispatch)")
+    # telemetry lane: the traced round-metrics plane vs the bare step —
+    # collection must stay within measurement noise (paired, step-level)
+    tel = bench_telemetry_overhead(n=n, m=m, dim=dim, tau=tau, reps=reps)
+    results.append(tel)
+    print(f"{tel['lane']:>24s}  round {tel['round_ms']:9.2f} ms   "
+          f"(off {tel['off_round_ms']:8.2f} ms)  overhead "
+          f"x{tel['paired_overhead_vs_off']}")
     # mixture-serving lanes: personalized predictions/sec off the hot
     # cluster plane (fp32 einsum + bit-packed int4 fused kernel) at
     # simulated 1e6-user population cardinality
@@ -598,6 +670,7 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
         "comparisons": comparisons,
         "comm_lanes": comm_lanes,
         "serve_lanes": serve_lanes,
+        "telemetry_lanes": [tel],
     }
     out = os.path.abspath(out)
     with open(out, "w") as f:

@@ -1,0 +1,114 @@
+"""Telemetry dashboard: render run JSONL event logs as terminal plots.
+
+The observability companion to examples/connectivity_sweep.py: where the
+sweep prints the final accuracy frontier, this renders HOW each run got
+there — per-round sparklines of the traced metric streams (cluster-weight
+entropy and drift, per-cluster consensus residual, effective degree and
+spectral gap of the round's surviving topology, wire bytes) straight from
+the structured JSONL event log, no plotting dependencies.
+
+Two modes:
+
+    # render existing logs (launch/train --telemetry-out, or the files
+    # this script writes itself)
+    PYTHONPATH=src python examples/telemetry_dashboard.py runs/*.jsonl
+
+    # no args: run a small low-connectivity sweep with telemetry on,
+    # write one JSONL per cell, and render them
+    PYTHONPATH=src python examples/telemetry_dashboard.py
+"""
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.telemetry import read_events, streams_from_events, summary_table
+
+BARS = "▁▂▃▄▅▆▇█"
+
+
+def spark(xs) -> str:
+    """One line of unicode bars for a per-round scalar stream."""
+    xs = np.asarray(xs, np.float64)
+    ok = np.isfinite(xs)
+    if not ok.any():
+        return "·" * len(xs)
+    lo, hi = xs[ok].min(), xs[ok].max()
+    span = (hi - lo) or 1.0
+    out = []
+    for v in xs:
+        if not np.isfinite(v):
+            out.append("·")
+        else:
+            out.append(BARS[int((v - lo) / span * (len(BARS) - 1))])
+    return "".join(out)
+
+
+def _scalarize(stream) -> np.ndarray:
+    """Per-round scalar view: vector streams (consensus, histogram)
+    render as their per-round sum."""
+    arr = np.asarray(stream, np.float64)
+    return arr if arr.ndim == 1 else arr.reshape(arr.shape[0], -1).sum(-1)
+
+
+def render(path: str) -> None:
+    events = read_events(path)
+    streams = streams_from_events(events)
+    print(summary_table(events), end="")
+    if not streams:
+        return
+    width = max(len(n) for n in streams)
+    print("per-round sparklines (first -> last round):")
+    for name in sorted(streams):
+        xs = _scalarize(streams[name])
+        lo = np.nanmin(xs) if np.isfinite(xs).any() else float("nan")
+        hi = np.nanmax(xs) if np.isfinite(xs).any() else float("nan")
+        print(f"  {name:>{width}s}  {spark(xs)}  "
+              f"[{lo:.4g} .. {hi:.4g}]")
+    print()
+
+
+def demo_sweep(out_dir: str) -> list[str]:
+    """A small connectivity sweep with the telemetry plane on: one
+    scan-rolled run per degree, one JSONL per cell."""
+    from repro.configs.paper_cnn import PaperExpConfig
+    from repro.data.synthetic import make_mixture_classification
+    from repro.experiments import RunConfig, TelemetryConfig, run_method
+    from repro.graphs.topology import make_graph
+    from repro.telemetry import write_run_jsonl
+
+    exp = PaperExpConfig(n_clients=12, rounds=30, tau=2, batch=16,
+                         n_per_client=64, model="mlp", dim=16, n_classes=4)
+    data = make_mixture_classification(
+        n_clients=exp.n_clients, n_clusters=2,
+        n_per_client=exp.n_per_client, dim=exp.dim,
+        n_classes=exp.n_classes, seed=1, noise=0.25,
+    )
+    paths = []
+    for deg in (2.5, 4.0, 6.0):
+        g = make_graph("er", exp.n_clients, deg, seed=2)
+        r = run_method("fedspd", data, exp, graph=g, seed=0,
+                       cfg=RunConfig(eval_every=5, param_plane=True,
+                                     scan_rounds=True,
+                                     telemetry=TelemetryConfig()))
+        path = f"{out_dir}/fedspd_er_deg{deg}.jsonl"
+        write_run_jsonl(path, r, meta={"n_clients": exp.n_clients,
+                                       "n_clusters": 2, "seed": 0,
+                                       "graph": f"er deg={deg}"})
+        paths.append(path)
+        print(f"deg {deg:4.1f}: acc {r.mean_acc:.3f}  "
+              f"({r.extras['n_compiles']} compile, "
+              f"{r.extras['n_dispatches']} dispatch) -> {path}")
+    print()
+    return paths
+
+
+if __name__ == "__main__":
+    paths = sys.argv[1:]
+    if not paths:
+        tmp = tempfile.mkdtemp(prefix="fedspd_telemetry_")
+        print("no JSONL paths given — running the demo sweep "
+              f"(telemetry plane on, logs under {tmp})\n")
+        paths = demo_sweep(tmp)
+    for p in paths:
+        render(p)

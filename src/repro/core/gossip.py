@@ -99,14 +99,18 @@ def fedspd_weight_matrix(
 def mix_dense(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray,
               adj: Optional[jnp.ndarray] = None) -> PyTree:
     """Paper-faithful C <- W C over the client axis."""
-    w = fedspd_weight_matrix(spec, s, c_sel, adj=adj)
+    # named_scope labels the exchange on profiler traces (the region runs
+    # inside the jitted round program, where host annotations cannot see)
+    with jax.named_scope("gossip/mix_dense"):
+        w = fedspd_weight_matrix(spec, s, c_sel, adj=adj)
 
-    def mix_leaf(leaf):
-        return jnp.einsum(
-            "ij,j...->i...", w.astype(jnp.float32), leaf.astype(jnp.float32)
-        ).astype(leaf.dtype)
+        def mix_leaf(leaf):
+            return jnp.einsum(
+                "ij,j...->i...", w.astype(jnp.float32),
+                leaf.astype(jnp.float32)
+            ).astype(leaf.dtype)
 
-    return jax.tree.map(mix_leaf, c_sel)
+        return jax.tree.map(mix_leaf, c_sel)
 
 
 def mix_permute(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray,
@@ -121,37 +125,39 @@ def mix_permute(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray,
     union graph, and each round's traced matrix only masks edges off
     (dropout / the inactive edges of a rewire schedule).
     """
-    n = s.shape[0]
-    cos = None
-    if spec.cos_align_threshold > -1.0:
-        cos = _pairwise_cos(c_sel)
+    with jax.named_scope("gossip/mix_permute"):
+        n = s.shape[0]
+        cos = None
+        if spec.cos_align_threshold > -1.0:
+            cos = _pairwise_cos(c_sel)
 
-    acc = jax.tree.map(lambda l: l.astype(jnp.float32), c_sel)
-    cnt = jnp.ones((n,), jnp.float32)
-    idx = jnp.arange(n)
-    for perm in spec.perms:
-        p = jnp.asarray(perm)
-        partner_s = jnp.take(s, p)
-        match = (partner_s == s) & (p != idx)
-        if adj is not None:
-            match &= adj[idx, p] > 0
-        if cos is not None:
-            match &= cos[idx, p] >= spec.cos_align_threshold
-        mf = match.astype(jnp.float32)
+        acc = jax.tree.map(lambda l: l.astype(jnp.float32), c_sel)
+        cnt = jnp.ones((n,), jnp.float32)
+        idx = jnp.arange(n)
+        for perm in spec.perms:
+            p = jnp.asarray(perm)
+            partner_s = jnp.take(s, p)
+            match = (partner_s == s) & (p != idx)
+            if adj is not None:
+                match &= adj[idx, p] > 0
+            if cos is not None:
+                match &= cos[idx, p] >= spec.cos_align_threshold
+            mf = match.astype(jnp.float32)
 
-        def add(a, l):
-            recv = jnp.take(l, p, axis=0).astype(jnp.float32)
-            m = mf.reshape((-1,) + (1,) * (l.ndim - 1))
-            return a + m * recv
+            def add(a, l):
+                recv = jnp.take(l, p, axis=0).astype(jnp.float32)
+                m = mf.reshape((-1,) + (1,) * (l.ndim - 1))
+                return a + m * recv
 
-        acc = jax.tree.map(add, acc, c_sel)
-        cnt = cnt + mf
-    inv = 1.0 / cnt
+            acc = jax.tree.map(add, acc, c_sel)
+            cnt = cnt + mf
+        inv = 1.0 / cnt
 
-    def norm(a, l):
-        return (a * inv.reshape((-1,) + (1,) * (a.ndim - 1))).astype(l.dtype)
+        def norm(a, l):
+            return (a * inv.reshape((-1,) + (1,) * (a.ndim - 1))
+                    ).astype(l.dtype)
 
-    return jax.tree.map(norm, acc, c_sel)
+        return jax.tree.map(norm, acc, c_sel)
 
 
 def mix(spec: GossipSpec, c_sel: PyTree, s: jnp.ndarray,

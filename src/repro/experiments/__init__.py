@@ -31,3 +31,4 @@ from repro.experiments.runner import (  # noqa: F401
     run_method_batch,
 )
 from repro.experiments.scenarios import Scenario  # noqa: F401
+from repro.telemetry import TelemetryConfig  # noqa: F401  (RunConfig(telemetry=...))

@@ -69,6 +69,13 @@ class RunConfig:
                     gathered into a compact plane each round; inactive
                     clients' rows are carried untouched and cost zero wire
                     bytes (FedSPD on the packed plane, dense wiring)
+    telemetry       telemetry.TelemetryConfig: collect per-round traced
+                    metric streams (bytes, cluster-weight entropy/drift,
+                    consensus residual, effective degree, spectral gap,
+                    staleness) INSIDE the round program — zero extra
+                    dispatches, bit-identical between engines; the payload
+                    lands on ``RunResult.telemetry`` (see README
+                    "Observability")
     options         escape hatch for per-method knobs (explicit entries win
                     over the typed shorthands above)
     """
@@ -82,6 +89,7 @@ class RunConfig:
     donate: bool = True
     scan_rounds: bool = False
     cohort_size: Optional[int] = None
+    telemetry: Any = None             # telemetry.TelemetryConfig
     options: dict = dataclasses.field(default_factory=dict)
 
     def resolve_options(self) -> dict:

@@ -62,9 +62,15 @@ from repro.experiments.registry import (
     build_context,
     get_method,
 )
-from repro.experiments.heterogeneity import het_round, masked_client_step
+from repro.experiments.heterogeneity import (
+    apply_client_weights,
+    het_round,
+    masked_client_step,
+)
 from repro.experiments.scenarios import Scenario, bernoulli_drop
 from repro.graphs.topology import Graph, union_graph
+from repro.telemetry import compile_count, step_annotation
+from repro.telemetry.metrics import flatten_centers, make_collector
 
 METHODS = available_methods()
 
@@ -84,6 +90,10 @@ class RunResult:
     curve: list  # [(round, mean train acc)]
     wall_s: float
     extras: dict
+    telemetry: dict | None = None  # RunConfig.telemetry payload:
+    #                                {"rounds": R, "streams": {name:
+    #                                (R, ...) arrays}} — see
+    #                                telemetry/config.py for the streams
 
 
 def _lr_schedule(exp: PaperExpConfig):
@@ -168,15 +178,6 @@ def _resolve_scenario(m: Method, scenario: Scenario | None, graph,
     return jnp.asarray(stack), None, drop_p, drop_key, union_graph(stack)
 
 
-def _n_compiles(fn) -> int:
-    """Jit cache size — diagnostic only: _cache_size is a private jax API,
-    so don't let its absence on other jax versions fail a finished run."""
-    try:
-        return int(getattr(fn, "_cache_size", lambda: -1)())
-    except Exception:
-        return -1
-
-
 def _wire_bytes(ctx: ExperimentContext, logical: float) -> float:
     """Physical bytes for this run's codec: the per-message compression
     ratio is static (comm/codecs.Channel.wire_model_bytes over the
@@ -204,7 +205,7 @@ def _donate_argnums(options: dict) -> tuple:
 
 def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
             curve, t0, n_compiles=None, n_dispatches=None,
-            staleness=None) -> RunResult:
+            staleness=None, telemetry=None) -> RunResult:
     comm_model = method.comm_model(ctx)
     if comm_model.kind == "tracked":
         comm = float(state.comm_bytes)
@@ -236,6 +237,7 @@ def _result(method: Method, ctx: ExperimentContext, state, aux, acc,
         curve=curve,
         wall_s=time.time() - t0,
         extras=extras,
+        telemetry=telemetry,
     )
 
 
@@ -385,6 +387,38 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
         # axis; the activity vector rides as the LAST step extra
         base_step = masked_client_step(base_step, het_axes)
 
+    # ---- telemetry: the traced round-metrics plane -------------------------
+    # the collector runs INSIDE the round program (the scan body / the
+    # per-round jitted dispatch), so both engines evaluate the identical
+    # traced expressions — zero extra dispatches, compile-count-neutral
+    telem = cfg.telemetry
+    collect = None
+    if telem is not None and telem.enabled:
+        bshape = (len(seeds),) if batched else ()
+        comm_model0 = m.comm_model(ctx)
+        tracked = (comm_model0.kind == "tracked"
+                   and hasattr(states, "comm_bytes"))
+        has_u = (hasattr(states, "u")
+                 and getattr(states.u, "shape", ())[-2:]
+                 == (ctx.n_clients, ctx.n_clusters))
+        has_plane = False
+        if hasattr(states, "centers"):
+            try:
+                plane_sd = jax.eval_shape(
+                    lambda c: flatten_centers(c, batch_ndim=len(bshape)),
+                    states.centers)
+                has_plane = (plane_sd.shape[len(bshape):-1]
+                             == (ctx.n_clusters, ctx.n_clients))
+            except Exception:
+                has_plane = False
+        collect = make_collector(
+            telem, batch_shape=bshape, n_clusters=ctx.n_clusters,
+            n_clients=ctx.n_clients, wire_ratio=_wire_bytes(ctx, 1.0),
+            per_round_bytes=(None if tracked
+                             else comm_model0.per_round_bytes),
+            has_u=has_u, has_plane=has_plane,
+        )
+
     # ---- normalized closures shared by both engines ------------------------
     has_adj = (adj_seeds is not None or adj_rounds is not None
                or adj_const is not None)
@@ -428,6 +462,23 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
         return ex, hc
 
     adj_static = adj_seeds if adj_seeds is not None else adj_const
+    # static-graph methods carry no adjacency extra; telemetry still
+    # reports the paper topology's degree / spectral gap each round
+    telem_adj = (None if collect is None or has_adj
+                 else jnp.asarray(ctx.graph.adj, jnp.float32))
+
+    def round_call_telem(states, train, k, lr, extra, hc):
+        """round_call plus the telemetry collector, in the SAME traced
+        program — the effective adjacency the metrics see is exactly what
+        the step mixed over (post dropout, post heterogeneity weights)."""
+        new, aux2 = round_call(states, train, k, lr, extra)
+        adj_eff = extra[0] if has_adj else telem_adj
+        aw = extra[-1] if het is not None else None
+        if aw is not None:
+            adj_eff = apply_client_weights(adj_eff, aw)
+        tm = collect(states, new, adj_eff, weights=aw,
+                     stale=hc.stale if het is not None else None)
+        return new, aux2, tm
 
     def split_run(kr):
         if batched:
@@ -446,6 +497,7 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
 
     curves = [[] for _ in seeds]
     aux = None
+    tapes = None   # telemetry streams, {name: (rounds, ...)} once stacked
 
     # ---- engine A: lax.scan-rolled whole experiment ------------------------
     if cfg.scan_rounds:
@@ -472,42 +524,59 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
                 kr, k = split_run(kr)
                 a = x["adj"] if adj_rounds is not None else adj_static
                 ex, hc = round_extra(a, x["r"], hc)
-                sts, _ = round_call(sts, train, k, x["lr"], ex)
+                if collect is not None:
+                    # telemetry rides the scan ys next to the acc tape —
+                    # same program, zero extra dispatches
+                    sts, _, tm = round_call_telem(sts, train, k, x["lr"],
+                                                  ex, hc)
+                else:
+                    sts, _ = round_call(sts, train, k, x["lr"], ex)
+                    tm = None
                 do = jnp.logical_or(x["r"] % eval_every == 0,
                                     x["r"] == rounds - 1)
                 acc = jax.lax.cond(do, eval_mean, lambda op: nan_acc,
                                    (sts, train))
-                return (sts, kr, hc), acc
+                return (sts, kr, hc), (acc, tm)
 
             # hc is None (an empty pytree carry leaf) without a
             # heterogeneity model — the compiled program is unchanged
-            (states, kr, hc), accs = jax.lax.scan(body, (states, kr, hc),
-                                                  xs)
-            return states, hc, accs
+            (states, kr, hc), ys = jax.lax.scan(body, (states, kr, hc),
+                                                xs)
+            return states, hc, ys
 
         runner = jax.jit(program, donate_argnums=_donate_argnums(options))
         if not batched:
             states = jax.tree.map(lambda l: l.astype(l.dtype), states)
-        states, het_carry, accs_tape = runner(states, train_arg, k_run,
-                                              het_carry, xs)
+        states, het_carry, (accs_tape, tapes) = runner(states, train_arg,
+                                                       k_run, het_carry,
+                                                       xs)
         accs_tape = np.asarray(accs_tape)   # (rounds,) or (rounds, k)
         for r in range(rounds):
             if r % eval_every == 0 or r == rounds - 1:
                 for i in range(len(seeds)):
                     v = accs_tape[r, i] if batched else accs_tape[r]
                     curves[i].append((r, float(v)))
-        n_compiles, n_disp = _n_compiles(runner), 1
+        n_compiles, n_disp = compile_count(runner), 1
 
     # ---- engine B: the historical Python loop ------------------------------
     else:
-        step_jit = jax.jit(round_call,
+        step_jit = jax.jit(round_call_telem if collect is not None
+                           else round_call,
                            donate_argnums=_donate_argnums(options))
         n_disp = 0
+        tm_rounds = []
         for r in range(rounds):
             k_run, k = split_run(k_run)
             a = adj_rounds[r] if adj_rounds is not None else adj_static
             ex, het_carry = round_extra(a, r, het_carry)
-            states, aux = step_jit(states, train_arg, k, lrs[r], ex)
+            with step_annotation("repro/round", r):
+                if collect is not None:
+                    states, aux, tm = step_jit(states, train_arg, k,
+                                               lrs[r], ex, het_carry)
+                    tm_rounds.append(tm)
+                else:
+                    states, aux = step_jit(states, train_arg, k, lrs[r],
+                                           ex)
             n_disp += 1
             if r % eval_every == 0 or r == rounds - 1:
                 if batched:
@@ -518,7 +587,9 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
                 else:
                     train_acc = m.evaluate(ctx, states, k_eval, ctx.train)
                     curves[0].append((r, float(jnp.mean(train_acc))))
-        n_compiles = _n_compiles(step_jit)
+        n_compiles = compile_count(step_jit)
+        if tm_rounds:
+            tapes = jax.tree.map(lambda *xs: jnp.stack(xs), *tm_rounds)
 
     # ---- final test eval + per-seed results --------------------------------
     if batched:
@@ -526,8 +597,17 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
     else:
         accs = np.asarray(m.evaluate(ctx, states, k_eval, ctx.test))[None]
     # the straggler stream is shared across seeds (like the dropout mask),
-    # so every seed reports the same final staleness counters
-    het_stale = (np.asarray(het_carry.stale) if het is not None else None)
+    # so every seed reports the same final staleness counters — and, with
+    # telemetry on, a run WITHOUT a system model reports the all-zeros
+    # counters rather than omitting the key, identically on both engines
+    if het is not None:
+        het_stale = np.asarray(het_carry.stale)
+    elif collect is not None:
+        het_stale = np.zeros((ctx.n_clients,), np.int32)
+    else:
+        het_stale = None
+    if tapes is not None:
+        tapes = {name: np.asarray(v) for name, v in tapes.items()}
     results = []
     for i in range(len(seeds)):
         if batched:
@@ -535,10 +615,15 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
             aux_i = jax.tree.map(lambda l: l[i], aux) if aux else aux
         else:
             state_i, aux_i = states, aux
+        telemetry_i = None
+        if tapes is not None:
+            telemetry_i = {"rounds": rounds, "streams": {
+                name: (v[:, i] if batched else v)
+                for name, v in tapes.items()}}
         results.append(
             _result(m, ctx, state_i, aux_i, accs[i], curves[i], t0,
                     n_compiles=n_compiles, n_dispatches=n_disp,
-                    staleness=het_stale)
+                    staleness=het_stale, telemetry=telemetry_i)
         )
     return results if batched else results[0]
 

@@ -31,6 +31,7 @@ from repro.configs.base import ARCH_ALIASES
 from repro.core.packing import make_pack_spec, pack
 from repro.models.registry import build_model
 from repro.serve import ClusterPlaneServer, ServeConfig, load_servable
+from repro.telemetry import trace_session, write_events
 
 
 def generate(bundle, params, prompt_tokens, *, gen_len: int, max_len: int,
@@ -133,6 +134,12 @@ def main(argv=None):
                     help="DEPRECATED: personalized checkpoint from "
                          "launch/train --save (use --artifact)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write serve-path telemetry (latency percentiles, "
+                         "QPS, plane residency) as a JSONL event log")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the serve batch "
+                         "into this directory (Perfetto-loadable)")
     args = ap.parse_args(argv)
 
     cfg = build_config(args)
@@ -167,15 +174,28 @@ def main(argv=None):
         key, (cfg.batch, cfg.prompt_len), 0, arch_cfg.vocab, dtype=jnp.int32
     )
     t0 = time.time()
-    toks = server.generate(u, prompts, gen=cfg.gen,
-                           temperature=cfg.temperature, key=key)
-    toks = jax.block_until_ready(toks)
+    with trace_session(args.profile_dir):
+        toks = server.generate(u, prompts, gen=cfg.gen,
+                               temperature=cfg.temperature, key=key)
+        toks = jax.block_until_ready(toks)
     dt = time.time() - t0
     print(f"generated {cfg.gen} tokens × {cfg.batch} requests in {dt:.2f}s "
           f"({cfg.gen * cfg.batch / dt:.1f} tok/s, "
           f"{server.n_compiles} compile(s), "
           f"{server.n_dispatches} dispatch(es))")
     print(np.asarray(toks))
+    if args.telemetry_out:
+        snap = server.telemetry_snapshot()
+        events = [
+            {"event": "serve_meta", "arch": cfg.arch, "codec": snap["codec"],
+             "n_clusters": snap["n_clusters"],
+             "plane_bytes": snap["plane_bytes"]},
+            {"event": "serve_batch", "entry": "generate", "batch": cfg.batch,
+             "latency_ms": server.latency.percentile(50) * 1e3},
+            {"event": "serve_summary", **snap},
+        ]
+        write_events(args.telemetry_out, events)
+        print(f"telemetry -> {args.telemetry_out}")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,7 @@ from repro.experiments.heterogeneity import (
 )
 from repro.graphs.topology import make_graph
 from repro.models.registry import build_model
+from repro.telemetry import step_annotation, trace_session, write_events
 
 
 def fl_perplexity(bundle, params_stack, batch) -> float:
@@ -124,6 +125,13 @@ def main(argv=None):
                          "weight scales by gamma**staleness (1 = off)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write the run's structured JSONL event log here "
+                         "(render with python -m repro.telemetry.summary)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory (Perfetto-loadable; see "
+                         "telemetry/profile.py)")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     ap.add_argument("--export-servable", default=None,
                     help="also export the consensus cluster plane as a "
@@ -295,59 +303,100 @@ def main(argv=None):
           f"true-mix[0]={pool['mix_true'][0].round(2)}")
     t0 = time.time()
     het_carry = het.init_carry(n) if het is not None else None
-    if run_cfg.scan_rounds:
-        def body(carry, x):
-            st, k, hc = carry
-            k, kb = jax.random.split(k)
-            if het is not None:
-                st, hc, metrics = het_step(st, sample_batch(kb), x, hc)
-            else:
-                st, metrics = step(st, sample_batch(kb))
-            return (st, k, hc), metrics
+    telem_rounds = []   # per-round event rows when --telemetry-out
 
-        def program(st, k, hc):
-            # the round index rides the xs only when the heterogeneity
-            # stream needs fold_in(round); hc is None otherwise and the
-            # compiled program is unchanged
-            xs = (jnp.arange(args.rounds, dtype=jnp.int32)
-                  if het is not None else None)
-            return jax.lax.scan(body, (st, k, hc), xs=xs,
-                                length=args.rounds)
+    def round_row(lr, consensus, logical):
+        return {"lr": float(lr), "consensus": np.asarray(consensus),
+                "logical_bytes": float(logical),
+                "wire_bytes": float(logical) * wire_ratio}
 
-        runner = jax.jit(
-            program, donate_argnums=(0,) if run_cfg.donate else ())
-        (state, k_data, het_carry), tape = runner(state, k_data, het_carry)
-        tape = jax.tree.map(np.asarray, tape)
-        for r in range(args.rounds):
-            if r % run_cfg.eval_every == 0 or r == args.rounds - 1:
-                logical = float(tape["comm_bytes"][r])
-                print(f"round {r:4d}  lr={float(tape['lr'][r]):.4f}  "
-                      f"consensus={tape['consensus'][r]}  "
-                      f"comm={logical:.3e}B  "
-                      f"wire={logical * wire_ratio:.3e}B")
-        print(f"scan-rolled: {args.rounds} rounds in one compiled program, "
-              f"one dispatch ({time.time() - t0:.1f}s)")
-    else:
-        for r in range(args.rounds):
-            k_data, kb = jax.random.split(k_data)
-            if het is not None:
-                state, het_carry, metrics = het_step(
-                    state, sample_batch(kb), r, het_carry)
-            else:
-                state, metrics = step(state, sample_batch(kb))
-            if r % run_cfg.eval_every == 0 or r == args.rounds - 1:
-                cons = np.asarray(metrics["consensus"])
-                logical = float(metrics["comm_bytes"])
-                print(f"round {r:4d}  lr={float(metrics['lr']):.4f}  "
-                      f"consensus={cons}  comm={logical:.3e}B  "
-                      f"wire={logical * wire_ratio:.3e}B  "
-                      f"({time.time()-t0:.1f}s)")
+    with trace_session(args.profile_dir):
+        if run_cfg.scan_rounds:
+            def body(carry, x):
+                st, k, hc = carry
+                k, kb = jax.random.split(k)
+                if het is not None:
+                    st, hc, metrics = het_step(st, sample_batch(kb), x, hc)
+                else:
+                    st, metrics = step(st, sample_batch(kb))
+                return (st, k, hc), metrics
+
+            def program(st, k, hc):
+                # the round index rides the xs only when the heterogeneity
+                # stream needs fold_in(round); hc is None otherwise and the
+                # compiled program is unchanged
+                xs = (jnp.arange(args.rounds, dtype=jnp.int32)
+                      if het is not None else None)
+                return jax.lax.scan(body, (st, k, hc), xs=xs,
+                                    length=args.rounds)
+
+            runner = jax.jit(
+                program, donate_argnums=(0,) if run_cfg.donate else ())
+            (state, k_data, het_carry), tape = runner(state, k_data,
+                                                      het_carry)
+            tape = jax.tree.map(np.asarray, tape)
+            for r in range(args.rounds):
+                if args.telemetry_out:
+                    telem_rounds.append(round_row(
+                        tape["lr"][r], tape["consensus"][r],
+                        tape["comm_bytes"][r]))
+                if r % run_cfg.eval_every == 0 or r == args.rounds - 1:
+                    logical = float(tape["comm_bytes"][r])
+                    print(f"round {r:4d}  lr={float(tape['lr'][r]):.4f}  "
+                          f"consensus={tape['consensus'][r]}  "
+                          f"comm={logical:.3e}B  "
+                          f"wire={logical * wire_ratio:.3e}B")
+            print(f"scan-rolled: {args.rounds} rounds in one compiled "
+                  f"program, one dispatch ({time.time() - t0:.1f}s)")
+        else:
+            for r in range(args.rounds):
+                k_data, kb = jax.random.split(k_data)
+                with step_annotation("repro/round", r):
+                    if het is not None:
+                        state, het_carry, metrics = het_step(
+                            state, sample_batch(kb), r, het_carry)
+                    else:
+                        state, metrics = step(state, sample_batch(kb))
+                if args.telemetry_out:
+                    telem_rounds.append(round_row(
+                        metrics["lr"], metrics["consensus"],
+                        metrics["comm_bytes"]))
+                if r % run_cfg.eval_every == 0 or r == args.rounds - 1:
+                    cons = np.asarray(metrics["consensus"])
+                    logical = float(metrics["comm_bytes"])
+                    print(f"round {r:4d}  lr={float(metrics['lr']):.4f}  "
+                          f"consensus={cons}  comm={logical:.3e}B  "
+                          f"wire={logical * wire_ratio:.3e}B  "
+                          f"({time.time()-t0:.1f}s)")
 
     personalized = personalize(state, pack_spec)  # pytree re-entry boundary
     k_data, kb = jax.random.split(k_data)
     eval_batch = sample_batch(kb)
+    final_loss = fl_perplexity(bundle, personalized, eval_batch)
     print("final mean per-client loss (personalized Eq.2): "
-          f"{fl_perplexity(bundle, personalized, eval_batch):.4f}")
+          f"{final_loss:.4f}")
+    if args.telemetry_out:
+        last_logical = (telem_rounds[-1]["logical_bytes"]
+                        if telem_rounds else 0.0)
+        events = [{
+            "event": "run_meta", "method": "fedspd", "arch": cfg.name,
+            "rounds": args.rounds, "n_clients": n, "n_clusters": s,
+            "seed": args.seed, "codec": comm.codec,
+            "streams": sorted(("lr", "consensus", "logical_bytes",
+                               "wire_bytes")),
+        }]
+        events += [{"event": "round", "round": r, **row}
+                   for r, row in enumerate(telem_rounds)]
+        summary = {"event": "summary", "final_loss": final_loss,
+                   "comm_bytes": last_logical,
+                   "wire_bytes": last_logical * wire_ratio,
+                   "wall_s": time.time() - t0}
+        if het is not None:
+            summary["staleness"] = np.asarray(het_carry.stale)
+        events.append(summary)
+        write_events(args.telemetry_out, events)
+        print(f"telemetry -> {args.telemetry_out} "
+              f"({len(telem_rounds)} round events)")
     print(f"mixture coefficients u:\n{np.asarray(state.u).round(3)}")
     if het is not None:
         print(f"final staleness (rounds since last exchange): "

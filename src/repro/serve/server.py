@@ -21,6 +21,7 @@ tests can assert one-compile/one-dispatch-per-call.
 """
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax
@@ -30,13 +31,7 @@ import numpy as np
 from repro.core.packing import PackSpec, unpack
 from repro.kernels.gossip_mix import gossip_mix_dequant, mixture_mix_dequant4
 from repro.serve.artifact import ServableArtifact
-
-
-def _n_compiles(fn) -> int:
-    try:
-        return fn._cache_size()
-    except Exception:
-        return -1
+from repro.telemetry import LatencyStats, compile_count
 
 
 class ClusterPlaneServer:
@@ -87,12 +82,26 @@ class ClusterPlaneServer:
             raise ValueError(
                 f"codec {codec!r} is not a plane shipping format")
         self.n_dispatches = 0
+        self.dequant_calls = 0
+        self.latency = LatencyStats()
         self._personalized = jax.jit(self._personalized_impl)
         self._predict = jax.jit(self._predict_impl)
         self._generate = jax.jit(
             self._generate_impl,
             static_argnames=("gen", "temperature", "max_len"),
         )
+
+    def _timed(self, fn, batch: int):
+        """Dispatch one entry-point batch and record its request latency
+        (dispatch + device completion — what a caller actually waits)."""
+        self.n_dispatches += 1
+        if self.codec != "fp32":
+            self.dequant_calls += 1
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        self.latency.record(time.perf_counter() - t0, batch=batch)
+        return out
 
     @classmethod
     def from_artifact(cls, artifact: ServableArtifact, spec: PackSpec, *,
@@ -116,20 +125,25 @@ class ClusterPlaneServer:
 
     def _mix(self, u: jnp.ndarray) -> jnp.ndarray:
         """(B, S) mixture weights -> (B, X) personalized flat params."""
-        x = self.spec.size
-        if self.codec == "fp32":
-            return jnp.einsum("bs,sx->bx", u.astype(jnp.float32), self.plane)
-        if self.codec == "int8":
-            out = gossip_mix_dequant(
-                u.astype(jnp.float32), self.plane_q, self.plane_scale,
-                qblock=self.qblock, interpret=self.interpret,
-            )
-        else:  # int4
-            out = mixture_mix_dequant4(
-                u.astype(jnp.float32), self.plane_packed, self.plane_scale,
-                qblock=self.qblock, interpret=self.interpret,
-            )
-        return out[:, :x]
+        # named_scope, not a profiler annotation: this runs INSIDE the
+        # jitted entry points, where host-side spans cannot see
+        with jax.named_scope(f"serve/mix_{self.codec}"):
+            x = self.spec.size
+            if self.codec == "fp32":
+                return jnp.einsum("bs,sx->bx", u.astype(jnp.float32),
+                                  self.plane)
+            if self.codec == "int8":
+                out = gossip_mix_dequant(
+                    u.astype(jnp.float32), self.plane_q, self.plane_scale,
+                    qblock=self.qblock, interpret=self.interpret,
+                )
+            else:  # int4
+                out = mixture_mix_dequant4(
+                    u.astype(jnp.float32), self.plane_packed,
+                    self.plane_scale,
+                    qblock=self.qblock, interpret=self.interpret,
+                )
+            return out[:, :x]
 
     # -- entry points (each ONE jitted program) --------------------------
 
@@ -138,8 +152,8 @@ class ClusterPlaneServer:
 
     def personalized(self, u) -> Any:
         """(B, S) -> personalized params pytree with (B,)-leading leaves."""
-        self.n_dispatches += 1
-        return self._personalized(jnp.asarray(u))
+        u = jnp.asarray(u)
+        return self._timed(lambda: self._personalized(u), u.shape[0])
 
     def _predict_impl(self, u, inputs):
         params = unpack(self._mix(u), self.spec)
@@ -154,8 +168,9 @@ class ClusterPlaneServer:
         mixture — mix, unpack, and the vmapped apply in one program."""
         if self.apply_fn is None:
             raise ValueError("predict needs apply_fn= at construction")
-        self.n_dispatches += 1
-        return self._predict(jnp.asarray(u), jnp.asarray(inputs))
+        u = jnp.asarray(u)
+        inputs = jnp.asarray(inputs)
+        return self._timed(lambda: self._predict(u, inputs), u.shape[0])
 
     def _generate_impl(self, u, prompts, key, *, gen, temperature, max_len):
         bundle = self.bundle
@@ -209,10 +224,13 @@ class ClusterPlaneServer:
         if key is None:
             key = jax.random.PRNGKey(0)
         max_len = prompts.shape[1] + int(gen) + 1
-        self.n_dispatches += 1
-        return self._generate(
-            jnp.asarray(u), prompts, key, gen=int(gen),
-            temperature=float(temperature), max_len=max_len,
+        u = jnp.asarray(u)
+        return self._timed(
+            lambda: self._generate(
+                u, prompts, key, gen=int(gen),
+                temperature=float(temperature), max_len=max_len,
+            ),
+            prompts.shape[0],
         )
 
     def serve_client(self, client: int, prompts, *, gen: int,
@@ -231,5 +249,30 @@ class ClusterPlaneServer:
     @property
     def n_compiles(self) -> int:
         """Total compiled programs across the three entry points."""
-        return sum(max(0, _n_compiles(f)) for f in
+        return sum(max(0, compile_count(f)) for f in
                    (self._personalized, self._predict, self._generate))
+
+    @property
+    def plane_bytes(self) -> int:
+        """Resident HBM footprint of the hot plane (weights + scales) —
+        the plane-residency counter in the serve telemetry snapshot."""
+        if self.codec == "fp32":
+            return int(self.plane.size) * 4
+        if self.codec == "int8":
+            return int(self.plane_q.nbytes) + int(self.plane_scale.nbytes)
+        return int(self.plane_packed.nbytes) + int(self.plane_scale.nbytes)
+
+    def telemetry_snapshot(self) -> dict:
+        """One JSON-able dict of the serve-path counters: codec, plane
+        residency, compile/dispatch/dequant counts, and the per-batch
+        latency percentiles + QPS (telemetry/events.py's
+        ``serve_summary`` event; the summary renderer tables it)."""
+        return {
+            "codec": self.codec,
+            "n_clusters": self.n_clusters,
+            "plane_bytes": self.plane_bytes,
+            "n_compiles": self.n_compiles,
+            "n_dispatches": self.n_dispatches,
+            "dequant_calls": self.dequant_calls,
+            **self.latency.snapshot(),
+        }

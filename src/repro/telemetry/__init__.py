@@ -1,0 +1,35 @@
+# Telemetry layer: the traced round-metrics plane (TelemetryConfig on
+# RunConfig — per-round streams collected INSIDE the round program, zero
+# extra dispatches, bit-identical between the loop and lax.scan engines),
+# host-side exporters (structured JSONL event log + summary tables), the
+# one compile-count accounting (counters.compile_count), serve-path
+# latency stats, and jax.profiler trace hooks (Perfetto).
+from repro.telemetry.config import TelemetryConfig  # noqa: F401
+from repro.telemetry.counters import (  # noqa: F401
+    LatencyStats,
+    compile_count,
+)
+from repro.telemetry.events import (  # noqa: F401
+    read_events,
+    run_events,
+    streams_from_events,
+    write_events,
+    write_run_jsonl,
+)
+from repro.telemetry.metrics import (  # noqa: F401
+    STREAMS,
+    consensus_residual,
+    effective_degree,
+    inactive_count,
+    make_collector,
+    mixture_drift,
+    mixture_entropy,
+    spectral_gap_proxy,
+    staleness_histogram,
+)
+from repro.telemetry.profile import (  # noqa: F401
+    annotate,
+    step_annotation,
+    trace_session,
+)
+from repro.telemetry.summary import summary_table  # noqa: F401

@@ -1,0 +1,65 @@
+"""TelemetryConfig: the frozen knob block for the traced round-metrics
+plane.
+
+Attached to ``RunConfig(telemetry=...)`` (experiments/config.py).  When
+set, the experiment driver computes a per-round metrics pytree INSIDE the
+round program — the streams ride the existing ``lax.scan`` ys under
+``scan_rounds=True`` and the existing per-round jitted dispatch under the
+loop engine, so collection costs zero extra dispatches and leaves the
+compile count untouched (asserted in tests/test_telemetry.py).  Both
+engines evaluate the identical traced expressions, so every stream is
+bit-identical between them.
+
+Streams (all per round; shapes per seed):
+
+  logical_bytes   ()   logical comm this round (uncompressed dtypes)
+  wire_bytes      ()   physical bytes under the run's codec (static ratio)
+  u_entropy       ()   mean per-client entropy of the soft cluster weights
+  u_drift         ()   ‖u_t − u_{t−1}‖_F — soft-assignment drift
+  consensus       (S,) per-cluster consensus residual ‖C_i − mean(C)‖²/N
+  degree          ()   mean effective-adjacency degree (post dropout/het)
+  spectral_gap    ()   1 − ρ(W) proxy of the Metropolis mixing matrix
+  stale_hist      (B,) staleness histogram (B = ``staleness_bins``)
+  n_inactive      ()   stragglers + offline clients this round
+
+Streams whose inputs a run lacks (no ``u`` on the state, no plane-shaped
+centers) are emitted as NaN constants of the right static shape, so the
+payload structure is a function of the config alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """How much the traced round-metrics plane collects.
+
+    round_metrics   master switch for the per-round traced streams
+    spectral_gap    include the mixing-matrix spectral-gap proxy (a few
+                    extra N×N matmuls per round; disable at very large N)
+    power_iters     deflated power-iteration steps for the gap proxy
+    staleness_bins  histogram bins: counts of staleness == 0..B-2 plus an
+                    overflow bin for >= B-1
+    """
+
+    round_metrics: bool = True
+    spectral_gap: bool = True
+    power_iters: int = 8
+    staleness_bins: int = 5
+
+    def __post_init__(self):
+        if self.power_iters < 1:
+            raise ValueError(
+                f"TelemetryConfig.power_iters={self.power_iters!r} must "
+                "be >= 1"
+            )
+        if self.staleness_bins < 2:
+            raise ValueError(
+                f"TelemetryConfig.staleness_bins={self.staleness_bins!r} "
+                "must be >= 2 (one exact bin + overflow)"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.round_metrics

@@ -1,0 +1,75 @@
+"""Host-side counters: jit-cache compile counts and serve-path latency.
+
+``compile_count`` is THE one compile-count accounting used across the
+repo — the experiment driver (``extras["n_compiles"]``), the serve path
+(``ClusterPlaneServer.n_compiles``), and the benches all report through
+it, so "one compile" means the same thing everywhere.
+"""
+from __future__ import annotations
+
+import time
+
+
+def compile_count(fn) -> int:
+    """Number of programs a ``jax.jit``-wrapped callable has compiled.
+
+    Reads the jit cache size — ``_cache_size`` is a private jax API, so
+    its absence on other jax versions returns -1 (diagnostic unknown)
+    instead of failing a finished run.
+    """
+    try:
+        return int(getattr(fn, "_cache_size", lambda: -1)())
+    except Exception:
+        return -1
+
+
+class LatencyStats:
+    """Per-batch serve latency accumulator (host wall clock).
+
+    ``record`` takes one blocking-measured batch; ``snapshot`` reports
+    the latency percentiles and sustained QPS (requests served over the
+    recording wall-span).  Percentiles use the nearest-rank method on the
+    sorted sample — exact, deterministic, no interpolation surprises in
+    the round-trip tests.
+    """
+
+    def __init__(self):
+        self.latencies_s: list[float] = []
+        self.requests = 0
+        self._t_first = None
+        self._t_last = None
+
+    def record(self, seconds: float, batch: int = 1) -> None:
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now - seconds
+        self._t_last = now
+        self.latencies_s.append(float(seconds))
+        self.requests += int(batch)
+
+    def percentile(self, p: float) -> float:
+        """Nearest-rank percentile of the recorded batch latencies (s)."""
+        if not self.latencies_s:
+            return float("nan")
+        xs = sorted(self.latencies_s)
+        rank = max(1, -(-int(p) * len(xs) // 100))   # ceil(p/100 * n)
+        return xs[min(rank, len(xs)) - 1]
+
+    @property
+    def qps(self) -> float:
+        if not self.latencies_s:
+            return 0.0
+        span = (self._t_last or 0.0) - (self._t_first or 0.0)
+        busy = sum(self.latencies_s)
+        denom = span if span > 0 else busy
+        return self.requests / denom if denom > 0 else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "batches": len(self.latencies_s),
+            "requests": self.requests,
+            "p50_ms": self.percentile(50) * 1e3,
+            "p95_ms": self.percentile(95) * 1e3,
+            "p99_ms": self.percentile(99) * 1e3,
+            "qps": self.qps,
+        }

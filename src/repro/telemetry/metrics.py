@@ -1,0 +1,179 @@
+"""Traced round-metric primitives for the telemetry plane.
+
+Every function here is pure jnp on its inputs and batch-polymorphic over
+leading axes (the multi-seed driver vmaps states but computes metrics
+OUTSIDE the vmap, so a batched run's ``u`` arrives as (k, N, S), its
+plane as (k, S, N, X), a per-seed adjacency as (k, N, N)).  Reductions
+therefore run over trailing axes only.
+
+``make_collector`` builds the per-round collection closure the experiment
+driver (experiments/runner.py) splices into the round program: it runs
+inside the SAME jitted dispatch as the training step (the lax.scan body
+under ``scan_rounds=True``), which is what makes every stream bit-identical
+between the loop and scan engines and keeps collection at zero extra
+dispatches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.telemetry.config import TelemetryConfig
+
+# the stream names in export order (the JSONL schema table in README)
+STREAMS = ("logical_bytes", "wire_bytes", "u_entropy", "u_drift",
+           "consensus", "degree", "spectral_gap", "stale_hist",
+           "n_inactive")
+
+
+def mixture_entropy(u: jnp.ndarray) -> jnp.ndarray:
+    """Mean per-client entropy of the (..., N, S) soft cluster weights —
+    0 for hard assignments, log(S) at the uniform mixture."""
+    p = u.astype(jnp.float32)
+    h = -jnp.sum(jnp.where(p > 0.0, p * jnp.log(p), 0.0), axis=-1)
+    return jnp.mean(h, axis=-1)
+
+
+def mixture_drift(u_old: jnp.ndarray, u_new: jnp.ndarray) -> jnp.ndarray:
+    """Frobenius norm of the soft-assignment update ‖u_t − u_{t−1}‖."""
+    d = (u_new.astype(jnp.float32) - u_old.astype(jnp.float32))
+    return jnp.sqrt(jnp.sum(d * d, axis=(-2, -1)))
+
+
+def consensus_residual(plane: jnp.ndarray) -> jnp.ndarray:
+    """Per-cluster consensus residual on a (..., S, N, X) plane:
+    ‖C_i − mean_i(C)‖² summed over clients and params, / N — the same
+    normalization as core/fedspd's per-cluster consensus metric."""
+    p32 = plane.astype(jnp.float32)
+    mean = jnp.mean(p32, axis=-2, keepdims=True)
+    return jnp.sum(jnp.square(p32 - mean), axis=(-2, -1)) / plane.shape[-2]
+
+
+def effective_degree(adj: jnp.ndarray) -> jnp.ndarray:
+    """Mean degree of the binarized effective (..., N, N) adjacency —
+    after dropout masks and heterogeneity weights zeroed their links."""
+    n = adj.shape[-1]
+    a = (adj > 0.0).astype(jnp.float32)
+    a = a * (1.0 - jnp.eye(n, dtype=jnp.float32))
+    return jnp.sum(a, axis=(-2, -1)) / n
+
+
+def spectral_gap_proxy(adj: jnp.ndarray, iters: int = 8) -> jnp.ndarray:
+    """1 − ρ proxy for the Metropolis mixing matrix of the effective
+    adjacency, where ρ = max |eigenvalue ≠ 1| governs gossip convergence.
+
+    Builds the symmetric doubly-stochastic Metropolis W
+    (w_ij = a_ij / (1 + max(d_i, d_j)), diagonal absorbs the deficit),
+    deflates the all-ones eigenvector, and runs ``iters`` fixed power
+    iterations from a deterministic start vector — traced, cheap
+    (``iters`` N×N matvecs), and identical under both round engines.
+    An empty effective graph (everyone isolated) reports gap 0."""
+    n = adj.shape[-1]
+    eye = jnp.eye(n, dtype=jnp.float32)
+    a = (adj > 0.0).astype(jnp.float32) * (1.0 - eye)
+    deg = jnp.sum(a, axis=-1)
+    mx = jnp.maximum(deg[..., :, None], deg[..., None, :])
+    w = a / (1.0 + mx)
+    w = w + eye * (1.0 - jnp.sum(w, axis=-1, keepdims=True))
+    v = jnp.broadcast_to(jnp.linspace(-1.0, 1.0, n, dtype=jnp.float32),
+                         adj.shape[:-1])
+    rho = jnp.zeros(adj.shape[:-2], jnp.float32)
+    for _ in range(int(iters)):
+        v = v - jnp.mean(v, axis=-1, keepdims=True)      # deflate 1-vec
+        norm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+        v = v / jnp.maximum(norm, 1e-12)
+        v = jnp.einsum("...ij,...j->...i", w, v)
+        rho = jnp.sqrt(jnp.sum(v * v, axis=-1))
+    return jnp.maximum(0.0, 1.0 - rho)
+
+
+def staleness_histogram(stale: jnp.ndarray, bins: int) -> jnp.ndarray:
+    """(..., N) integer staleness counters -> (..., bins) counts: exact
+    bins for staleness 0..bins-2 plus an overflow bin for >= bins-1."""
+    clipped = jnp.clip(stale, 0, bins - 1)
+    onehot = jax.nn.one_hot(clipped, bins, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=-2)
+
+
+def inactive_count(weights: jnp.ndarray) -> jnp.ndarray:
+    """Clients contributing nothing this round (stragglers + offline):
+    zero entries of the (..., N) activity-weight vector."""
+    return jnp.sum((weights <= 0.0).astype(jnp.float32), axis=-1)
+
+
+def flatten_centers(centers, batch_ndim: int = 0):
+    """Ravel a pytree of (S, N, ...) center leaves (with ``batch_ndim``
+    leading seed axes) into one (..., S, N, X) plane — already-packed
+    plane states pass through.  Raises on leaves that do not carry the
+    (S, N) leading structure; callers probe once host-side."""
+    leaves = jax.tree.leaves(centers)
+    if len(leaves) == 1 and leaves[0].ndim == batch_ndim + 3:
+        return leaves[0]
+    lead = leaves[0].shape[:batch_ndim + 2]
+    flat = []
+    for leaf in leaves:
+        if leaf.shape[:batch_ndim + 2] != lead:
+            raise ValueError("centers leaves disagree on (S, N) structure")
+        flat.append(jnp.reshape(leaf, lead + (-1,)))
+    return jnp.concatenate(flat, axis=-1)
+
+
+def make_collector(cfg: TelemetryConfig, *, batch_shape: tuple = (),
+                   n_clusters: int, n_clients: int, wire_ratio: float = 1.0,
+                   per_round_bytes: float | None = None,
+                   has_u: bool = True, has_plane: bool = True):
+    """Build the per-round collection closure the driver jits into the
+    round program.
+
+    ``collect(old_state, new_state, adj, weights, stale)`` returns the
+    {stream: array} pytree for ONE round.  ``adj`` is the round's
+    effective traced adjacency (post dropout and heterogeneity weights);
+    ``weights``/``stale`` are the heterogeneity activity vector and
+    updated staleness counters (None without a system model — the
+    streams degrade to all-active constants).  ``per_round_bytes`` is the
+    static round cost for methods without tracked comm accounting (then
+    the state's ``comm_bytes`` delta is not read).
+
+    Every output is broadcast to its full per-seed shape (scalars to
+    ``batch_shape``), so the host-side slicing per seed is uniform.
+    """
+    bshape = tuple(batch_shape)
+    s, n = int(n_clusters), int(n_clients)
+    bins = int(cfg.staleness_bins)
+    nan = jnp.float32(jnp.nan)
+
+    def full(v, tail=()):
+        return jnp.broadcast_to(jnp.asarray(v, jnp.float32), bshape + tail)
+
+    def collect(old, new, adj, weights=None, stale=None) -> dict:
+        if per_round_bytes is not None:
+            logical = full(per_round_bytes)
+        else:
+            logical = full(new.comm_bytes - old.comm_bytes)
+        out = {
+            "logical_bytes": logical,
+            "wire_bytes": logical * jnp.float32(wire_ratio),
+            "u_entropy": full(mixture_entropy(new.u) if has_u else nan),
+            "u_drift": full(mixture_drift(old.u, new.u) if has_u else nan),
+        }
+        if has_plane:
+            plane = flatten_centers(new.centers, batch_ndim=len(bshape))
+            out["consensus"] = full(consensus_residual(plane), (s,))
+        else:
+            out["consensus"] = full(nan, (s,))
+        out["degree"] = full(effective_degree(adj))
+        out["spectral_gap"] = (
+            full(spectral_gap_proxy(adj, cfg.power_iters))
+            if cfg.spectral_gap else full(nan)
+        )
+        if stale is None:
+            stale_v = jnp.zeros((n,), jnp.int32)
+        else:
+            stale_v = stale
+        out["stale_hist"] = full(staleness_histogram(stale_v, bins), (bins,))
+        out["n_inactive"] = full(
+            inactive_count(weights) if weights is not None else 0.0
+        )
+        return out
+
+    return collect
