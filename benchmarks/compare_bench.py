@@ -10,7 +10,8 @@ any lane whose median round time regresses by more than ``--threshold``
 added benchmark, e.g. ``fedspd/dynamic_graph``) never fails the gate: its
 first timing seeds the baseline for subsequent runs. A markdown delta table — per-lane timings,
 the packed-vs-pytree speedup matrix, the wire-byte table for the
-compressed-communication lanes (fedspd/comm_*), the telemetry collection
+compressed-communication lanes (fedspd/comm_*), the sparse-training wire
+table (fedspd/sparse_*), the telemetry collection
 overhead (fedspd/telemetry_overhead), and the personalized
 serving throughput table (serve/mixture_qps*) — is appended to
 ``$GITHUB_STEP_SUMMARY`` when set, and always printed to stdout.
@@ -41,11 +42,26 @@ def _lane(row: dict) -> str:
 
 
 def lane_medians(payload: dict) -> dict:
-    """lane -> median round ms (falls back to min-of-reps for old files)."""
-    return {
-        _lane(r): r.get("round_ms_median", r.get("round_ms"))
-        for r in payload.get("results", [])
-    }
+    """lane -> median round ms (falls back to min-of-reps for old files).
+
+    Harvests the top-level ``results`` list AND every nested ``*_lanes``
+    list (comm_lanes, sparse_lanes, serve_lanes, telemetry_lanes, and any
+    future sibling) — a timing row recorded only in its nested payload
+    cannot dodge the trend gate. Rows present in both places agree by
+    construction (perf_roundstep appends the same dict to both), so the
+    overwrite is a no-op."""
+    rows = list(payload.get("results", []))
+    for key, val in payload.items():
+        if key.endswith("_lanes") and isinstance(val, list):
+            rows.extend(val)
+    out = {}
+    for r in rows:
+        if not isinstance(r, dict):
+            continue
+        ms = r.get("round_ms_median", r.get("round_ms"))
+        if ms is not None:
+            out[_lane(r)] = ms
+    return out
 
 
 def compare(base: dict, new: dict, threshold: float) -> tuple[list, list]:
@@ -128,6 +144,26 @@ def markdown_report(base: dict, new: dict, rows: list,
                 f"| {r['lane']} | {_fmt(prev, 'd')} "
                 f"| {r['wire_model_bytes']} | {r['logical_model_bytes']} "
                 f"| x{r['wire_ratio']} | {delta} |"
+            )
+    if new.get("sparse_lanes"):
+        old_wire = {r.get("lane"): r.get("wire_model_bytes")
+                    for r in base.get("sparse_lanes", [])}
+        lines += [
+            "",
+            "### sparse training (DisPFL lanes)",
+            "",
+            "| lane | density | codec | wire B | dense wire B | vs dense "
+            "| Δ wire |",
+            "|---|---:|---|---:|---:|---:|---:|",
+        ]
+        for r in new["sparse_lanes"]:
+            prev = old_wire.get(r["lane"])
+            delta = ("—" if prev in (None, 0)
+                     else f"{(r['wire_model_bytes'] / prev - 1) * 100:+.1f}%")
+            lines.append(
+                f"| {r['lane']} | {r['density']} | {r['codec']} "
+                f"| {r['wire_model_bytes']} | {r['dense_wire_model_bytes']} "
+                f"| x{r['wire_vs_dense']} | {delta} |"
             )
     if new.get("telemetry_lanes"):
         old_ov = {r.get("lane"): r.get("paired_overhead_vs_off")

@@ -24,6 +24,13 @@ production train loop) across:
                                                cohort subsampling at
                                                N=1024 clients (lane
                                                fedspd/cohort_n1024)
+  sparsity        dense plane                vs the DisPFL masked round at
+                                               density 0.2, plain and
+                                               stacked on int8+EF (lanes
+                                               fedspd/sparse_d20 and
+                                               fedspd/sparse_comm_int8,
+                                               scan-rolled, one dispatch
+                                               asserted)
   telemetry       bare round step            vs the step with the traced
                                                round-metrics plane spliced
                                                in (lane fedspd/
@@ -364,6 +371,76 @@ def bench_straggler(*, n: int, m: int, dim: int, rounds: int,
     }
 
 
+def bench_sparse(*, n: int, m: int, dim: int, tau: int, rounds: int,
+                 repeats: int, seed: int = 0,
+                 codec: str | None = None) -> dict:
+    """DisPFL sparse-training lanes through the scan engine.
+
+    ``fedspd/sparse_d20``: the masked round at density 0.2 (RigL
+    prune/regrow every 4 rounds), all rounds scan-rolled into ONE
+    compiled program — one compile + one host dispatch asserted, exactly
+    like the dense scan lane. ``fedspd/sparse_comm_int8`` (``codec=
+    "int8"``): the same masked round with the int8 + error-feedback wire
+    codec stacked on top (mask-then-encode). Both rows carry the static
+    sparse wire accounting (nnz payload + support bitmap) against the
+    dense wire cost of the same codec."""
+    from repro.comm.codecs import sparse_wire_model_bytes
+    from repro.configs.paper_cnn import PaperExpConfig
+    from repro.core.sparse import SparseConfig
+    from repro.experiments import RunConfig, run_method
+
+    sp = SparseConfig(density=0.2, prune_rate=0.2, regrow="rigl",
+                      update_every=4)
+    comm = CommConfig(codec=codec, error_feedback=True) if codec else None
+    exp = PaperExpConfig(
+        n_clients=n, n_per_client=m, rounds=rounds, tau=tau,
+        batch=min(16, m), avg_degree=4.0, model="mlp", dim=dim, n_classes=4,
+    )
+    data = make_mixture_classification(
+        n_clients=n, n_clusters=2, n_per_client=m, dim=dim, n_classes=4,
+        seed=seed,
+    )
+    cfg = RunConfig(eval_every=10**9, param_plane=True, scan_rounds=True,
+                    sparse=sp, comm=comm)
+    walls, r = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = run_method("fedspd", data, exp, seed=seed, cfg=cfg)
+        walls.append(time.perf_counter() - t0)
+    assert r.extras["n_compiles"] == 1, r.extras
+    assert r.extras["n_dispatches"] == 1, r.extras
+    key = jax.random.PRNGKey(seed)
+
+    def model_init(k):
+        from repro.models.smallnets import make_classifier
+        p, *_ = make_classifier("mlp", k, dim, 4)
+        return p
+
+    spec = make_pack_spec(jax.eval_shape(model_init, key))
+    x = spec.size
+    wire_cfg = comm or CommConfig(codec="fp32")
+    sparse_wire = sparse_wire_model_bytes(wire_cfg, x, sp.k_active(x))
+    dense_wire = (spec.model_bytes if comm is None
+                  else make_channel(comm, x).wire_model_bytes)
+    per_round = [w * 1e3 / rounds for w in walls]
+    return {
+        "lane": f"fedspd/sparse_comm_{codec}" if codec else
+                "fedspd/sparse_d20",
+        "n_clients": n, "rounds": rounds, "density": sp.density,
+        "codec": codec or "fp32",
+        "n_compiles": r.extras["n_compiles"],
+        "n_dispatches": r.extras["n_dispatches"],
+        "run_s": round(min(walls), 4),
+        "round_ms": round(min(per_round), 4),
+        "round_ms_median": round(statistics.median(per_round), 4),
+        "mean_acc": round(float(r.mean_acc), 4),
+        "wire_model_bytes": sparse_wire,
+        "dense_wire_model_bytes": dense_wire,
+        "wire_vs_dense": round(sparse_wire / dense_wire, 4),
+        "wire_bytes": float(r.wire_bytes),
+    }
+
+
 def bench_telemetry_overhead(*, n: int, m: int, dim: int, tau: int,
                              reps: int, seed: int = 0) -> dict:
     """``fedspd/telemetry_overhead``: the traced round-metrics plane
@@ -414,7 +491,7 @@ def bench_telemetry_overhead(*, n: int, m: int, dim: int, tau: int,
     )
     return {
         "lane": "fedspd/telemetry_overhead",
-        "n_clients": n, "streams": 9,
+        "n_clients": n, "streams": 11,
         "compile_s": round(compile_s[True], 4),
         "round_ms": round(min(times[True]) * 1e3, 4),
         "round_ms_median": round(statistics.median(times[True]) * 1e3, 4),
@@ -613,6 +690,18 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
     print(f"{stg['lane']:>24s}  round {stg['round_ms']:9.2f} ms   "
           f"(N={stg['n_clients']}, 30% slow, max stale "
           f"{stg['max_staleness']}, {stg['n_dispatches']} dispatch)")
+    # sparse-training lanes: DisPFL masked round at density 0.2, plain
+    # and stacked on the int8+EF wire codec, both scan-rolled (asserted)
+    sparse_lanes = []
+    for codec in (None, "int8"):
+        row = bench_sparse(n=n, m=m, dim=dim, tau=tau,
+                           rounds=8 if fast else 16, repeats=2, codec=codec)
+        results.append(row)
+        sparse_lanes.append(row)
+        print(f"{row['lane']:>24s}  round {row['round_ms']:9.2f} ms   "
+              f"(d={row['density']}, wire "
+              f"{row['wire_model_bytes']}/{row['dense_wire_model_bytes']} B "
+              f"= x{row['wire_vs_dense']}, {row['n_dispatches']} dispatch)")
     # telemetry lane: the traced round-metrics plane vs the bare step —
     # collection must stay within measurement noise (paired, step-level)
     tel = bench_telemetry_overhead(n=n, m=m, dim=dim, tau=tau, reps=reps)
@@ -669,6 +758,7 @@ def run(fast: bool = True, out: str = DEFAULT_OUT, reps: int | None = None):
         "results": results,
         "comparisons": comparisons,
         "comm_lanes": comm_lanes,
+        "sparse_lanes": sparse_lanes,
         "serve_lanes": serve_lanes,
         "telemetry_lanes": [tel],
     }

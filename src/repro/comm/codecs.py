@@ -373,6 +373,41 @@ class Channel:
         return x_hat, ef
 
 
+def sparse_wire_model_bytes(cfg: Optional[CommConfig], x: int,
+                            k_active: int) -> int:
+    """Exact physical bytes per single-model SPARSE message: nnz payload
+    plus support bitmap (core/sparse masks; DisPFL).
+
+    The sparse wire format gathers the ``k_active`` active values into a
+    compact run, encodes THAT (mask-then-encode: quantization blocks tile
+    the compact run, so scales cover nnz — never dead air), and prepends a
+    ``ceil(X/8)``-byte support bitmap the receiver scatters by. All terms
+    are static given (codec, X, density), so accounting stays a
+    trace-free per-message constant like ``Channel.wire_model_bytes``:
+
+    - fp32: ``4·k + ceil(X/8)``
+    - int8: ``k + 4·ceil(k/block) + ceil(X/8)``
+    - int4: ``ceil(k/2) + 2·ceil(k/block) + ceil(X/8)``
+    - topk: ``8·min(topk_k, k)`` — NO bitmap: the top-k payload already
+      carries explicit (value, index) pairs, and survivors can only come
+      from the active support, so masking never inflates the message
+
+    For the density-scaling codecs (fp32/int8/int4) the result is bounded
+    by ``density·dense_wire + bitmap`` (asserted in tests/test_sparse.py);
+    topk is instead bounded by its own dense cost.
+    """
+    bitmap = -(-x // 8)
+    if cfg is None or cfg.codec == "fp32":
+        return int(4 * k_active + bitmap)
+    if cfg.codec == "int8":
+        return int(k_active + 4 * -(-k_active // cfg.block) + bitmap)
+    if cfg.codec == "int4":
+        return int(-(-k_active // 2) + 2 * -(-k_active // cfg.block)
+                   + bitmap)
+    k_top = cfg.k if cfg.k is not None else max(1, x // 16)
+    return int(8 * min(k_top, k_active))
+
+
 def make_channel(cfg: Optional[CommConfig], x_width: int) -> Optional[Channel]:
     """Channel for a flat message width — or ``None`` for no compression.
 

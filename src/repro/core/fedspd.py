@@ -56,10 +56,12 @@ from repro.core.clustering import cluster_all_clients, mixture_coefficients
 from repro.core.gossip import (
     GossipSpec,
     consensus_distance,
+    fedspd_weight_matrix,
     mix,
     round_comm_bytes,
 )
 from repro.core.packing import PackSpec, pack, unpack
+from repro.core.sparse import column_activity, maybe_update_mask
 from repro.data.pipeline import client_batches, client_uniform_batches
 from repro.optim.sgd import Optimizer, sgd
 from repro.utils.pytree import (
@@ -80,6 +82,9 @@ class FedSPDState(NamedTuple):
     ef: Any = None       # (N, X) error-feedback residual (comm/codecs);
     #                      None (an empty pytree subtree) unless the run
     #                      uses a compressing codec with error_feedback
+    mask: Any = None     # (N, X) float {0,1} per-client sparse masks
+    #                      (core/sparse; DisPFL) — None unless the run
+    #                      carries a SparseConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -219,6 +224,7 @@ def make_round_step(
     model_bytes: Optional[int] = None,     # per-model wire bytes (hoisted)
     donate: bool = False,           # jit + donate the state in place
     comm=None,                      # comm/codecs.CommConfig: wire codec
+    sparse=None,                    # core/sparse.SparseConfig: DisPFL masks
 ):
     """Returns step(state, data, adj=None) -> (state, metrics). ``data``
     leaves: (N, M, ...) in the "full" regime; (N, B, ...) fresh batch in
@@ -266,6 +272,19 @@ def make_round_step(
     once at first trace — packed runs always account ORIGINAL dtypes via
     the pack spec, so packing never changes reported comm bytes.
 
+    ``sparse`` (core/sparse.SparseConfig) runs the DisPFL composition:
+    ``state.mask`` carries one (N, X) binary mask per client, the local
+    step trains on the masked support (masked start + masked gradients),
+    the exchange is mask-then-encode with a support-renormalized mix
+    (num = W·(M⊙Ĉ), den = W·M; each receiver keeps its own value where
+    its mask is dead or no active sender covers the coordinate — the
+    effective mixing weights are row-stochastic on the active support),
+    and a traced RigL prune/regrow updates the mask in-carry every
+    ``update_every`` rounds. ``density >= 1.0`` statically routes back to
+    the dense code paths (bit-exact parity), the mask riding along
+    unchanged. Requires the packed plane; cosine-alignment filtering does
+    not compose (the masked weights are support-, not value-, dependent).
+
     ``donate=True`` returns the step already jitted with
     ``donate_argnums=0``: XLA aliases the state's buffers input→output
     (the (S, N, X) plane — every round's dominant allocation — is updated
@@ -299,6 +318,20 @@ def make_round_step(
 
             _wrapped_comm_mix.comm_aware = True
             mix_fn = _wrapped_comm_mix
+
+    sparse_on = sparse is not None and sparse.enabled
+    if sparse_on:
+        if pack_spec is None:
+            raise ValueError(
+                f"sparse training (density={sparse.density}) requires the "
+                "packed parameter plane (pass pack_spec)"
+            )
+        if gossip.cos_align_threshold > -1.0:
+            raise ValueError(
+                "sparse training does not compose with cosine-alignment "
+                "filtering: the masked mixing weights are support-, not "
+                "value-, dependent"
+            )
 
     grad_fn = jax.grad(loss_fn)
     sigma = cfg.dp_clip * cfg.dp_noise_multiplier
@@ -397,8 +430,110 @@ def make_round_step(
         plane = plane.at[s, jnp.arange(n)].set(c_mixed.astype(plane.dtype))
         return plane, ef
 
-    def local_updates(c_sel, data, z, s, key, lr):
-        """τ SGD steps on the selected centers, cluster-conditional batches."""
+    # ---------------- sparse (DisPFL) plane machinery ---------------------
+
+    def exchange_sparse(plane, c_old, c_new, s, smask, k_dp, k_comm, ef, adj):
+        """Sparse variant of steps (2)+(3): DP sanitize then RE-mask (noise
+        must not densify the support), mask-then-encode on the wire, and a
+        support-renormalized mix:
+
+            num = W·(M ⊙ Ĉ)    den = W·M
+            out = where(M_i ∧ den > 0, num / den, own value)
+
+        Per coordinate the effective weights w_ij·m_jx/den sum to 1 over
+        the senders that carry it — row-stochastic on the active support —
+        and a receiver's dead coordinates stay untouched (zero). The EF
+        residual is masked after every update so dead coordinates never
+        accumulate deferred error."""
+        if cfg.dp_clip > 0:
+            scale, noise = dp_flat_parts(c_old, c_new, k_dp)
+            c_sel = c_old + scale * (c_new - c_old)
+            if noise is not None:
+                c_sel = c_sel + sigma * noise
+            c_sel = smask * c_sel
+        else:
+            c_sel = c_new  # masked start + masked grads => already on support
+        w = fedspd_weight_matrix(gossip, s, None, adj=adj)
+        colact = column_activity(smask)
+        kernel = getattr(mix_fn, "sparse_matmul", None)
+
+        def matmul(w_, v):
+            if kernel is None:
+                return jnp.einsum(
+                    "ij,jx->ix", w_, v,
+                    preferred_element_type=jnp.float32)
+            return kernel(w_, v, colact)
+
+        if channel is None:
+            num = matmul(w, c_sel)
+        else:
+            dequant = getattr(mix_fn, "sparse_dequant", None)
+            fused = dequant is not None and getattr(channel, "fused", False)
+            enc, x_hat, ef = channel.encode_stream(
+                c_sel, k_comm, ef, need_hat=channel.has_ef or not fused)
+            if ef is not None:
+                ef = smask * ef
+            if fused:
+                num = dequant(w, enc, smask)
+            else:
+                # decoded zeros stay exactly zero for every codec, but the
+                # support contract must not hinge on that: re-mask
+                num = matmul(w, smask * x_hat)
+        den = matmul(w, smask)
+        c_mixed = jnp.where(
+            jnp.logical_and(smask > 0, den > 0),
+            num / jnp.maximum(den, 1e-12), c_sel,
+        )
+        plane = plane.at[s, jnp.arange(s.shape[0])].set(
+            c_mixed.astype(plane.dtype))
+        return plane, ef
+
+    def dense_grads(c_flat, data, z, s, key):
+        """One DENSE gradient pass at the post-update masked parameters —
+        RigL's regrow score asks where the loss would move dead
+        coordinates hardest. Operates on the flat (N, X) slab via the
+        pack-spec boundary; skipped statically for regrow="random"."""
+        if cfg.regime == "full":
+            bx = client_batches(
+                key, data["inputs"], data["targets"], z, s, cfg.batch
+            )
+            batch = {"x": bx[0], "y": bx[1]}
+
+            def one(f, b):
+                return loss_fn(unpack(f, pack_spec), b)
+
+            return jax.vmap(jax.grad(one))(c_flat, batch)
+
+        def one(f, b, m):
+            pel = per_example_loss(unpack(f, pack_spec), b)
+            return jnp.sum(pel * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+        return jax.vmap(jax.grad(one))(c_flat, data["batch"], data["mask"])
+
+    def sparse_mask_update(state, c_new, data, s):
+        """Traced RigL prune/regrow riding the round carry. The key is
+        derived via fold_in(state.key, round) WITHOUT consuming the main
+        split sequence, so loop and scan engines — and the dense program
+        when density >= 1 — see identical key streams."""
+        k_mask = jax.random.fold_in(
+            jax.random.fold_in(state.key, 0x51AB), state.round
+        )
+        k_grow, k_batch = jax.random.split(k_mask)
+        if sparse.regrow == "rigl":
+            g_dense = dense_grads(c_new, data, state.z, s, k_batch)
+        else:
+            g_dense = jnp.zeros_like(c_new)
+        return maybe_update_mask(
+            state.mask, c_new, g_dense, k_grow, state.round, sparse
+        )
+
+    def local_updates(c_sel, data, z, s, key, lr, grad_mask=None):
+        """τ SGD steps on the selected centers, cluster-conditional batches.
+
+        ``grad_mask`` (a pytree of {0,1} leaves matching the params) is the
+        sparse engine's support projection: gradients are masked every
+        step, so a masked start stays on the active support for all τ
+        steps — true sparse local training, not mask-at-boundaries."""
         opt_state = jax.vmap(optimizer.init)(c_sel)
 
         def one_step(carry, k):
@@ -418,6 +553,10 @@ def make_round_step(
 
                 grads = jax.vmap(jax.grad(masked_loss))(
                     c, data["batch"], data["mask"]
+                )
+            if grad_mask is not None:
+                grads = jax.tree.map(
+                    lambda g, m: g * m.astype(g.dtype), grads, grad_mask
                 )
             c, opt_s = jax.vmap(
                 lambda g, o, p: optimizer.update(g, o, p, lr)
@@ -456,7 +595,7 @@ def make_round_step(
         )
         new_state = FedSPDState(
             centers=centers, u=u, z=z, round=state.round + 1, key=key,
-            comm_bytes=comm,
+            comm_bytes=comm, mask=state.mask,
         )
         metrics = {
             "lr": lr,
@@ -502,7 +641,7 @@ def make_round_step(
         )
         new_state = FedSPDState(
             centers=centers, u=u, z=state.z, round=state.round + 1, key=key,
-            comm_bytes=comm,
+            comm_bytes=comm, mask=state.mask,
         )
         metrics = {
             "lr": lr,
@@ -524,8 +663,16 @@ def make_round_step(
         # parameters take pytree form only inside this scope.
         s = select_clusters(k_sel, state.u)
         c_old = plane[s, jnp.arange(s.shape[0])]    # (N, X)
+        if sparse_on:
+            # support applies at gather: rows of OTHER clusters may carry
+            # coordinates from an older mask; the current mask projects
+            c_old = state.mask * c_old
+            grad_mask = unpack(state.mask, pack_spec)
+        else:
+            grad_mask = None
         c_new_tree = local_updates(
-            unpack(c_old, pack_spec), data, state.z, s, k_local, lr
+            unpack(c_old, pack_spec), data, state.z, s, k_local, lr,
+            grad_mask=grad_mask,
         )
         c_new = pack(c_new_tree, pack_spec)
         if channel is None:
@@ -535,8 +682,14 @@ def make_round_step(
             key, k_dp, k_comm = jax.random.split(key, 3)
 
         # (2)+(3) flat sanitize + wire codec + mix + scatter
-        plane, ef = exchange_packed(plane, c_old, c_new, s, k_dp, k_comm,
-                                    state.ef, adj)
+        if sparse_on:
+            new_mask = sparse_mask_update(state, c_new, data, s)
+            plane, ef = exchange_sparse(plane, c_old, c_new, s, state.mask,
+                                        k_dp, k_comm, state.ef, adj)
+        else:
+            new_mask = state.mask
+            plane, ef = exchange_packed(plane, c_old, c_new, s, k_dp, k_comm,
+                                        state.ef, adj)
 
         # (4) re-cluster: the forward pass needs model structure again
         batch_all = {"x": data["inputs"], "y": data["targets"]}
@@ -551,7 +704,7 @@ def make_round_step(
         )
         new_state = FedSPDState(
             centers=plane, u=u, z=z, round=state.round + 1, key=key,
-            comm_bytes=comm, ef=ef,
+            comm_bytes=comm, ef=ef, mask=new_mask,
         )
         metrics = {
             "lr": lr,
@@ -580,9 +733,14 @@ def make_round_step(
         zb = jax.vmap(assign)(centers_nc, batch)  # (N, B)
         mask = (zb == s[:, None]).astype(jnp.float32)
 
+        if sparse_on:
+            c_old = state.mask * c_old
+            grad_mask = unpack(state.mask, pack_spec)
+        else:
+            grad_mask = None
         c_new_tree = local_updates(
             unpack(c_old, pack_spec), {"batch": batch, "mask": mask},
-            None, s, k_local, lr,
+            None, s, k_local, lr, grad_mask=grad_mask,
         )
         c_new = pack(c_new_tree, pack_spec)
         if channel is None:
@@ -590,8 +748,16 @@ def make_round_step(
             k_comm = None
         else:
             key, k_dp, k_comm = jax.random.split(key, 3)
-        plane, ef = exchange_packed(plane, c_old, c_new, s, k_dp, k_comm,
-                                    state.ef, adj)
+        if sparse_on:
+            new_mask = sparse_mask_update(
+                state, c_new, {"batch": batch, "mask": mask}, s
+            )
+            plane, ef = exchange_sparse(plane, c_old, c_new, s, state.mask,
+                                        k_dp, k_comm, state.ef, adj)
+        else:
+            new_mask = state.mask
+            plane, ef = exchange_packed(plane, c_old, c_new, s, k_dp, k_comm,
+                                        state.ef, adj)
 
         u_batch = jax.vmap(
             lambda z_: mixture_coefficients(z_, cfg.n_clusters)
@@ -604,7 +770,7 @@ def make_round_step(
         )
         new_state = FedSPDState(
             centers=plane, u=u, z=state.z, round=state.round + 1, key=key,
-            comm_bytes=comm, ef=ef,
+            comm_bytes=comm, ef=ef, mask=new_mask,
         )
         metrics = {
             "lr": lr,

@@ -248,6 +248,8 @@ def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
         interpret = jax.default_backend() != "tpu"
 
         if plane:
+            from repro.kernels.gossip_mix import gossip_mix_sparse
+
             def mix_pallas(c_sel, s, adj=None):
                 w = fedspd_weight_matrix(spec, s, c_sel, adj=adj)
                 return gossip_mix_flat(
@@ -263,8 +265,16 @@ def make_mix_fn(spec: GossipSpec, backend: str = "reference", *,
                     interpret=interpret,
                 ).astype(c_old.dtype)
 
+            def sparse_matmul(w, v, col_active):
+                # the sparse exchange's W·(M⊙·) products: all-dead
+                # 128-aligned slabs are skipped via traced activity bits
+                return gossip_mix_sparse(
+                    w, v, col_active, interpret=interpret
+                ).astype(v.dtype)
+
             if spec.cos_align_threshold <= -1.0:
                 mix_pallas.fused_dp = fused_dp
+            mix_pallas.sparse_matmul = sparse_matmul
             return mix_pallas
 
         def mix_pallas(c_sel, s, adj=None):
@@ -325,7 +335,9 @@ def _make_comm_mix_fn(spec: GossipSpec, backend: str, *, comm):
     if backend == "pallas":
         from repro.kernels.gossip_mix import (
             gossip_mix_encoded,
+            gossip_mix_encoded_masked,
             gossip_mix_flat,
+            gossip_mix_sparse,
         )
 
         interpret = jax.default_backend() != "tpu"
@@ -349,7 +361,22 @@ def _make_comm_mix_fn(spec: GossipSpec, backend: str, *, comm):
             mixed = gossip_mix_flat(w, x_hat, interpret=interpret)
             return mixed.astype(c_sel.dtype), ef
 
+        def sparse_matmul(w, v, col_active):
+            return gossip_mix_sparse(
+                w, v, col_active, interpret=interpret
+            ).astype(v.dtype)
+
+        def sparse_dequant(w, enc, mask):
+            # W·(M⊙Ĉ) straight off the encoded payload: the fused masked
+            # dequantize+mix kernel, cropped to the mask's logical width
+            return gossip_mix_encoded_masked(
+                w, enc, mask, qblock=comm.block, x_out=mask.shape[-1],
+                out_dtype=jnp.float32, interpret=interpret,
+            )
+
         mix_comm.comm_aware = True
+        mix_comm.sparse_matmul = sparse_matmul
+        mix_comm.sparse_dequant = sparse_dequant
         return mix_comm
 
     raise ValueError(

@@ -1,0 +1,152 @@
+"""DisPFL-style decentralized sparse training on the packed plane.
+
+DisPFL (Dai et al., 2022) personalizes *support*: each client trains a
+sparse subnetwork under a fixed parameter budget (``density``), and a
+RigL-style update (Evci et al., 2020) periodically drops the
+smallest-magnitude active weights and regrows the same number of dead
+coordinates where the *dense* gradient is largest. Composed with FedSPD,
+every client carries one binary mask over the packed X axis, applied to
+whichever cluster model it trains this round.
+
+Everything here is traced and shape-static so the mask stream rides the
+round carry unchanged under both engines (Python loop and
+``scan_rounds=True``):
+
+- counts are static Python ints derived from (density, prune_rate, X) —
+  ``k_active`` ones per client row, always, so density is preserved
+  EXACTLY by construction, not in expectation;
+- prune keeps the top ``k_active - n_prune`` of ``|w|`` on the active
+  support; regrow takes the top ``n_prune`` scores restricted to the
+  coordinates inactive BEFORE the update, which makes the regrown support
+  disjoint from the pruned support within one update by construction;
+- the update is gated with ``jnp.where`` on ``round % update_every`` so
+  the scan body stays uniform (1 compile / 1 dispatch), and its
+  randomness is key-derived via ``fold_in(key, round)`` so loop and scan
+  engines see the identical mask stream.
+
+``density >= 1.0`` disables the subsystem statically (the
+``make_channel -> None`` idiom): callers fall back to the dense code
+paths, which is what makes density=1.0 parity bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_REGROW_MODES = ("rigl", "random")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseConfig:
+    """Static sparse-training policy (hashable: jit-cache key material).
+
+    density       fraction of the packed X axis each client keeps active,
+                  in (0, 1]; 1.0 means dense (subsystem off).
+    prune_rate    fraction of the ACTIVE set pruned (and regrown) per
+                  mask update, in [0, 1).
+    regrow        "rigl" regrows where |dense grad| is largest;
+                  "random" regrows uniformly at random.
+    update_every  rounds between mask updates (the mask is frozen in
+                  between, as in DisPFL's infrequent-adjustment regime).
+    """
+
+    density: float = 1.0
+    prune_rate: float = 0.2
+    regrow: str = "rigl"
+    update_every: int = 10
+
+    def __post_init__(self):
+        if not 0.0 < float(self.density) <= 1.0:
+            raise ValueError(
+                f"density must be in (0, 1], got {self.density}")
+        if not 0.0 <= float(self.prune_rate) < 1.0:
+            raise ValueError(
+                f"prune_rate must be in [0, 1), got {self.prune_rate}")
+        if self.regrow not in _REGROW_MODES:
+            raise ValueError(
+                f"regrow must be one of {_REGROW_MODES}, got "
+                f"{self.regrow!r}")
+        if int(self.update_every) < 1:
+            raise ValueError(
+                f"update_every must be >= 1, got {self.update_every}")
+
+    @property
+    def enabled(self) -> bool:
+        """Static on/off switch — density 1.0 routes callers to the dense
+        code paths so dense-vs-sparse parity is bit-exact, not approximate."""
+        return float(self.density) < 1.0
+
+    def k_active(self, x: int) -> int:
+        """Active coordinates per client row (static)."""
+        return min(x, max(1, int(round(float(self.density) * x))))
+
+    def n_prune(self, x: int) -> int:
+        """Coordinates pruned (= regrown) per update (static). Capped by
+        the dead-coordinate count: regrow draws only from coordinates
+        inactive before the update."""
+        k = self.k_active(x)
+        return min(int(float(self.prune_rate) * k), x - k)
+
+
+def init_masks(key, n: int, x: int, cfg: SparseConfig) -> jnp.ndarray:
+    """(n, x) float32 {0,1} masks with EXACTLY ``k_active`` ones per row
+    (top-k of i.i.d. uniform scores — exact counts, no tie hazard)."""
+    k = cfg.k_active(x)
+    if k >= x:
+        return jnp.ones((n, x), jnp.float32)
+    scores = jax.random.uniform(key, (n, x))
+    _, idx = jax.lax.top_k(scores, k)
+    rows = jnp.arange(n)[:, None]
+    return jnp.zeros((n, x), jnp.float32).at[rows, idx].set(1.0)
+
+
+def rigl_update(mask: jnp.ndarray, weights: jnp.ndarray,
+                grads: jnp.ndarray, key, cfg: SparseConfig) -> jnp.ndarray:
+    """One unconditional RigL prune/regrow pass over (n, x) rows.
+
+    Keeps the ``k_active - n_prune`` largest-|w| active coordinates, then
+    regrows ``n_prune`` coordinates chosen from the pre-update INACTIVE
+    set (top |dense grad| for "rigl", uniform scores for "random"). The
+    kept and regrown supports are disjoint by construction, so the result
+    has exactly ``k_active`` ones per row — density is invariant."""
+    n, x = mask.shape
+    n_prune = cfg.n_prune(x)
+    if n_prune == 0:
+        return mask
+    n_keep = cfg.k_active(x) - n_prune
+    neg = jnp.asarray(-jnp.inf, jnp.float32)
+    active = mask > 0
+    rows = jnp.arange(n)[:, None]
+
+    keep_scores = jnp.where(active, jnp.abs(weights.astype(jnp.float32)), neg)
+    _, keep_idx = jax.lax.top_k(keep_scores, n_keep)
+    kept = jnp.zeros((n, x), jnp.float32).at[rows, keep_idx].set(1.0)
+
+    if cfg.regrow == "rigl":
+        grow_scores = jnp.abs(grads.astype(jnp.float32))
+    else:
+        grow_scores = jax.random.uniform(key, (n, x))
+    grow_scores = jnp.where(active, neg, grow_scores)
+    _, grow_idx = jax.lax.top_k(grow_scores, n_prune)
+    grown = jnp.zeros((n, x), jnp.float32).at[rows, grow_idx].set(1.0)
+    return kept + grown
+
+
+def maybe_update_mask(mask, weights, grads, key, rnd,
+                      cfg: SparseConfig) -> jnp.ndarray:
+    """``jnp.where``-gated RigL step: the scan body stays uniform, and the
+    mask changes only when ``rnd % update_every == 0`` (and never at round
+    0 — the init masks hold for the first window)."""
+    new = rigl_update(mask, weights, grads, key, cfg)
+    fire = jnp.logical_and(rnd % cfg.update_every == 0, rnd > 0)
+    return jnp.where(fire, new, mask)
+
+
+def column_activity(mask: jnp.ndarray) -> jnp.ndarray:
+    """(..., n, x) masks -> (..., x) float {0,1}: a packed column is live
+    iff ANY client keeps it. This is the skip granularity of the sparse
+    Pallas mix — a 128-aligned block whose every column is dead for every
+    client is skipped whole in the W·C pass."""
+    return (jnp.sum(mask, axis=-2) > 0).astype(jnp.float32)

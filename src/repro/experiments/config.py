@@ -40,6 +40,22 @@ def _normalize_comm(options: dict) -> None:
     options.setdefault("param_plane", True)
 
 
+def _normalize_sparse(options: dict) -> None:
+    """Sparse masks live on the packed X axis, so an ENABLED
+    ``SparseConfig`` (density < 1) implies ``param_plane=True`` — same
+    contract (and same loud failure) as a compressing codec."""
+    sparse = options.get("sparse")
+    if sparse is None or not sparse.enabled:
+        return
+    if options.get("param_plane") is False:
+        raise ValueError(
+            f"sparse training (density={sparse.density}) requires the "
+            "packed parameter plane, but param_plane=False was requested "
+            "— drop one of the two"
+        )
+    options.setdefault("param_plane", True)
+
+
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
     """Everything about HOW a run executes (the what — method, data, exp,
@@ -69,6 +85,11 @@ class RunConfig:
                     gathered into a compact plane each round; inactive
                     clients' rows are carried untouched and cost zero wire
                     bytes (FedSPD on the packed plane, dense wiring)
+    sparse          core/sparse.SparseConfig: DisPFL-style per-client
+                    binary masks over the packed X axis with a traced RigL
+                    prune/regrow update riding the round carry (implies
+                    param_plane when density < 1; see README "Sparse
+                    training")
     telemetry       telemetry.TelemetryConfig: collect per-round traced
                     metric streams (bytes, cluster-weight entropy/drift,
                     consensus residual, effective degree, spectral gap,
@@ -89,6 +110,7 @@ class RunConfig:
     donate: bool = True
     scan_rounds: bool = False
     cohort_size: Optional[int] = None
+    sparse: Any = None                # core/sparse.SparseConfig
     telemetry: Any = None             # telemetry.TelemetryConfig
     options: dict = dataclasses.field(default_factory=dict)
 
@@ -104,7 +126,10 @@ class RunConfig:
             options.setdefault("param_plane", self.param_plane)
         if self.comm is not None:
             options.setdefault("comm", self.comm)
+        if self.sparse is not None:
+            options.setdefault("sparse", self.sparse)
         if not self.donate:
             options.setdefault("donate", False)
         _normalize_comm(options)
+        _normalize_sparse(options)
         return options

@@ -71,6 +71,7 @@ from repro.core import (
 )
 from repro.core.gossip import make_mix_fn
 from repro.core.packing import make_pack_spec, pack, pack_state, unpack
+from repro.core.sparse import init_masks
 from repro.graphs.topology import Graph, complete
 from repro.models.smallnets import make_classifier
 from repro.utils.pytree import tree_bytes, tree_weighted_sum
@@ -362,6 +363,27 @@ class FedSPDMethod(Method):
             cos_align_threshold=ctx.opt("cos_align_threshold", -1.0),
         )
 
+    def _sparse(self, ctx: ExperimentContext):
+        """The run's SparseConfig (core/sparse) when one is configured.
+        Masks live on the packed X axis, so an enabled config requires the
+        plane; the ppermute backend ships raw plane rows and is out."""
+        sp = ctx.opt("sparse")
+        if sp is None:
+            return None
+        if self._pack_spec(ctx) is None:
+            raise ValueError(
+                f"sparse training (density={sp.density}) runs on the "
+                "packed parameter plane; set RunConfig(param_plane=True) "
+                "(run_method enables it automatically when sparse is set)"
+            )
+        if sp.enabled and ctx.opt("gossip_backend", "reference") == "ppermute":
+            raise ValueError(
+                "sparse training is not available on the ppermute backend "
+                "— the collective schedule ships raw plane rows, not "
+                "masked payloads"
+            )
+        return sp
+
     def init(self, ctx, key, train=None):
         state = seeded_init(key, ctx.model_init, self._fcfg(ctx), ctx.loss_fn,
                             self._train(ctx, train))
@@ -370,6 +392,14 @@ class FedSPDMethod(Method):
         # pytree form only for eval/checkpoint)
         if ps is not None:
             state = self._with_ef(ctx, pack_state(state, ps))
+        sp = self._sparse(ctx)
+        if sp is not None:
+            # masks are carried even at density=1.0 (all-ones, no key
+            # draw) so the state structure is uniform across densities
+            state = state._replace(mask=init_masks(
+                jax.random.fold_in(key, 0x3A5C),
+                ctx.n_clients, ps.size, sp,
+            ))
         return state
 
     def make_step(self, ctx):
@@ -382,7 +412,8 @@ class FedSPDMethod(Method):
         )
         step = make_round_step(ctx.loss_fn, ctx.pel_fn, spec, self._fcfg(ctx),
                                mix_fn=mix_fn, pack_spec=ps,
-                               model_bytes=ctx.model_bytes, comm=comm)
+                               model_bytes=ctx.model_bytes, comm=comm,
+                               sparse=self._sparse(ctx))
 
         def wrapped(state, train, key, lr, adj=None):
             # FedSPD's round step carries its own key and lr schedule in
@@ -420,6 +451,7 @@ class FedSPDMethod(Method):
         return FedSPDState(
             centers=1, u=0, z=0, round=None, key=None, comm_bytes=None,
             ef=None if state.ef is None else 0,
+            mask=None if state.mask is None else 0,
         )
 
     def personalize(self, ctx, state, key, train=None):

@@ -182,8 +182,19 @@ def _wire_bytes(ctx: ExperimentContext, logical: float) -> float:
     """Physical bytes for this run's codec: the per-message compression
     ratio is static (comm/codecs.Channel.wire_model_bytes over the
     logical model bytes), so scaling the logical count is EXACT — every
-    transmitted message is one model-sized plane slice."""
+    transmitted message is one model-sized plane slice.
+
+    Sparse runs (core/sparse; density < 1) ship the mask-then-encode
+    format instead: nnz payload + support bitmap per message
+    (comm/codecs.sparse_wire_model_bytes), also static given density."""
     cfg = ctx.opt("comm")
+    sp = ctx.opt("sparse")
+    if sp is not None and sp.enabled:
+        from repro.comm.codecs import sparse_wire_model_bytes
+
+        x = ctx.options["_pack_spec"].size
+        per_msg = sparse_wire_model_bytes(cfg, x, sp.k_active(x))
+        return logical * (per_msg / float(ctx.model_bytes))
     if cfg is None or cfg.codec == "fp32":
         return logical
     ch = ctx.options.get("_channel")
@@ -411,12 +422,14 @@ def _drive(entry: str, method: str, data, exp: PaperExpConfig, graph,
                              == (ctx.n_clusters, ctx.n_clients))
             except Exception:
                 has_plane = False
+        has_mask = (hasattr(states, "mask")
+                    and getattr(states, "mask", None) is not None)
         collect = make_collector(
             telem, batch_shape=bshape, n_clusters=ctx.n_clusters,
             n_clients=ctx.n_clients, wire_ratio=_wire_bytes(ctx, 1.0),
             per_round_bytes=(None if tracked
                              else comm_model0.per_round_bytes),
-            has_u=has_u, has_plane=has_plane,
+            has_u=has_u, has_plane=has_plane, has_mask=has_mask,
         )
 
     # ---- normalized closures shared by both engines ------------------------

@@ -136,6 +136,68 @@ def gossip_mix_tree(w: jnp.ndarray, c_tree, *, x_block: int | None = None,
     return jax.tree.map(one, c_tree)
 
 
+def _mix_sparse_kernel(w_ref, c_ref, a_ref, o_ref):
+    """W·C on one slab, predicated on the slab's activity bit: a slab
+    whose every column is dead for every client skips the MXU matmul (and
+    the C read on real hardware) and writes zeros — the exact masked-mix
+    result for an all-dead slab."""
+    live = a_ref[0, 0] > 0
+
+    @pl.when(live)
+    def _mix():
+        w = w_ref[...].astype(jnp.float32)       # (N, N)
+        c = c_ref[...].astype(jnp.float32)       # (N, x_block)
+        o_ref[...] = jax.lax.dot_general(
+            w, c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        o_ref[...] = jnp.zeros_like(o_ref[...])
+
+
+def gossip_mix_sparse(
+    w: jnp.ndarray,           # (N, N) mixing weights
+    c: jnp.ndarray,           # (N, X) plane slab, ZERO on dead columns
+    col_active: jnp.ndarray,  # (X,) float {0,1}: any client keeps column
+    *,
+    x_block: int | None = None,  # default: 2048 compiled, whole-X interpret
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Mask-aware W·C for the sparse (DisPFL) exchange: the grid still
+    tiles the full X axis (shapes stay static), but each slab carries a
+    traced one-element activity flag — computed here as "any active column
+    in the slab" from the column-activity vector — and ``pl.when``
+    predication skips the matmul for all-dead 128-aligned slabs, writing
+    exact zeros instead. Callers must pass ``c`` already projected onto
+    the active support (masked values or the mask itself), which is what
+    makes the skip exact rather than approximate."""
+    n, x = c.shape
+    if col_active.shape != (x,):
+        raise ValueError(
+            f"column activity {col_active.shape} does not match plane "
+            f"width {x}"
+        )
+    x_block = _plan_blocks(x, x_block, interpret)
+    k = -(-x // x_block)
+    act = jnp.pad(col_active.astype(jnp.float32), (0, k * x_block - x))
+    slab_act = (jnp.sum(act.reshape(k, x_block), axis=1) > 0)
+    slab_act = slab_act.astype(jnp.float32).reshape(k, 1)
+    return pl.pallas_call(
+        _mix_sparse_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, x_block), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, x_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, x), c.dtype),
+        interpret=interpret,
+    )(w, c, slab_act)
+
+
 def _mix_dequant_kernel(w_ref, q_ref, sc_ref, o_ref, *, qblock: int):
     """Fused dequantize + mix on one (N, x_block) slab of the QUANTIZED
     plane: o = W · (q ⊙ repeat(scale, qblock)). The mix reads int8 values
@@ -199,6 +261,84 @@ def gossip_mix_dequant(
         out_shape=jax.ShapeDtypeStruct((m, xp), jnp.float32),
         interpret=interpret,
     )(w, q, scales)
+
+
+def _mix_dequant_masked_kernel(w_ref, q_ref, sc_ref, m_ref, a_ref, o_ref,
+                               *, qblock: int):
+    """Fused dequantize + sender-mask + mix on one slab, predicated on the
+    slab activity bit: o = W · (q ⊙ repeat(scale) ⊙ M). All-dead slabs
+    write exact zeros without touching the payload."""
+    live = a_ref[0, 0] > 0
+
+    @pl.when(live)
+    def _mix():
+        w = w_ref[...].astype(jnp.float32)        # (M, N)
+        q = q_ref[...].astype(jnp.float32)        # (N, x_block)
+        sc = sc_ref[...].astype(jnp.float32)      # (N, x_block // qblock)
+        m = m_ref[...].astype(jnp.float32)        # (N, x_block)
+        c = q * jnp.repeat(sc, qblock, axis=1) * m
+        o_ref[...] = jax.lax.dot_general(
+            w, c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        o_ref[...] = jnp.zeros_like(o_ref[...])
+
+
+def gossip_mix_dequant_masked(
+    w: jnp.ndarray,       # (M, N) mixing weights
+    q: jnp.ndarray,       # (N, Xp) int8 quantized plane (comm/codecs)
+    scales: jnp.ndarray,  # (N, Xp // qblock) fp32 per-block scales
+    mask: jnp.ndarray,    # (N, X) float {0,1} per-sender masks, X <= Xp
+    *,
+    qblock: int,                 # quantization block width along X
+    x_block: int | None = None,  # default: 2048 compiled, whole-X interpret
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Masked variant of ``gossip_mix_dequant`` for the sparse exchange's
+    numerator W·(M⊙Ĉ): the sender masks are applied IN the fused
+    dequantize+mix pass (the fp32 decode still never exists in HBM), and
+    slabs that are all-dead across every sender are skipped via the same
+    traced activity bits as ``gossip_mix_sparse``. The mask is zero-padded
+    to the quantized width; the caller crops the fp32 result to X."""
+    n, xp = q.shape
+    m_rows = w.shape[0]
+    if w.shape[1] != n:
+        raise ValueError(f"weights {w.shape} do not match plane rows {n}")
+    if xp % qblock != 0 or scales.shape != (n, xp // qblock):
+        raise ValueError(
+            f"quantized plane {q.shape} / scales {scales.shape} do not "
+            f"tile with qblock={qblock}"
+        )
+    if mask.ndim != 2 or mask.shape[0] != n or mask.shape[1] > xp:
+        raise ValueError(
+            f"mask {mask.shape} does not match quantized plane {q.shape}"
+        )
+    mask = jnp.pad(mask.astype(jnp.float32),
+                   ((0, 0), (0, xp - mask.shape[1])))
+    x_block = _plan_blocks(xp, x_block, interpret)
+    x_block = min(-(-x_block // qblock) * qblock, xp)
+    k = -(-xp // x_block)
+    col = (jnp.sum(mask, axis=0) > 0).astype(jnp.float32)
+    col = jnp.pad(col, (0, k * x_block - xp))
+    slab_act = (jnp.sum(col.reshape(k, x_block), axis=1) > 0)
+    slab_act = slab_act.astype(jnp.float32).reshape(k, 1)
+    return pl.pallas_call(
+        functools.partial(_mix_dequant_masked_kernel, qblock=qblock),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((m_rows, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, x_block), lambda i: (0, i)),
+            pl.BlockSpec((n, x_block // qblock), lambda i: (0, i)),
+            pl.BlockSpec((n, x_block), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m_rows, x_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m_rows, xp), jnp.float32),
+        interpret=interpret,
+    )(w, q, scales, mask, slab_act)
 
 
 def _mixture_dequant4_kernel(u_ref, p_ref, sc_ref, o_ref, *, qblock: int):
@@ -273,6 +413,17 @@ def gossip_mix_encoded(w: jnp.ndarray, enc: dict, *, qblock: int,
     the logical width and cast to the plane dtype."""
     mixed = gossip_mix_dequant(w, enc["q"], enc["scale"], qblock=qblock,
                                interpret=interpret)
+    return mixed[..., :x_out].astype(out_dtype)
+
+
+def gossip_mix_encoded_masked(w: jnp.ndarray, enc: dict, mask: jnp.ndarray,
+                              *, qblock: int, x_out: int, out_dtype,
+                              interpret: bool = True):
+    """Sparse-exchange companion of ``gossip_mix_encoded``: the numerator
+    W·(M⊙Ĉ) of the support-renormalized mix as one masked
+    dequantize+mix pass over the encoded payload."""
+    mixed = gossip_mix_dequant_masked(w, enc["q"], enc["scale"], mask,
+                                      qblock=qblock, interpret=interpret)
     return mixed[..., :x_out].astype(out_dtype)
 
 

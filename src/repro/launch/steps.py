@@ -47,6 +47,7 @@ def make_fedspd_train_step(
     mesh=None,
     donate: bool = False,
     comm=None,
+    sparse=None,
 ):
     """One FedSPD round over (N_clients, per_client_batch, ...) batches.
 
@@ -63,7 +64,16 @@ def make_fedspd_train_step(
     updated in place round over round (no per-round copy of the largest
     buffer in the program). ``comm`` (comm/codecs.CommConfig) runs the
     exchange through a wire codec — on the mesh path the ppermute
-    schedule ships the ENCODED payload over the collective edges."""
+    schedule ships the ENCODED payload over the collective edges.
+    ``sparse`` (core/sparse.SparseConfig) runs the DisPFL masked round —
+    requires the packed plane, incompatible with the mesh/ppermute path
+    (the collective schedule ships raw plane rows)."""
+    if sparse is not None and sparse.enabled and mesh is not None:
+        raise ValueError(
+            "sparse training is not available on the mesh/ppermute path — "
+            "the collective schedule ships raw plane rows, not masked "
+            "payloads"
+        )
     model_bytes = None
     if getattr(bundle, "init", None) is not None:
         from repro.utils.pytree import tree_bytes
@@ -83,7 +93,7 @@ def make_fedspd_train_step(
     step = make_round_step(
         bundle.loss, bundle.per_example_loss, gossip, fcfg, mix_fn=mix_fn,
         pack_spec=pack_spec, model_bytes=model_bytes, donate=donate,
-        comm=comm,
+        comm=comm, sparse=sparse,
     )
 
     def train_step(state, batch, adj=None):

@@ -46,6 +46,7 @@ from repro.configs.base import ARCH_ALIASES, get_config, get_smoke_config
 from repro.core.fedspd import FedSPDConfig, init_state, personalize
 from repro.core.gossip import GossipSpec, make_mix_fn
 from repro.core.packing import make_pack_spec, pack_state
+from repro.core.sparse import SparseConfig, init_masks
 from repro.data.synthetic import make_mixture_tokens
 from repro.experiments.config import RunConfig
 from repro.experiments.heterogeneity import (
@@ -108,6 +109,16 @@ def main(argv=None):
                     help="carry per-client error-feedback residuals")
     ap.add_argument("--codec-block", type=int, default=256,
                     help="quantization-scale block width along X")
+    ap.add_argument("--sparse-density", type=float, default=1.0,
+                    help="DisPFL sparse training: active fraction of each "
+                         "client's parameters (1.0 = dense, off)")
+    ap.add_argument("--prune-rate", type=float, default=0.2,
+                    help="fraction of active coords cycled per mask update")
+    ap.add_argument("--regrow", default="rigl", choices=["rigl", "random"],
+                    help="regrow criterion: dense-gradient magnitude (RigL) "
+                         "or random")
+    ap.add_argument("--mask-update-every", type=int, default=10,
+                    help="rounds between RigL prune/regrow mask updates")
     ap.add_argument("--slow-fraction", type=float, default=0.0,
                     help="fraction of clients running at 1/slow-factor "
                          "speed (client heterogeneity)")
@@ -149,10 +160,24 @@ def main(argv=None):
     # entry points; resolve_options() enforces codec/plane compatibility
     comm = CommConfig(codec=args.codec, block=args.codec_block,
                       error_feedback=args.error_feedback)
+    sparse = None
+    if args.sparse_density < 1.0:
+        try:
+            sparse = SparseConfig(
+                density=args.sparse_density, prune_rate=args.prune_rate,
+                regrow=args.regrow, update_every=args.mask_update_every,
+            )
+        except ValueError as e:
+            raise SystemExit(str(e)) from None
+        if args.mesh != "none":
+            raise SystemExit(
+                "--sparse-density < 1 is not available with --mesh (the "
+                "ppermute schedule ships raw plane rows)"
+            )
     run_cfg = RunConfig(
         gossip_mode=args.gossip_mode, gossip_backend=args.gossip_backend,
         param_plane=args.param_plane, comm=comm, eval_every=args.eval_every,
-        donate=args.donate, scan_rounds=args.scan_rounds,
+        donate=args.donate, scan_rounds=args.scan_rounds, sparse=sparse,
     )
     try:
         opts = run_cfg.resolve_options()
@@ -194,6 +219,12 @@ def main(argv=None):
         )
         state = pack_state(state, pack_spec)
 
+    # DisPFL masks live on the plane rows; key derivation matches the
+    # registry entry points so CLI and run_method agree bit for bit
+    if sparse is not None:
+        state = state._replace(mask=init_masks(
+            jax.random.fold_in(key, 0x3A5C), n, pack_spec.size, sparse))
+
     # wire codec: the exchange ships encoded payloads; wire_ratio scales
     # the logical comm counter to physical bytes (static per model)
     wire_ratio = 1.0
@@ -203,6 +234,12 @@ def main(argv=None):
         wire_ratio = channel.wire_ratio(pack_spec.model_bytes)
         if channel.has_ef:
             state = state._replace(ef=channel.init_residual((n,)))
+    if sparse is not None and sparse.enabled:
+        from repro.comm.codecs import sparse_wire_model_bytes
+
+        x = pack_spec.size
+        wire_ratio = (sparse_wire_model_bytes(comm, x, sparse.k_active(x))
+                      / float(pack_spec.model_bytes))
 
     mesh = None
     mix_fn = None
@@ -250,6 +287,7 @@ def main(argv=None):
         het_axes = FedSPDState(
             centers=1, u=0, z=0, round=None, key=None, comm_bytes=None,
             ef=None if state.ef is None else 0,
+            mask=None if state.mask is None else 0,
         )
         het_key = jax.random.fold_in(jax.random.PRNGKey(args.seed), 0x51AC)
         het_speeds = jnp.asarray(het.resolve_speeds(n))
@@ -264,7 +302,7 @@ def main(argv=None):
                     and het is None)
     step = make_fedspd_train_step(
         bundle, gossip, fcfg, mix_fn=mix_fn, pack_spec=pack_spec,
-        mesh=mesh, donate=inner_donate, comm=comm,
+        mesh=mesh, donate=inner_donate, comm=comm, sparse=sparse,
     )
     if het is not None:
         def het_step(st, batch, r, hc):

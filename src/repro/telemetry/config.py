@@ -21,10 +21,12 @@ Streams (all per round; shapes per seed):
   spectral_gap    ()   1 − ρ(W) proxy of the Metropolis mixing matrix
   stale_hist      (B,) staleness histogram (B = ``staleness_bins``)
   n_inactive      ()   stragglers + offline clients this round
+  density         ()   mean active fraction of the sparse masks (DisPFL)
+  mask_churn      ()   fraction of mask bits flipped this round
 
 Streams whose inputs a run lacks (no ``u`` on the state, no plane-shaped
-centers) are emitted as NaN constants of the right static shape, so the
-payload structure is a function of the config alone.
+centers, no sparse masks) are emitted as NaN constants of the right
+static shape, so the payload structure is a function of the config alone.
 """
 from __future__ import annotations
 

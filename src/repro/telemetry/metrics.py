@@ -23,7 +23,7 @@ from repro.telemetry.config import TelemetryConfig
 # the stream names in export order (the JSONL schema table in README)
 STREAMS = ("logical_bytes", "wire_bytes", "u_entropy", "u_drift",
            "consensus", "degree", "spectral_gap", "stale_hist",
-           "n_inactive")
+           "n_inactive", "density", "mask_churn")
 
 
 def mixture_entropy(u: jnp.ndarray) -> jnp.ndarray:
@@ -101,6 +101,20 @@ def inactive_count(weights: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum((weights <= 0.0).astype(jnp.float32), axis=-1)
 
 
+def mask_density(mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean active fraction of the (..., N, X) sparse masks — constant by
+    construction under the exact-count RigL update (core/sparse), so a
+    drifting stream IS the regression signal."""
+    return jnp.mean(mask.astype(jnp.float32), axis=(-2, -1))
+
+
+def mask_churn(mask_old: jnp.ndarray, mask_new: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of coordinates whose mask bit flipped this round — 0 on
+    frozen rounds, 2·prune_rate·density at a full RigL update."""
+    d = jnp.abs(mask_new.astype(jnp.float32) - mask_old.astype(jnp.float32))
+    return jnp.mean(d, axis=(-2, -1))
+
+
 def flatten_centers(centers, batch_ndim: int = 0):
     """Ravel a pytree of (S, N, ...) center leaves (with ``batch_ndim``
     leading seed axes) into one (..., S, N, X) plane — already-packed
@@ -121,7 +135,8 @@ def flatten_centers(centers, batch_ndim: int = 0):
 def make_collector(cfg: TelemetryConfig, *, batch_shape: tuple = (),
                    n_clusters: int, n_clients: int, wire_ratio: float = 1.0,
                    per_round_bytes: float | None = None,
-                   has_u: bool = True, has_plane: bool = True):
+                   has_u: bool = True, has_plane: bool = True,
+                   has_mask: bool = False):
     """Build the per-round collection closure the driver jits into the
     round program.
 
@@ -174,6 +189,12 @@ def make_collector(cfg: TelemetryConfig, *, batch_shape: tuple = (),
         out["n_inactive"] = full(
             inactive_count(weights) if weights is not None else 0.0
         )
+        if has_mask:
+            out["density"] = full(mask_density(new.mask))
+            out["mask_churn"] = full(mask_churn(old.mask, new.mask))
+        else:
+            out["density"] = full(nan)
+            out["mask_churn"] = full(nan)
         return out
 
     return collect

@@ -1,0 +1,387 @@
+"""Decentralized sparse training (DisPFL) on the packed plane.
+
+Covers the sparse subsystem end to end: SparseConfig statics and the
+exact-count RigL update (core/sparse), the mask-aware Pallas kernels
+(kernels/gossip_mix), sparse wire-byte accounting (comm/codecs + the
+experiment driver), density=1.0 bit-exact dense parity, the full
+composition matrix sparse × cohort × ClientSystemModel × int8+EF across
+both round engines (bit-identical, one compile / one dispatch under
+scan), the bit-untouched inactive-row contract for masks, and the
+telemetry density / mask-churn streams.
+"""
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, make_channel
+from repro.comm.codecs import sparse_wire_model_bytes
+from repro.configs.paper_cnn import PaperExpConfig
+from repro.core.sparse import (
+    SparseConfig,
+    column_activity,
+    init_masks,
+    maybe_update_mask,
+)
+from repro.data.synthetic import make_mixture_classification
+from repro.experiments import (
+    ClientSystemModel,
+    RunConfig,
+    Scenario,
+    run_method,
+)
+
+SP = SparseConfig(density=0.25, prune_rate=0.3, update_every=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    exp = PaperExpConfig(
+        n_clients=8, n_per_client=32, rounds=5, tau=1, batch=16,
+        avg_degree=4.0, model="mlp", dim=16, n_classes=4,
+    )
+    data = make_mixture_classification(
+        n_clients=8, n_clusters=2, n_per_client=32, dim=16, n_classes=4,
+        seed=0,
+    )
+    return exp, data
+
+
+def _run(data, exp, **cfg_kw):
+    cfg_kw.setdefault("eval_every", 10**9)
+    cfg_kw.setdefault("param_plane", True)
+    opts = dict(cfg_kw.pop("options", {}))
+    opts.setdefault("keep_state", True)
+    return run_method("fedspd", data, exp, seed=0,
+                      cfg=RunConfig(options=opts, **cfg_kw))
+
+
+# ---------------------------------------------------------------- statics
+
+
+def test_sparse_config_validation():
+    for bad in (dict(density=0.0), dict(density=1.5),
+                dict(prune_rate=1.0), dict(prune_rate=-0.1),
+                dict(regrow="magnitude"), dict(update_every=0)):
+        with pytest.raises(ValueError):
+            SparseConfig(**bad)
+    assert not SparseConfig(density=1.0).enabled
+    assert SparseConfig(density=0.5).enabled
+
+
+def test_static_counts():
+    cfg = SparseConfig(density=0.2, prune_rate=0.5)
+    assert cfg.k_active(100) == 20
+    assert cfg.n_prune(100) == 10
+    # never more active than X, never fewer than 1, prune capped by the
+    # dead-coordinate pool
+    assert SparseConfig(density=0.001).k_active(10) == 1
+    assert SparseConfig(density=0.9, prune_rate=0.9).n_prune(10) == 1
+
+
+def test_init_masks_exact_counts():
+    cfg = SparseConfig(density=0.3)
+    m = np.asarray(init_masks(jax.random.PRNGKey(0), 5, 64, cfg))
+    assert m.shape == (5, 64)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(m.sum(-1), cfg.k_active(64))
+
+
+def test_maybe_update_mask_gates_on_round():
+    cfg = SparseConfig(density=0.25, prune_rate=0.4, update_every=3)
+    key = jax.random.PRNGKey(1)
+    m = init_masks(key, 4, 40, cfg)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (4, 40)) * m
+    g = jax.random.normal(jax.random.fold_in(key, 2), (4, 40))
+    frozen = maybe_update_mask(m, w, g, key, jnp.int32(0), cfg)
+    np.testing.assert_array_equal(np.asarray(frozen), np.asarray(m))
+    frozen = maybe_update_mask(m, w, g, key, jnp.int32(2), cfg)
+    np.testing.assert_array_equal(np.asarray(frozen), np.asarray(m))
+    fired = maybe_update_mask(m, w, g, key, jnp.int32(3), cfg)
+    assert (np.asarray(fired) != np.asarray(m)).any()
+    np.testing.assert_array_equal(np.asarray(fired).sum(-1),
+                                  cfg.k_active(40))
+
+
+def test_column_activity():
+    m = jnp.asarray([[1.0, 0.0, 0.0], [0.0, 0.0, 1.0]])
+    np.testing.assert_array_equal(np.asarray(column_activity(m)),
+                                  [1.0, 0.0, 1.0])
+
+
+# ---------------------------------------------------------------- kernels
+
+
+def test_gossip_mix_sparse_matches_einsum():
+    """The slab-skipping masked W·C == the dense einsum on masked input,
+    exactly (interpret mode), including fully dead 128-aligned slabs and
+    a padded tail."""
+    from repro.kernels.gossip_mix import gossip_mix_sparse
+
+    n, x = 6, 300
+    key = jax.random.PRNGKey(0)
+    w = jax.nn.softmax(jax.random.normal(key, (n, n)), axis=1)
+    mask = np.array(
+        init_masks(jax.random.fold_in(key, 1), n, x,
+                   SparseConfig(density=0.3)))
+    mask[:, 128:256] = 0.0  # one whole slab dead across every client
+    mask = jnp.asarray(mask)
+    c = jax.random.normal(jax.random.fold_in(key, 2), (n, x)) * mask
+    ref = jnp.einsum("ij,jx->ix", w, c,
+                     preferred_element_type=jnp.float32)
+    for x_block in (None, 128):
+        got = gossip_mix_sparse(w, c, column_activity(mask),
+                                x_block=x_block, interpret=True)
+        np.testing.assert_allclose(np.asarray(got)[:, :x],
+                                   np.asarray(ref), atol=1e-5)
+        # the dead slab comes out as exact zeros, not roundoff
+        assert (np.asarray(got)[:, 128:256] == 0.0).all()
+
+
+def test_gossip_mix_encoded_masked_matches_reference():
+    """Fused masked dequantize+mix == W @ (M ⊙ decode(enc)) exactly in
+    interpret mode (same fp32 contraction order)."""
+    from repro.kernels.gossip_mix import gossip_mix_encoded_masked
+
+    n, x = 5, 203
+    ch = make_channel(CommConfig(codec="int8", block=32), x)
+    key = jax.random.PRNGKey(3)
+    mask = init_masks(jax.random.fold_in(key, 1), n, x,
+                      SparseConfig(density=0.4))
+    c = jax.random.normal(key, (n, x)) * mask
+    enc = ch.encode(c, jax.random.fold_in(key, 2))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3),
+                                         (n, n)), axis=1)
+    ref = w @ (mask * ch.decode(enc))
+    got = gossip_mix_encoded_masked(w, enc, mask, qblock=32, x_out=x,
+                                    out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+# ------------------------------------------------------------- wire bytes
+
+
+@pytest.mark.parametrize("codec", ["fp32", "int8", "int4", "topk"])
+def test_sparse_wire_bound(codec):
+    """Acceptance bound: for the density-scaling codecs the sparse
+    per-message wire cost is at most density · dense wire cost + the
+    support bitmap (sizes chosen so block counts divide exactly — zero
+    slack). topk ships explicit (value, index) pairs already, so its
+    sparse cost is instead bounded by its own dense cost."""
+    x, block, density = 2048, 256, 0.25
+    cfg = CommConfig(codec=codec, block=block, error_feedback=False)
+    k = SparseConfig(density=density).k_active(x)
+    sparse_b = sparse_wire_model_bytes(cfg, x, k)
+    bitmap = -(-x // 8)
+    if codec == "fp32":
+        dense_b = 4 * x
+    else:
+        dense_b = make_channel(cfg, x).wire_model_bytes
+    if codec == "topk":
+        assert sparse_b <= dense_b, (sparse_b, dense_b)
+    else:
+        assert sparse_b <= density * dense_b + bitmap, (sparse_b, dense_b)
+    assert sparse_b > 0
+
+
+def test_runner_sparse_wire_accounting(setup):
+    """The driver's wire accounting under sparse: physical bytes == the
+    logical counter scaled by (sparse per-message cost / dense model
+    bytes) — the nnz-payload + bitmap wire format, not the dense ratio."""
+    from repro.core.packing import make_pack_spec
+    from repro.models.smallnets import make_classifier
+
+    exp, data = setup
+    r = _run(data, exp, sparse=SP)
+
+    def model_init(k):
+        p, *_ = make_classifier("mlp", k, exp.dim, exp.n_classes)
+        return p
+
+    spec = make_pack_spec(jax.eval_shape(model_init, jax.random.PRNGKey(0)))
+    x = spec.size
+    per_msg = sparse_wire_model_bytes(CommConfig(codec="fp32"), x,
+                                      SP.k_active(x))
+    expect = float(r.comm_bytes) * per_msg / float(spec.model_bytes)
+    np.testing.assert_allclose(float(r.wire_bytes), expect, rtol=1e-6)
+    # and the physical bytes genuinely shrink vs the dense run
+    dense = _run(data, exp)
+    assert float(r.wire_bytes) < 0.3 * float(dense.wire_bytes)
+
+
+# ------------------------------------------------- parity and composition
+
+
+def test_density_one_is_bitexact_dense(setup):
+    """density=1.0 routes through the dense code paths (static bypass):
+    the run is BIT-identical to sparse=None, not merely close."""
+    exp, data = setup
+    a = _run(data, exp)
+    b = _run(data, exp, sparse=SparseConfig(density=1.0))
+    sa, sb = a.extras["state"], b.extras["state"]
+    assert bool(jnp.array_equal(sa.centers, sb.centers))
+    assert bool(jnp.array_equal(sa.u, sb.u))
+    assert sa.mask is None
+    assert bool(jnp.all(sb.mask == 1.0))
+
+
+def test_sparse_loop_scan_bit_identical(setup):
+    """The masked round is engine-invariant: Python-loop and scan-rolled
+    runs produce bit-identical centers, mixtures, and mask streams, and
+    the scan run stays one compile / one dispatch."""
+    exp, data = setup
+    a = _run(data, exp, sparse=SP)
+    b = _run(data, exp, sparse=SP, scan_rounds=True)
+    sa, sb = a.extras["state"], b.extras["state"]
+    for f in ("centers", "u", "mask"):
+        assert bool(jnp.array_equal(getattr(sa, f), getattr(sb, f))), f
+    assert b.extras["n_compiles"] == 1
+    assert b.extras["n_dispatches"] == 1
+    # masks hold exact per-row counts after live RigL updates
+    x = sa.mask.shape[-1]
+    np.testing.assert_array_equal(np.asarray(sa.mask.sum(-1)),
+                                  SP.k_active(x))
+
+
+@pytest.mark.robustness
+def test_sparse_full_composition_bit_identical(setup):
+    """The whole stack at once — sparse masks × cohort subsampling ×
+    ClientSystemModel (stragglers, availability, staleness decay) ×
+    int8+EF wire codec — bit-identical between the loop and scan engines,
+    with the scan engine still at one compile and one dispatch."""
+    exp, data = setup
+    het = ClientSystemModel(
+        slow_fraction=0.25, slow_factor=4.0, time_budget=2.0, jitter=0.3,
+        p_unavailable=0.1, staleness_gamma=0.9, seed=0,
+    )
+    base = dict(sparse=SP, cohort_size=6,
+                comm=CommConfig(codec="int8", error_feedback=True),
+                scenario=Scenario(system=het))
+    a = _run(data, exp, **base)
+    b = _run(data, exp, scan_rounds=True, **base)
+    sa, sb = a.extras["state"], b.extras["state"]
+    for f in ("centers", "u", "mask", "ef"):
+        assert bool(jnp.array_equal(getattr(sa, f), getattr(sb, f))), f
+    assert b.extras["n_compiles"] == 1
+    assert b.extras["n_dispatches"] == 1
+    x = sa.mask.shape[-1]
+    np.testing.assert_array_equal(np.asarray(sa.mask.sum(-1)),
+                                  SP.k_active(x))
+
+
+@pytest.mark.parametrize("comm", [None, CommConfig(codec="int8",
+                                                   error_feedback=True)])
+def test_sparse_backend_parity(setup, comm):
+    """The mask-aware Pallas kernels (slab-skipping matmul, masked fused
+    dequant) reproduce the reference masked exchange exactly."""
+    exp, data = setup
+    kw = dict(sparse=SP) if comm is None else dict(sparse=SP, comm=comm)
+    a = _run(data, exp, **kw)
+    b = _run(data, exp, gossip_backend="pallas", **kw)
+    sa, sb = a.extras["state"], b.extras["state"]
+    np.testing.assert_allclose(np.asarray(sa.centers),
+                               np.asarray(sb.centers), atol=1e-5)
+    assert bool(jnp.array_equal(sa.mask, sb.mask))
+
+
+def test_inactive_rows_keep_masks_bit_untouched():
+    """The heterogeneity restore contract extends to masks: an inactive
+    client's mask row comes through the round as the EXACT old bits (a
+    where-select, not a recompute)."""
+    from repro.core.fedspd import FedSPDState
+    from repro.experiments.heterogeneity import restore_inactive
+
+    key = jax.random.PRNGKey(0)
+    n, x = 4, 32
+    old_m = init_masks(key, n, x, SP)
+    new_m = init_masks(jax.random.fold_in(key, 1), n, x, SP)
+
+    def st(m):
+        return FedSPDState(
+            centers=jnp.zeros((2, n, x)), u=jnp.ones((n, 2)) / 2,
+            z=jnp.zeros((n,), jnp.int32), round=jnp.int32(0), key=key,
+            comm_bytes=jnp.float32(0), ef=None, mask=m,
+        )
+
+    axes = FedSPDState(centers=1, u=0, z=0, round=None, key=None,
+                       comm_bytes=None, ef=None, mask=0)
+    keep = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    out = restore_inactive(st(old_m), st(new_m), axes, keep > 0)
+    got = np.asarray(out.mask)
+    np.testing.assert_array_equal(got[1], np.asarray(old_m)[1])
+    np.testing.assert_array_equal(got[3], np.asarray(old_m)[3])
+    np.testing.assert_array_equal(got[0], np.asarray(new_m)[0])
+    np.testing.assert_array_equal(got[2], np.asarray(new_m)[2])
+
+
+def test_sparse_requires_packed_plane():
+    with pytest.raises(ValueError, match="packed"):
+        RunConfig(param_plane=False,
+                  sparse=SparseConfig(density=0.5)).resolve_options()
+
+
+def test_sparse_rejects_ppermute_backend(setup):
+    exp, data = setup
+    with pytest.raises((ValueError, SystemExit)):
+        _run(data, exp, sparse=SP, gossip_backend="ppermute")
+
+
+# -------------------------------------------------------------- telemetry
+
+
+def test_telemetry_density_and_churn_streams(setup):
+    """Sparse runs emit a constant density stream (the exact-count
+    invariant, observable) and a churn stream that is zero on frozen
+    rounds and positive exactly on RigL update rounds; dense runs emit
+    NaN for both."""
+    from repro.telemetry import TelemetryConfig
+
+    exp, data = setup
+    r = _run(data, exp, sparse=SP, telemetry=TelemetryConfig())
+    st = r.telemetry["streams"]
+    x = r.extras["state"].mask.shape[-1]
+    np.testing.assert_allclose(np.asarray(st["density"]),
+                               SP.k_active(x) / x, atol=1e-6)
+    churn = np.asarray(st["mask_churn"])
+    for rnd in range(exp.rounds):
+        fires = rnd % SP.update_every == 0 and rnd > 0
+        if fires:
+            assert churn[rnd] > 0.0, rnd
+        else:
+            assert churn[rnd] == 0.0, rnd
+    d = _run(data, exp, telemetry=TelemetryConfig())
+    assert np.isnan(np.asarray(d.telemetry["streams"]["density"])).all()
+    assert np.isnan(np.asarray(d.telemetry["streams"]["mask_churn"])).all()
+
+
+# ------------------------------------------------------- bench trend gate
+
+
+def test_compare_bench_harvests_nested_lanes():
+    """Satellite guard: lane_medians must read rows that exist ONLY inside
+    nested ``*_lanes`` payload lists (the sparse lanes' shape), so new
+    lanes cannot dodge the regression gate by skipping ``results``."""
+    path = (pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+            / "compare_bench.py")
+    spec = importlib.util.spec_from_file_location("compare_bench", path)
+    cb = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cb)
+
+    payload = {
+        "results": [{"lane": "a", "round_ms_median": 1.0}],
+        "sparse_lanes": [{"lane": "fedspd/sparse_d20",
+                          "round_ms_median": 2.0}],
+        "comm_lanes": [{"lane": "fedspd/comm_int8", "round_ms": 3.0}],
+    }
+    med = cb.lane_medians(payload)
+    assert med == {"a": 1.0, "fedspd/sparse_d20": 2.0,
+                   "fedspd/comm_int8": 3.0}
+    # a nested-only regression trips the gate
+    new = {"results": [{"lane": "a", "round_ms_median": 1.0}],
+           "sparse_lanes": [{"lane": "fedspd/sparse_d20",
+                             "round_ms_median": 4.0}]}
+    _, regressions = cb.compare(payload, new, threshold=0.25)
+    assert regressions == ["fedspd/sparse_d20"]

@@ -1,0 +1,100 @@
+"""Test-pyramid hygiene guards.
+
+Two meta-tests keep the fast lane honest:
+
+1. a source-level audit that every test touching ``subprocess`` (the
+   mesh/ppermute/CLI tests that fork fresh interpreters with forced host
+   device counts — the slowest things in the suite) carries
+   ``@pytest.mark.slow``, directly or via a module-level ``pytestmark``;
+2. an end-to-end collection check that ``-m "not slow"`` (the CI fast
+   lane's exact selector) deselects every slow-marked test — guarding
+   marker-registration typos and accidental ``slow``/``robustness``
+   mix-ups, which silently turn the fast lane into the full lane.
+"""
+import ast
+import pathlib
+
+import pytest
+
+TESTS_DIR = pathlib.Path(__file__).resolve().parent
+
+
+def _module_marked_slow(tree: ast.Module) -> bool:
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "pytestmark"
+            for t in node.targets
+        ):
+            if "slow" in ast.unparse(node.value):
+                return True
+    return False
+
+
+def _uses(node: ast.AST, names: set) -> bool:
+    return any(
+        isinstance(sub, ast.Name) and sub.id in names
+        or isinstance(sub, ast.Attribute) and sub.attr in names
+        for sub in ast.walk(node)
+    )
+
+
+def test_every_subprocess_test_is_slow_marked():
+    """Any test function that reaches ``subprocess`` — directly or through
+    a module helper wrapping it — must carry the slow mark (or live in a
+    module whose ``pytestmark`` is slow). Subprocess tests re-import jax
+    under a fresh interpreter: they are never fast-lane material."""
+    offenders = []
+    for path in sorted(TESTS_DIR.glob("test_*.py")):
+        src = path.read_text()
+        if "subprocess" not in src:
+            continue
+        tree = ast.parse(src)
+        if _module_marked_slow(tree):
+            continue
+        # names of module-level helpers whose bodies touch subprocess
+        helpers = {
+            node.name for node in tree.body
+            if isinstance(node, ast.FunctionDef)
+            and not node.name.startswith("test_")
+            and _uses(node, {"subprocess"})
+        }
+        reach = helpers | {"subprocess"}
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and node.name.startswith("test_")):
+                continue
+            if not _uses(node, reach):
+                continue
+            marked = any("slow" in ast.unparse(d)
+                         for d in node.decorator_list)
+            if not marked:
+                offenders.append(f"{path.name}::{node.name}")
+    assert not offenders, (
+        "subprocess-reaching tests missing @pytest.mark.slow: "
+        f"{offenders}"
+    )
+
+
+class _Collected:
+    def __init__(self):
+        self.items = None
+
+    def pytest_collection_finish(self, session):
+        self.items = list(session.items)
+
+
+def test_fast_lane_collects_no_slow_tests():
+    """Run the CI fast lane's exact collection (``-m "not slow"``)
+    in-process and assert (a) it is non-empty and (b) not one surviving
+    item carries the slow marker."""
+    col = _Collected()
+    rc = pytest.main(
+        ["--collect-only", "-q", "-m", "not slow",
+         "-p", "no:cacheprovider", str(TESTS_DIR)],
+        plugins=[col],
+    )
+    assert rc == 0, f"fast-lane collection failed with exit code {rc}"
+    assert col.items, "fast lane collected nothing"
+    leaked = [item.nodeid for item in col.items
+              if any(m.name == "slow" for m in item.iter_markers())]
+    assert not leaked, f"slow-marked tests leaked into the fast lane: {leaked}"
